@@ -1,0 +1,25 @@
+"""Benchmark timing utilities (CPU wall-clock, jitted, block_until_ready)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5, **kw):
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), out
+
+
+def mk(rng, shape, scale=1.0, dtype=jnp.float32):
+    return jnp.asarray(rng.standard_normal(shape) * scale, dtype)

@@ -1,0 +1,48 @@
+"""Paper §5.4 / Fig. 13: Hydro2D-style dimensionally-split pass.
+
+All seven kernels of the simplified Godunov sweep fuse into ONE loop
+nest with every intermediate contracted away (the paper fuses all nine
+of Hydro2D's kernels and reduces footprint O(31*Nj*Ni) -> O(4*Nj*Ni)+C;
+our sweep materializes zero intermediates — the unfused leg
+materializes seven)."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core import compile_program
+from repro.core.programs import hydro1d_program
+from repro.core.unfused import build_unfused
+
+from .common import mk, time_fn
+
+
+def run(sizes=((256, 512), (1024, 1024), (2048, 4096))):
+    prog = hydro1d_program()
+    gen = compile_program(prog)
+    unfused = build_unfused(prog, per_pass_jit=True).fn      # leg A: autovec
+    fusedvec_fn = jax.jit(lambda rho, mom: build_unfused(prog).fn(rho=rho, mom=mom)["rnew"])
+    rolling_fn = jax.jit(lambda rho, mom: gen.fn(rho=rho, mom=mom)["rnew"])
+    rng = np.random.default_rng(2)
+    rows = []
+    for (nj, ni) in sizes:
+        rho = mk(rng, (nj, ni)) ** 2 + 1.0
+        mom = mk(rng, (nj, ni))
+        t_a, a = time_fn(lambda r, m: unfused(rho=r, mom=m)["rnew"], rho, mom)
+        t_b, b = time_fn(fusedvec_fn, rho, mom)
+        t_c, c = time_fn(rolling_fn, rho, mom)
+        assert np.allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+        assert np.allclose(np.asarray(a), np.asarray(c), atol=1e-4)
+        cells = nj * ni
+        t_best = min(t_b, t_c)
+        rows.append({
+            "name": f"hydro_{nj}x{ni}",
+            "us_per_call": t_best * 1e6,
+            "derived": (
+                f"unfused_us={t_a*1e6:.0f};fusedvec_us={t_b*1e6:.0f};"
+                f"rolling_us={t_c*1e6:.0f};speedup={t_a/t_best:.2f}x;"
+                f"passes=7->1;intermediates=7->0;"
+                f"Mcells_s={cells/t_best/1e6:.0f}"
+            ),
+        })
+    return rows

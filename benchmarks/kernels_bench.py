@@ -1,0 +1,52 @@
+"""Transformer-kernel legs: contraction (chunked/flash) vs dense attention
+and chunked SSD vs naive recurrence — the HFAV storage-contraction story
+applied to the LM hot paths (DESIGN.md §5)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention.ops import chunked_attention
+from repro.kernels.flash_attention.ref import dense_attention
+from repro.kernels.ssd.ops import ssd_scan
+from repro.kernels.ssd.ref import naive_ssd
+
+from .common import mk, time_fn
+
+
+def run():
+    rng = np.random.default_rng(3)
+    rows = []
+    # attention: dense materializes (S,S); chunked contracts it
+    B, S, H, KVH, D = 1, 2048, 8, 4, 64
+    q, k, v = mk(rng, (B, S, H, D)), mk(rng, (B, S, KVH, D)), mk(rng, (B, S, KVH, D))
+    dense = jax.jit(lambda q, k, v: dense_attention(q, k, v, causal=True))
+    chunk = jax.jit(lambda q, k, v: chunked_attention(q, k, v, causal=True, chunk=256))
+    t_d, a = time_fn(dense, q, k, v)
+    t_c, b = time_fn(chunk, q, k, v)
+    assert np.allclose(np.asarray(a), np.asarray(b), atol=2e-3)
+    rows.append({
+        "name": f"attention_S{S}",
+        "us_per_call": t_c * 1e6,
+        "derived": f"dense_us={t_d*1e6:.0f};ratio={t_d/t_c:.2f}x;"
+                   f"score_bytes_saved={B*H*S*S*4/1e6:.0f}MB",
+    })
+    # SSD: chunked scan vs token recurrence
+    B, S, Hh, P, N = 1, 2048, 4, 64, 64
+    x = mk(rng, (B, S, Hh, P), 0.5)
+    dt = jnp.asarray(np.log1p(np.exp(rng.standard_normal((B, S, Hh)) - 1)), jnp.float32)
+    A = jnp.asarray(-np.exp(rng.standard_normal(Hh) * 0.3), jnp.float32)
+    Bm, Cm = mk(rng, (B, S, N), 0.5), mk(rng, (B, S, N), 0.5)
+    Dd = jnp.ones((Hh,), jnp.float32)
+    naive = jax.jit(naive_ssd)
+    chunked = jax.jit(lambda *a: ssd_scan(*a, chunk=128))
+    t_n, a = time_fn(naive, x, dt, A, Bm, Cm, Dd)
+    t_c, b = time_fn(chunked, x, dt, A, Bm, Cm, Dd)
+    assert np.allclose(np.asarray(a), np.asarray(b), atol=2e-3)
+    rows.append({
+        "name": f"ssd_S{S}",
+        "us_per_call": t_c * 1e6,
+        "derived": f"naive_us={t_n*1e6:.0f};speedup={t_n/t_c:.2f}x;chunk=128",
+    })
+    return rows

@@ -1,0 +1,36 @@
+"""HFAV quickstart: declare kernels -> infer dataflow -> fuse -> run.
+
+The 5-point Laplace stencil of the paper's Listing 1/Fig. 2, driven
+through the whole engine.  Run:
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import compile_program, explain
+from repro.core.programs import laplace5_program
+from repro.core.unfused import build_unfused
+
+
+def main():
+    prog = laplace5_program()
+
+    print("=== transformation report (paper's debugging output) ===")
+    print(explain(prog))
+
+    gen = compile_program(prog)
+    print("\n=== generated JAX source (the paper's emitted code) ===")
+    print(gen.source)
+
+    rng = np.random.default_rng(0)
+    cell = jnp.asarray(rng.standard_normal((64, 96)), jnp.float32)
+    fused = gen.fn(cell)["lap"]
+    ref = build_unfused(prog).fn(cell=cell)["lap"]
+    err = float(jnp.abs(fused - ref).max())
+    print(f"=== fused vs unfused max |err| = {err:.2e} ===")
+    assert err < 1e-5
+
+
+if __name__ == "__main__":
+    main()

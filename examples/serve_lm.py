@@ -1,0 +1,39 @@
+"""Batched serving demo: prefill + greedy decode with KV caches.
+
+Builds a small dense LM, serves a batch of prompts through the decode
+engine (vLLM-style semantics: per-sequence lengths, cache writes at
+lengths-1), and checks decode-vs-forward logit consistency — the
+serving-path correctness property.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, smoke
+from repro.models import forward, init_params
+from repro.serve.engine import greedy_decode
+
+
+def main():
+    cfg = smoke(ARCHS["qwen3-0.6b"])
+    params = init_params(jax.random.PRNGKey(7), cfg)
+    rng = np.random.default_rng(0)
+    B, S0, steps = 4, 12, 8
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab, (B, S0)), jnp.int32)
+
+    out = greedy_decode(params, cfg, prompts, steps=steps, max_seq=64)
+    print(f"served batch of {B}: prompts {prompts.shape} -> generated {out.shape}")
+    print(out)
+
+    # consistency: the first generated token must match teacher-forced argmax
+    logits = forward(params, {"tokens": prompts}, cfg)["logits"]
+    want = jnp.argmax(logits[:, -1], -1)
+    got = out[:, 0]
+    assert bool(jnp.all(want == got)), (want, got)
+    print("decode path matches teacher-forced forward ✓")
+
+
+if __name__ == "__main__":
+    main()

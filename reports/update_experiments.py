@@ -1,0 +1,25 @@
+"""Insert roofline tables + dry-run records into EXPERIMENTS.md."""
+import sys
+sys.path.insert(0, "src")
+from repro.roofline.report import load_records, roofline_table, dryrun_table
+
+recs = load_records("reports/dryrun")
+blob = (
+    "### Single-pod (16x16) roofline — all 40 cells\n\n"
+    + roofline_table(recs, "16x16")
+    + "\n\n### Multi-pod (2x16x16) roofline\n\n"
+    + roofline_table(recs, "2x16x16")
+    + "\n\n### Dry-run memory/cost records (per device)\n\n"
+    + dryrun_table(recs)
+)
+s = open("EXPERIMENTS.md").read()
+marker = "<!-- ROOFLINE_TABLES -->"
+assert marker in s
+pre = s.split(marker)[0]
+post = s.split(marker)[1]
+# drop any previously inserted tables between the markers
+if "<!-- /ROOFLINE_TABLES -->" in post:
+    post = post.split("<!-- /ROOFLINE_TABLES -->", 1)[1]
+s = pre + marker + "\n\n" + blob + "\n\n<!-- /ROOFLINE_TABLES -->" + post
+open("EXPERIMENTS.md", "w").write(s)
+print("tables inserted:", len(recs), "records")

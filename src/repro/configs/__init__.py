@@ -1,0 +1,2 @@
+from .base import ArchConfig, MoECfg, SSMCfg, HybridCfg, EncDecCfg, ShapeCfg, SHAPES
+from .registry import ARCHS, get_arch, smoke

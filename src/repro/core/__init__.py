@@ -1,0 +1,15 @@
+"""HFAV core: the paper's fusion/vectorization engine as a JAX module."""
+from .engine import compile_program, explain
+from .fusion import FusedSchedule, Unfusable, fuse_inest_dag
+from .infer import IDAG, InferenceError, infer
+from .dataflow import build_dataflow
+from .reuse import analyze_storage, reuse_graph, reuse_order
+from .rules import Extent, KernelRule, Program, axiom, goal, kernel
+from .terms import Term, parse_term, unify_term
+
+__all__ = [
+    "compile_program", "explain", "FusedSchedule", "Unfusable",
+    "fuse_inest_dag", "IDAG", "InferenceError", "infer", "build_dataflow",
+    "analyze_storage", "reuse_graph", "reuse_order", "Extent", "KernelRule",
+    "Program", "axiom", "goal", "kernel", "Term", "parse_term", "unify_term",
+]

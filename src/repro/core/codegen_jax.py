@@ -1,0 +1,516 @@
+"""JAX backend: emit fused, vectorized source from a storage plan
+(Section 3.6).
+
+The emitted program is a *source string* (faithful to HFAV's
+source-to-source design; inspectable via ``Generated.source``) that is
+``exec``'d against :data:`repro.core.runtime.NAMESPACE` into a jit-able
+function.  Shape of the emitted code:
+
+* one top-level region per fused iteration nest, in topological order;
+* loops are ``lax.fori_loop`` over *extended* ranges — each grouped
+  callsite runs at its own software-pipeline ``lead`` and is predicated by
+  an extent mask.  This folds prologue/epilogue iterations into a masked
+  steady state (the paper's hand-tuned 'HFAV + Tuning' variant, which is
+  the idiomatic predicated form for TPU/XLA);
+* the innermost dimension is fully vectorized: kernels consume/produce
+  whole rows, with static halo slices implementing i-offsets;
+* contracted intermediates live in ``(stages, width)`` rolling buffers
+  rotated by index arithmetic; reductions use vector partial accumulators
+  with an associative lane-reduction epilogue (Fig. 9 family);
+* phase structure (reduction init → prologue, combine → steady,
+  finalize → epilogue) is emitted around the loops per the fused nest.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+from .dataflow import DataflowDAG, Group
+from .fusion import FusedSchedule
+from .inest import Body, INest, Node
+from .infer import IDAG, LOAD, STORE
+from .reuse import NestPlan, StoragePlan, VarPlan
+from .runtime import NAMESPACE
+from .terms import Term
+
+
+class CodegenError(Exception):
+    pass
+
+
+class Writer:
+    def __init__(self) -> None:
+        self.lines: list[str] = []
+        self.depth = 0
+
+    def w(self, text: str = "") -> None:
+        self.lines.append("    " * self.depth + text if text else "")
+
+    def source(self) -> str:
+        return "\n".join(self.lines) + "\n"
+
+
+@dataclass
+class Generated:
+    """The paper's end product: generated source + a callable."""
+
+    source: str
+    fn: Callable
+    plan: StoragePlan
+    schedule: FusedSchedule
+    idag: IDAG
+
+
+def _st(prefix: str, name: str) -> str:
+    return f"st['{prefix}_{name}']"
+
+
+class Emitter:
+    def __init__(self, plan: StoragePlan, idag: IDAG):
+        self.plan = plan
+        self.idag = idag
+        self.schedule = plan.schedule
+        self.dag: DataflowDAG = plan.schedule.dag
+        self.program = plan.schedule.program
+        self.inner = self.program.loop_order[-1]
+        self.by_id: dict[int, Group] = {g.gid: g for g in self.dag.groups}
+        self.w = Writer()
+        self.fns: dict[str, Callable] = {}
+        self._uid = 0
+        # axiom array info: var key -> (array name, extents)
+        self.axioms: dict[Term, tuple[str, dict]] = {}
+        for t, ax in idag.axiom_of.items():
+            self.axioms[t.base()] = (t.base().ref.name, ax.extents)
+        self.input_names = sorted({n for n, _ in self.axioms.values()})
+        # nest plan per gid
+        self.nest_of_gid: dict[int, NestPlan] = {}
+        for np_ in plan.nests:
+            for gid in np_.gids:
+                self.nest_of_gid[gid] = np_
+
+    # ---- small helpers ----------------------------------------------------
+
+    def uid(self) -> int:
+        self._uid += 1
+        return self._uid
+
+    def vplan(self, key: Term) -> VarPlan:
+        return self.plan.vars[key]
+
+    def size_sym(self, g: Group, d: str) -> str:
+        ext = g.extent.get(d)
+        return ext.size if ext is not None else f"N{d}"
+
+    def lead(self, gid: int, d: str) -> int:
+        np_ = self.nest_of_gid.get(gid)
+        return np_.lead(gid, d) if np_ else 0
+
+    def group_ext(self, g: Group, d: str):
+        from .rules import Extent
+
+        return g.extent.get(d, Extent(f"N{d}"))
+
+    def g_ilo(self, g: Group) -> int:
+        if self.inner not in g.dims:
+            return 0
+        return self.group_ext(g, self.inner).lo
+
+    def g_width(self, g: Group) -> str:
+        ext = self.group_ext(g, self.inner)
+        return f"W{g.gid}"
+
+    def var_origin(self, vp: VarPlan, d: str) -> int:
+        v = vp.var
+        if vp.kind == "external_in":
+            _, exts = self.axioms[v.key]
+            return exts.get(d).lo if d in exts else 0
+        if vp.kind == "external_out":
+            return 0
+        if d in v.extent:
+            return v.extent[d].lo
+        return 0
+
+    # ---- preamble ----------------------------------------------------------
+
+    def emit_preamble(self) -> None:
+        w = self.w
+        w.w(f"def hfav_{self.program.name}({', '.join(self.input_names)}):")
+        w.depth += 1
+        w.w(f"_dt = {self.input_names[0]}.dtype")
+        # sizes from input shapes
+        seen: set[str] = set()
+        for key, (arr, exts) in sorted(self.axioms.items(), key=lambda kv: str(kv[0])):
+            v = self.dag.variables.get(key)
+            dims = v.dims if v is not None else key.dims
+            # axis order follows the term's index order
+            for axis, d in enumerate(key.dims):
+                ext = exts.get(d)
+                if ext is None or ext.size in seen:
+                    continue
+                seen.add(ext.size)
+                corr = ext.hi - ext.lo
+                suffix = f" - {corr}" if corr else ""
+                w.w(f"{ext.size} = {arr}.shape[{axis}]{suffix}")
+        # per-group row widths (kernel groups only: loads are read in place,
+        # stores are subsumed by the producers' masked writes)
+        for g in self.dag.groups:
+            if g.kind == "kernel" and self.inner in g.dims:
+                ext = self.group_ext(g, self.inner)
+                w.w(f"W{g.gid} = {ext.size} + {ext.hi - ext.lo}")
+        w.w("st = {}")
+        # storage allocation
+        for key, vp in sorted(self.plan.vars.items(), key=lambda kv: str(kv[0])):
+            v = vp.var
+            if vp.kind == "external_out":
+                shape = ", ".join(
+                    (v.extent[d].size if d in v.extent else f"N{d}") for d in v.dims
+                )
+                shape = f"({shape},)" if len(v.dims) == 1 else f"({shape})"
+                alias = self._alias_input(v)
+                if alias:
+                    w.w(f"{_st('o', self._out_name(v))} = jnp.asarray({alias})")
+                elif v.dims:
+                    w.w(f"{_st('o', self._out_name(v))} = jnp.zeros({shape}, _dt)")
+                else:
+                    w.w(f"{_st('o', self._out_name(v))} = jnp.zeros((), _dt)")
+            elif vp.kind == "full":
+                dims = v.dims
+                parts = []
+                for d in dims:
+                    ext = v.extent.get(d)
+                    if ext is None:
+                        parts.append(f"N{d}")
+                    else:
+                        parts.append(f"{ext.size} + {ext.hi - ext.lo}")
+                shape = f"({', '.join(parts)},)" if parts else "()"
+                w.w(f"{_st('f', v.name)} = jnp.zeros({shape}, _dt)")
+            elif vp.kind == "rolling":
+                width = self._var_width_expr(vp)
+                w.w(f"{_st('b', v.name)} = jnp.zeros(({vp.stages}, {width}), _dt)")
+            elif vp.kind == "acc":
+                self._emit_acc_init(vp)
+            elif vp.kind == "scalar":
+                w.w(f"{_st('s', v.name)} = jnp.zeros((), _dt)")
+
+    def _var_width_expr(self, vp: VarPlan) -> str:
+        v = vp.var
+        if self.inner not in v.dims:
+            return "1"
+        ext = v.extent.get(self.inner)
+        if ext is None:
+            return f"N{self.inner}"
+        return f"{ext.size} + {ext.hi - ext.lo}"
+
+    def _alias_input(self, v) -> str | None:
+        out_name = self._out_name(v)
+        for in_name, o_name in self.program.aliases:
+            if o_name == out_name:
+                return in_name
+        return None
+
+    def _out_name(self, v) -> str:
+        for t, goal in self.idag.goal_of.items():
+            if t.base() == v.key:
+                return goal.store_as or v.name
+        return v.name
+
+    def _emit_acc_init(self, vp: VarPlan) -> None:
+        v = vp.var
+        g = v.producer
+        assert g is not None and g.rule is not None
+        ident = g.rule.init
+        out_dims = set(v.dims)
+        bad = out_dims - {self.inner}
+        if bad:
+            raise CodegenError(
+                f"reduction output {v.name} keeps outer dims {bad}: unsupported"
+            )
+        if self.inner in g.dims:  # vector partial accumulator
+            self.w.w(f"{_st('a', v.name)} = jnp.full((W{g.gid},), {ident!r}, _dt)")
+        else:
+            self.w.w(f"{_st('a', v.name)} = jnp.full((), {ident!r}, _dt)")
+
+    # ---- expressions --------------------------------------------------------
+
+    def read_expr(self, c: Group, key: Term, offs: dict[str, int],
+                  bound: dict[str, str]) -> str:
+        vp = self.vplan(key)
+        v = vp.var
+        c_ilo = self.g_ilo(c)
+        oi = offs.get(self.inner, 0)
+        wexpr = self.g_width(c) if self.inner in c.dims else None
+
+        def outer_pos(d: str, origin: int) -> str:
+            o = offs.get(d, 0)
+            base = bound.get(d)
+            if base is None:
+                raise CodegenError(
+                    f"group {c} reads {v.name} over unbound dim {d}"
+                )
+            lead = self.lead(c.gid, d)
+            adj = lead + o - origin
+            return f"{base} + {adj}" if adj else base
+
+        if vp.kind in ("external_in", "full", "external_out"):
+            if vp.kind == "external_in":
+                arr = self.axioms[v.key][0]
+            elif vp.kind == "full":
+                arr = _st("f", v.name)
+            else:
+                arr = _st("o", self._out_name(v))
+            odims = [d for d in v.dims if d != self.inner]
+            if self.inner in v.dims:
+                col0 = (c_ilo + oi) - self.var_origin(vp, self.inner)
+                if not odims:
+                    return f"{arr}[{col0}:{col0} + {wexpr}]"
+                pos = [outer_pos(d, self.var_origin(vp, d)) for d in odims]
+                fn = "_row2" if len(odims) == 1 else "_row3"
+                return f"{fn}({arr}, {', '.join(pos)}, {col0}, {wexpr})"
+            if not odims:
+                return arr  # 0-dim external
+            pos = [outer_pos(d, self.var_origin(vp, d)) for d in odims]
+            if len(pos) == 1:
+                return f"{arr}[{pos[0]}]"
+            raise CodegenError(f"unsupported read of {v.name}")
+        if vp.kind == "rolling":
+            d0 = vp.contraction_dim
+            assert d0 is not None
+            stage_pos = outer_pos(d0, 0)
+            col0 = (c_ilo + oi) - vp.i_lo
+            return (
+                f"_brow({_st('b', v.name)}, jnp.mod({stage_pos}, {vp.stages}),"
+                f" {col0}, {wexpr})"
+            )
+        if vp.kind == "row":
+            prod_ilo = self.g_ilo(v.producer) if v.producer else 0
+            col0 = (c_ilo + oi) - prod_ilo
+            name = f"r_{v.name}"
+            if self.inner in v.dims:
+                if col0 == 0 and v.producer is not None and self.g_width(v.producer) == wexpr:
+                    return name
+                return f"{name}[{col0}:{col0} + {wexpr}]"
+            return name
+        if vp.kind == "scalar":
+            return _st("s", v.name)
+        if vp.kind == "acc":
+            g = v.producer
+            assert g is not None and g.rule is not None
+            if self.inner in g.reduced_dims:
+                return (
+                    f"_lane_reduce(_fns['{g.rule.name}'], {_st('a', v.name)},"
+                    f" {g.rule.init!r})"
+                )
+            return _st("a", v.name)
+        raise CodegenError(f"cannot read variable {v.name} of kind {vp.kind}")
+
+    def valid_expr(self, g: Group, bound: dict[str, str]) -> str:
+        terms = []
+        for d in g.dims:
+            if d == self.inner or d not in bound:
+                continue
+            ext = self.group_ext(g, d)
+            lead = self.lead(g.gid, d)
+            p = f"({bound[d]} + {lead})" if lead else bound[d]
+            terms.append(f"({p} >= {ext.lo}) & ({p} < {ext.size} + {ext.hi})")
+        return " & ".join(terms) if terms else "True"
+
+    # ---- group emission ------------------------------------------------------
+
+    def emit_group(self, g: Group, bound: dict[str, str]) -> None:
+        if g.kind == LOAD:
+            return  # consumers read external arrays directly
+        if g.kind == STORE:
+            # The producing kernel's masked write already materializes the
+            # terminal output (its variable has kind 'external_out').
+            return
+        assert g.rule is not None
+        if g.rule.fn is None:
+            raise CodegenError(f"kernel {g.rule.name} has no fn")
+        self.fns[g.rule.name] = g.rule.fn
+        if g.is_reduction:
+            self._emit_reduce(g, bound)
+        else:
+            self._emit_map(g, bound)
+
+    def _in_exprs(self, g: Group, bound: dict[str, str]) -> list[str]:
+        exprs = []
+        for pname, key, offs in g.reads:
+            exprs.append(self.read_expr(g, key, offs, bound))
+        return exprs
+
+    def _emit_map(self, g: Group, bound: dict[str, str]) -> None:
+        w = self.w
+        ins = self._in_exprs(g, bound)
+        outs = [f"t{g.gid}_{k}" for k in range(len(g.writes))]
+        w.w(f"{', '.join(outs)} = _fns['{g.rule.name}']({', '.join(ins)})")
+        for (pname, key), tmp in zip(g.writes, outs):
+            self._emit_write(g, key, tmp, bound)
+
+    def _emit_reduce(self, g: Group, bound: dict[str, str]) -> None:
+        w = self.w
+        ins = self._in_exprs(g, bound)
+        (_, key), = g.writes
+        acc = _st("a", self.vplan(key).var.name)
+        valid = self.valid_expr(g, bound)
+        combined = f"_fns['{g.rule.name}']({acc}, {', '.join(ins)})"
+        if valid == "True":
+            w.w(f"{acc} = {combined}")
+        else:
+            w.w(f"{acc} = jnp.where({valid}, {combined}, {acc})")
+
+    def _emit_write(self, g: Group, key: Term, tmp: str, bound: dict[str, str]) -> None:
+        w = self.w
+        vp = self.vplan(key)
+        v = vp.var
+        if vp.kind == "rolling":
+            d0 = vp.contraction_dim
+            lead = self.lead(g.gid, d0)
+            p = f"({bound[d0]} + {lead})" if lead else bound[d0]
+            # producer row must be aligned to the buffer origin
+            if self.g_ilo(g) != vp.i_lo:
+                raise CodegenError(f"producer/buffer row misalignment for {v.name}")
+            w.w(
+                f"{_st('b', v.name)} = _bset({_st('b', v.name)},"
+                f" jnp.mod({p}, {vp.stages}), {tmp})"
+            )
+        elif vp.kind == "row":
+            w.w(f"r_{v.name} = {tmp}")
+        elif vp.kind == "scalar":
+            w.w(f"{_st('s', v.name)} = {tmp}")
+        elif vp.kind in ("full", "external_out"):
+            arr = _st("f", v.name) if vp.kind == "full" else _st("o", self._out_name(v))
+            odims = [d for d in v.dims if d != self.inner]
+            valid = self.valid_expr(g, bound)
+            if self.inner in v.dims:
+                col0 = self.g_ilo(g) - self.var_origin(vp, self.inner)
+                if not odims:
+                    w.w(f"{arr} = {arr}.at[{col0}:{col0} + {self.g_width(g)}].set({tmp})")
+                else:
+                    pos = []
+                    for d in odims:
+                        lead = self.lead(g.gid, d)
+                        adj = lead - self.var_origin(vp, d)
+                        base = bound[d]
+                        pos.append(f"{base} + {adj}" if adj else base)
+                    fn = "_setrow2" if len(odims) == 1 else "_setrow3"
+                    w.w(f"{arr} = {fn}({arr}, {', '.join(pos)}, {col0}, {tmp}, {valid})")
+            elif not odims:
+                w.w(f"{arr} = {tmp}")
+            else:
+                raise CodegenError(f"unsupported write of {v.name}")
+        else:
+            raise CodegenError(f"cannot write {v.name} of kind {vp.kind}")
+
+    def _emit_store(self, g: Group, bound: dict[str, str]) -> None:
+        # store pseudo-kernel: copy its (single) input into the external out.
+        (pname, key, offs), = g.reads
+        expr = self.read_expr(g, key, offs, bound)
+        vp = self.vplan(key)
+        v = vp.var
+        out = _st("o", self._out_name(v))
+        odims = [d for d in v.dims if d != self.inner]
+        if not v.dims:
+            self.w.w(f"{out} = {expr}")
+            return
+        valid = self.valid_expr(g, bound)
+        if self.inner in v.dims and not odims:
+            ext = self.group_ext(g, self.inner)
+            col0 = ext.lo
+            self.w.w(f"{out} = {out}.at[{col0}:{col0} + {self.g_width(g)}].set({expr})")
+            return
+        col0 = self.g_ilo(g)
+        pos = []
+        for d in odims:
+            lead = self.lead(g.gid, d)
+            pos.append(f"{bound[d]} + {lead}" if lead else bound[d])
+        fn = "_setrow2" if len(odims) == 1 else "_setrow3"
+        self.w.w(f"{out} = {fn}({out}, {', '.join(pos)}, {col0}, {expr}, {valid})")
+
+    # ---- nests ---------------------------------------------------------------
+
+    def _loop_bounds(self, nest: INest) -> tuple[str, str]:
+        d = nest.ident
+        los, his = [], []
+        size = None
+        for gid in nest.phase_groups("steady"):
+            g = self.by_id[gid]
+            if d not in g.dims or g.kind != "kernel":
+                continue  # loads/stores emit no code and set no bounds
+            ext = self.group_ext(g, d)
+            lead = self.lead(gid, d)
+            los.append(ext.lo - lead)
+            his.append(ext.hi - lead)
+            size = ext.size
+        if size is None:
+            size = nest.extent.size
+            los, his = [nest.extent.lo], [nest.extent.hi]
+        lo = min(los)
+        hi = max(his)
+        return str(lo), f"{size} + {hi}" if hi else str(size)
+
+    def emit_node(self, node: Node, bound: dict[str, str]) -> None:
+        w = self.w
+        if isinstance(node, Body):
+            for gid in node.gids:
+                self.emit_group(self.by_id[gid], bound)
+            return
+        # acc resets: a reduction's identity initialization belongs to the
+        # prologue of its outermost reduced loop (the paper's triple).
+        for key, vp in self.plan.vars.items():
+            if vp.kind != "acc":
+                continue
+            g = vp.var.producer
+            if g is None or g.gid not in node.groups():
+                continue
+            red = list(g.reduced_dims)
+            outermost = red[0] if red else None
+            if outermost == node.ident:
+                self._emit_acc_init(vp)
+        if node.ident == self.inner:
+            # The innermost dimension is vectorized: kernels consume whole
+            # rows, so its phases emit inline with no loop.
+            for phase in (node.prologue, node.steady, node.epilogue):
+                for child in phase:
+                    self.emit_node(child, bound)
+            return
+        for child in node.prologue:
+            self.emit_node(child, bound)
+        lo, hi = self._loop_bounds(node)
+        uid = self.uid()
+        x = f"x_{node.ident}{uid}"
+        w.w(f"def _body{uid}({x}, st):")
+        w.depth += 1
+        inner_bound = dict(bound)
+        inner_bound[node.ident] = x
+        for child in node.steady:
+            self.emit_node(child, inner_bound)
+        w.w("return st")
+        w.depth -= 1
+        w.w(f"st = lax.fori_loop({lo}, {hi}, _body{uid}, st)")
+        for child in node.epilogue:
+            self.emit_node(child, bound)
+
+    # ---- driver ----------------------------------------------------------------
+
+    def emit(self) -> str:
+        self.emit_preamble()
+        for node in self.schedule.nests:
+            self.emit_node(node, {})
+        outs = []
+        for t, goal in self.idag.goal_of.items():
+            v = self.dag.variables[t.base()]
+            name = goal.store_as or v.name
+            outs.append(f"'{name}': {_st('o', name)}")
+        self.w.w(f"return {{{', '.join(sorted(set(outs)))}}}")
+        self.w.depth -= 1
+        return self.w.source()
+
+
+def generate(plan: StoragePlan, idag: IDAG) -> Generated:
+    em = Emitter(plan, idag)
+    source = em.emit()
+    ns = dict(NAMESPACE)
+    ns["_fns"] = em.fns
+    exec(compile(source, f"<hfav:{plan.schedule.program.name}>", "exec"), ns)
+    fn = ns[f"hfav_{plan.schedule.program.name}"]
+    return Generated(source, fn, plan, plan.schedule, idag)

@@ -1,0 +1,210 @@
+"""Pallas backend: map an HFAV storage plan onto the TPU stencil executor.
+
+Applicability (checked by :func:`extract_stencil_spec`; the pure-JAX
+backend covers everything else):
+
+* the whole program fused into a single top-level iteration nest;
+* loop order (j, i) or (k, j, i) with stencil offsets only in the two
+  innermost dimensions (k must be dependency-free, as in COSMO);
+* no reductions and a single terminal output.
+
+These are precisely the conditions of the paper's COSMO and Hydro2D
+studies; the normalization example (reduction -> split) stays on the JAX
+backend.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax.numpy as jnp
+
+from ..kernels.stencil2d.kernel import BufSpec, ReadSpec, StencilSpec, StepSpec, build_call
+from .dataflow import build_dataflow
+from .fusion import fuse_inest_dag
+from .infer import IDAG, infer
+from .inest import walk_bodies
+from .reuse import StoragePlan, analyze_storage
+from .rules import Program
+
+
+class PallasUnsupported(Exception):
+    pass
+
+
+def extract_stencil_spec(plan: StoragePlan, idag: IDAG) -> StencilSpec:
+    schedule = plan.schedule
+    program = schedule.program
+    dag = schedule.dag
+    if len(schedule.nests) != 1:
+        raise PallasUnsupported("program does not fuse to a single nest")
+    if len(program.loop_order) not in (2, 3):
+        raise PallasUnsupported("loop order must be (j,i) or (k,j,i)")
+    inner = program.loop_order[-1]
+    jdim = program.loop_order[-2]
+    outer = program.loop_order[:-2]
+    np_ = plan.nests[0]
+    by_id = {g.gid: g for g in dag.groups}
+
+    ordered = []
+    for body in walk_bodies(schedule.nests[0]):
+        ordered.extend(body.gids)
+
+    goals = list(idag.goal_of.values())
+    if len(goals) != 1:
+        raise PallasUnsupported("exactly one terminal output supported")
+
+    in_bufs: list[BufSpec] = []
+    in_leads: list[int] = []
+    inputs: list[str] = []
+    bufs: list[BufSpec] = []
+    steps: list[StepSpec] = []
+    out_lead = 0
+    x_los: list[int] = []
+    x_his: list[int] = []
+
+    def check_offsets(v, offs_by_dim):
+        for d, o in offs_by_dim.items():
+            if d not in (inner, jdim) and o != 0:
+                raise PallasUnsupported(f"offset in outer dim {d} on {v}")
+
+    # input windows: stage count from load leads vs consumer positions
+    for key, vp in plan.vars.items():
+        v = vp.var
+        if vp.kind != "external_in":
+            continue
+        load = v.producer
+        assert load is not None
+        lead_l = np_.lead(load.gid, jdim) if jdim in v.dims else 0
+        oldest = lead_l
+        ji = v.dims.index(jdim) if jdim in v.dims else None
+        for use in v.consumers:
+            c_lead = np_.lead(use.group.gid, jdim)
+            for offs in use.offsets:
+                o = offs[ji] if ji is not None else 0
+                oldest = min(oldest, c_lead + o)
+        stages = max(1, lead_l - oldest + 1)
+        name = v.key.ref.name
+        inputs.append(name)
+        in_bufs.append(BufSpec(f"in_{name}", stages, 0, 0))
+        in_leads.append(lead_l)
+        ext = v.extent.get(jdim)
+        if ext is not None:
+            x_los.append(ext.lo - lead_l)
+            x_his.append(ext.hi - lead_l)
+
+    for key, vp in plan.vars.items():
+        if vp.kind == "rolling":
+            if vp.contraction_dim != jdim:
+                raise PallasUnsupported(f"contraction over {vp.contraction_dim}")
+            bufs.append(BufSpec(f"b_{vp.name}", vp.stages, vp.i_lo, vp.i_hi))
+        elif vp.kind in ("acc", "scalar"):
+            raise PallasUnsupported("reductions not supported on Pallas backend")
+        elif vp.kind == "full":
+            raise PallasUnsupported(f"split variable {vp.name}")
+
+    for gid in ordered:
+        g = by_id[gid]
+        if g.kind != "kernel":
+            continue
+        assert g.rule is not None and g.rule.fn is not None
+        lead = np_.lead(gid, jdim)
+        ext_j = g.extent.get(jdim)
+        if ext_j is not None:
+            x_los.append(ext_j.lo - lead)
+            x_his.append(ext_j.hi - lead)
+        c_ilo = g.extent[inner].lo if inner in g.extent else 0
+        c_w = (g.extent[inner].hi - g.extent[inner].lo) if inner in g.extent else 0
+        reads = []
+        for pname, key, offs in g.reads:
+            vp = plan.vars[key]
+            check_offsets(vp.name, offs)
+            oj = offs.get(jdim, 0)
+            oi = offs.get(inner, 0)
+            if vp.kind == "external_in":
+                src = f"in_{vp.var.key.ref.name}"
+                col0 = c_ilo + oi
+            elif vp.kind == "rolling":
+                src = f"b_{vp.name}"
+                col0 = c_ilo + oi
+            elif vp.kind == "row":
+                src = f"local:{vp.name}"
+                p_ilo = vp.var.producer.extent[inner].lo if inner in vp.var.producer.extent else 0
+                col0 = (c_ilo + oi) - p_ilo
+            else:
+                raise PallasUnsupported(f"read of {vp.name} kind {vp.kind}")
+            reads.append(ReadSpec(src, lead + oj, col0, c_w))
+        writes = []
+        for pname, key in g.writes:
+            vp = plan.vars[key]
+            if vp.kind == "rolling":
+                writes.append(("buf", f"b_{vp.name}"))
+            elif vp.kind == "row":
+                writes.append(("local", vp.name))
+            elif vp.kind == "external_out":
+                writes.append(("out", 0))
+                out_lead = lead
+            else:
+                raise PallasUnsupported(f"write of {vp.name} kind {vp.kind}")
+        steps.append(StepSpec(g.rule.fn, tuple(reads), tuple(writes), lead, c_ilo))
+
+    n_outer = len(outer)
+    return StencilSpec(
+        name=program.name,
+        n_outer=n_outer,
+        inputs=tuple(inputs),
+        in_bufs=tuple(in_bufs),
+        in_leads=tuple(in_leads),
+        bufs=tuple(bufs),
+        steps=tuple(steps),
+        x_lo=min(x_los),
+        x_hi_off=max(x_his),
+        out_lead=out_lead,
+    )
+
+
+@dataclass
+class PallasGenerated:
+    spec: StencilSpec
+    fn: Callable
+    plan: StoragePlan
+
+
+def compile_program_pallas(
+    program: Program, *, dtype=jnp.float32, interpret: bool = True
+) -> PallasGenerated:
+    """Engine pipeline + Pallas emission.  ``interpret=True`` runs the
+    kernel body on CPU for validation; on a TPU runtime pass False."""
+    idag = infer(program)
+    dag = build_dataflow(idag)
+    schedule = fuse_inest_dag(dag)
+    plan = analyze_storage(schedule)
+    spec = extract_stencil_spec(plan, idag)
+    goal = list(idag.goal_of.values())[0]
+    gterm = list(idag.goal_of.keys())[0]
+    gvar = dag.variables[gterm.base()]
+    inner = program.loop_order[-1]
+    jdim = program.loop_order[-2]
+
+    def fn(**arrays):
+        args = [arrays[n] for n in spec.inputs]
+        shape = args[0].shape
+        call, steps_j = build_call(spec, shape, dtype, interpret=interpret)
+        padded = call(*args)
+        # assemble: padded row t holds position t + x_lo + out_lead
+        ej = goal.extents.get(jdim)
+        nj = shape[-2]
+        ni = shape[-1]
+        jlo = ej.lo if ej is not None else 0
+        jhi = nj + (ej.hi if ej is not None else 0)
+        t0 = jlo - (spec.x_lo + spec.out_lead)
+        out = jnp.zeros(shape, dtype)
+        rows = jnp.arange(jlo, jhi)
+        if spec.n_outer == 0:
+            out = out.at[jlo:jhi, :].set(padded[t0:t0 + (jhi - jlo), :])
+        else:
+            out = out.at[:, jlo:jhi, :].set(padded[:, t0:t0 + (jhi - jlo), :])
+        name = goal.store_as or gvar.name
+        return {name: out}
+
+    return PallasGenerated(spec, fn, plan)

@@ -1,0 +1,37 @@
+"""HFAV engine driver: program -> inference -> dataflow -> fusion ->
+storage analysis -> generated JAX code.  The public entry point of the
+paper's contribution."""
+from __future__ import annotations
+
+from .codegen_jax import Generated, generate
+from .dataflow import build_dataflow
+from .fusion import fuse_inest_dag
+from .infer import infer
+from .reuse import analyze_storage
+from .rules import Program
+
+
+def compile_program(program: Program) -> Generated:
+    idag = infer(program)
+    dag = build_dataflow(idag)
+    schedule = fuse_inest_dag(dag)
+    plan = analyze_storage(schedule)
+    return generate(plan, idag)
+
+
+def explain(program: Program) -> str:
+    """Human-readable transformation report (the paper's debugging output)."""
+    idag = infer(program)
+    dag = build_dataflow(idag)
+    schedule = fuse_inest_dag(dag)
+    plan = analyze_storage(schedule)
+    lines = [
+        f"program: {program.name}",
+        f"raps: {len(idag.raps)}  groups: {len(dag.groups)}  "
+        f"fused nests: {schedule.n_toplevel()}",
+        "--- fused schedule ---",
+        schedule.pretty(),
+        "--- storage plan ---",
+        plan.summary(),
+    ]
+    return "\n".join(lines)

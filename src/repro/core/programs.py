@@ -1,0 +1,319 @@
+"""The paper's worked examples as HFAV programs.
+
+* :func:`laplace5_program` — the 5-point Laplace stencil of Listing 1 /
+  Fig. 2 (interior update over an N x N grid).
+* :func:`normalization_program` — the flux-normalization example of
+  Fig. 3/4/6 and Section 5.2: per-cell flux, global L2 norm (a reduction),
+  then per-cell normalization (a broadcast of the norm).  Fuses to exactly
+  TWO loop nests (the reduction->broadcast concave-dataflow split).
+* :func:`cosmo_program` — the COSMO fourth-order diffusion micro-kernels of
+  Section 5.3: ulapstage -> flux_x / flux_y -> ustage over (k, j, i) with
+  no k dependencies.  HFAV contracts the Laplacian to a 3-row and the
+  fluxes to 2-row rolling buffers.
+* :func:`hydro1d_program` — a dimensionally-split Godunov-style pass in the
+  spirit of Hydro2D's nine kernels (Section 5.4), simplified to a single
+  conserved system sweep: primitive conversion, EOS, slope limiting, trace,
+  Riemann solve at interfaces, flux, conservative update.
+
+Every kernel body is a pure elementwise jnp function over rows — the
+engine's unfused references (used by tests/benchmarks) call the same
+bodies, so fused-vs-unfused comparisons share arithmetic exactly.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .rules import Program, axiom, goal, kernel
+
+
+# ---------------------------------------------------------------------------
+# 5-point Laplace (SOR-style weighted update)
+# ---------------------------------------------------------------------------
+
+def _laplace5(n, e, s, w_, c):
+    return 0.25 * (n + e + s + w_) - c
+
+
+def laplace5_program(name: str = "laplace5") -> Program:
+    k_lap = kernel(
+        "laplace5",
+        inputs=[
+            ("n", "q?[j?-1][i?]"),
+            ("e", "q?[j?][i?+1]"),
+            ("s", "q?[j?+1][i?]"),
+            ("w", "q?[j?][i?-1]"),
+            ("c", "q?[j?][i?]"),
+        ],
+        outputs=[("o", "laplace(q?[j?][i?])")],
+        fn=_laplace5,
+    )
+    return Program(
+        rules=[k_lap],
+        axioms=[axiom("cell[j?][i?]", j="Nj", i="Ni")],
+        goals=[goal("laplace(cell[j][i])", store_as="lap",
+                    j=("Nj", 1, -1), i=("Ni", 1, -1))],
+        loop_order=("j", "i"),
+        name=name,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Normalization example (Figs. 3/4/6, Section 5.2)
+# ---------------------------------------------------------------------------
+
+def _flux(a, b):
+    return b - a
+
+
+def _square(f):
+    return f * f
+
+
+def _accum(acc, x):
+    return acc + x
+
+
+def _rsqrt_n(nrm2):
+    return 1.0 / jnp.sqrt(nrm2 + 1e-30)
+
+
+def _scale(f, inv):
+    return f * inv
+
+
+def normalization_program(name: str = "normalization") -> Program:
+    rules = [
+        kernel(
+            "flux",
+            inputs=[("a", "u?[j?][i?]"), ("b", "u?[j?][i?+1]")],
+            outputs=[("f", "flux(u?[j?][i?])")],
+            fn=_flux,
+        ),
+        kernel(
+            "fluxsq",
+            inputs=[("f", "flux(u?[j?][i?])")],
+            outputs=[("s", "fluxsq(u?[j?][i?])")],
+            fn=_square,
+        ),
+        kernel(
+            "norm_accum",
+            inputs=[("x", "fluxsq(u[j][i])")],
+            outputs=[("acc", "nrm2(u)")],
+            fn=_accum,
+            kind="reduce",
+            init=0.0,
+        ),
+        kernel(
+            "norm_root",
+            inputs=[("n2", "nrm2(u?)")],
+            outputs=[("r", "invnorm(u?)")],
+            fn=_rsqrt_n,
+        ),
+        kernel(
+            "normalize",
+            inputs=[("f", "flux(u?[j?][i?])"), ("inv", "invnorm(u?)")],
+            outputs=[("o", "nflux(u?[j?][i?])")],
+            fn=_scale,
+        ),
+    ]
+    return Program(
+        rules=rules,
+        axioms=[axiom("u[j?][i?]", j="Nj", i="Ni")],
+        goals=[goal("nflux(u[j][i])", store_as="nflux",
+                    j=("Nj", 0, 0), i=("Ni", 0, -1))],
+        loop_order=("j", "i"),
+        name=name,
+    )
+
+
+# ---------------------------------------------------------------------------
+# COSMO fourth-order diffusion micro-kernels (Section 5.3)
+# ---------------------------------------------------------------------------
+
+def _ulap(n, e, s, w_, c):
+    return n + e + s + w_ - 4.0 * c
+
+
+def _flux_x(u0, u1, l0, l1):
+    fl = l1 - l0
+    return jnp.where(fl * (u1 - u0) > 0.0, 0.0, fl)
+
+
+def _flux_y(u0, u1, l0, l1):
+    fl = l1 - l0
+    return jnp.where(fl * (u1 - u0) > 0.0, 0.0, fl)
+
+
+def _ustage(c, fxm, fx, fym, fy):
+    return c - 0.1 * ((fx - fxm) + (fy - fym))
+
+
+def cosmo_program(name: str = "cosmo") -> Program:
+    rules = [
+        kernel(
+            "ulapstage",
+            inputs=[
+                ("n", "u?[k?][j?-1][i?]"),
+                ("e", "u?[k?][j?][i?+1]"),
+                ("s", "u?[k?][j?+1][i?]"),
+                ("w", "u?[k?][j?][i?-1]"),
+                ("c", "u?[k?][j?][i?]"),
+            ],
+            outputs=[("o", "ulap(u?[k?][j?][i?])")],
+            fn=_ulap,
+        ),
+        kernel(
+            "flux_x",
+            inputs=[
+                ("u0", "u?[k?][j?][i?]"),
+                ("u1", "u?[k?][j?][i?+1]"),
+                ("l0", "ulap(u?[k?][j?][i?])"),
+                ("l1", "ulap(u?[k?][j?][i?+1])"),
+            ],
+            outputs=[("fx", "fx(u?[k?][j?][i?])")],
+            fn=_flux_x,
+        ),
+        kernel(
+            "flux_y",
+            inputs=[
+                ("u0", "u?[k?][j?][i?]"),
+                ("u1", "u?[k?][j?+1][i?]"),
+                ("l0", "ulap(u?[k?][j?][i?])"),
+                ("l1", "ulap(u?[k?][j?+1][i?])"),
+            ],
+            outputs=[("fy", "fy(u?[k?][j?][i?])")],
+            fn=_flux_y,
+        ),
+        kernel(
+            "ustage",
+            inputs=[
+                ("c", "u?[k?][j?][i?]"),
+                ("fxm", "fx(u?[k?][j?][i?-1])"),
+                ("fx", "fx(u?[k?][j?][i?])"),
+                ("fym", "fy(u?[k?][j?-1][i?])"),
+                ("fy", "fy(u?[k?][j?][i?])"),
+            ],
+            outputs=[("o", "unew(u?[k?][j?][i?])")],
+            fn=_ustage,
+        ),
+    ]
+    return Program(
+        rules=rules,
+        axioms=[axiom("u[k?][j?][i?]", k="Nk", j="Nj", i="Ni")],
+        goals=[goal("unew(u[k][j][i])", store_as="unew",
+                    k=("Nk", 0, 0), j=("Nj", 2, -2), i=("Ni", 2, -2))],
+        loop_order=("k", "j", "i"),
+        name=name,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Hydro-style dimensionally-split pass (Section 5.4, simplified)
+# ---------------------------------------------------------------------------
+
+def _constoprim(rho, mom):
+    v = mom / rho
+    return v
+
+
+def _eos(rho, v):
+    p = 0.4 * rho * (1.0 + 0.5 * v * v)
+    return p
+
+
+def _slope(qm, q0, qp):
+    dl = q0 - qm
+    dr = qp - q0
+    s = jnp.where(dl * dr > 0.0, 2.0 * dl * dr / (dl + dr + 1e-30), 0.0)
+    return s
+
+
+def _trace(q0, s):
+    ql = q0 - 0.5 * s
+    qr = q0 + 0.5 * s
+    return ql, qr
+
+
+def _riemann(qrL, qlR, pL, pR):
+    # toy HLL-style interface state between cell i (right face) and i+1
+    return jnp.where(pL > pR, qrL, qlR)
+
+def _cmpflx(qs, ps):
+    return qs * ps
+
+
+def _update(q0, fm, f0):
+    return q0 - 0.05 * (f0 - fm)
+
+
+def hydro1d_program(name: str = "hydro1d") -> Program:
+    rules = [
+        kernel(
+            "constoprim",
+            # 'mom' is concrete: an input name that does not appear in the
+            # output pattern cannot be bound by backward chaining.
+            inputs=[("rho", "rho?[j?][i?]"), ("mom", "mom[j?][i?]")],
+            outputs=[("v", "vel(rho?[j?][i?])")],
+            fn=_constoprim,
+        ),
+        kernel(
+            "eos",
+            inputs=[("rho", "rho?[j?][i?]"), ("v", "vel(rho?[j?][i?])")],
+            outputs=[("p", "pres(rho?[j?][i?])")],
+            fn=_eos,
+        ),
+        kernel(
+            "slope",
+            inputs=[
+                ("qm", "vel(rho?[j?][i?-1])"),
+                ("q0", "vel(rho?[j?][i?])"),
+                ("qp", "vel(rho?[j?][i?+1])"),
+            ],
+            outputs=[("s", "slope(rho?[j?][i?])")],
+            fn=_slope,
+        ),
+        kernel(
+            "trace",
+            inputs=[("q0", "vel(rho?[j?][i?])"), ("s", "slope(rho?[j?][i?])")],
+            outputs=[("ql", "traceL(rho?[j?][i?])"), ("qr", "traceR(rho?[j?][i?])")],
+            fn=_trace,
+        ),
+        kernel(
+            "riemann",
+            inputs=[
+                ("qrL", "traceR(rho?[j?][i?])"),
+                ("qlR", "traceL(rho?[j?][i?+1])"),
+                ("pL", "pres(rho?[j?][i?])"),
+                ("pR", "pres(rho?[j?][i?+1])"),
+            ],
+            outputs=[("qs", "qstar(rho?[j?][i?])")],
+            fn=_riemann,
+        ),
+        kernel(
+            "cmpflx",
+            inputs=[("qs", "qstar(rho?[j?][i?])"), ("ps", "pres(rho?[j?][i?])")],
+            outputs=[("f", "flx(rho?[j?][i?])")],
+            fn=_cmpflx,
+        ),
+        kernel(
+            "update",
+            inputs=[
+                ("q0", "rho?[j?][i?]"),
+                ("fm", "flx(rho?[j?][i?-1])"),
+                ("f0", "flx(rho?[j?][i?])"),
+            ],
+            outputs=[("o", "rnew(rho?[j?][i?])")],
+            fn=_update,
+        ),
+    ]
+    return Program(
+        rules=rules,
+        axioms=[
+            axiom("rho[j?][i?]", j="Nj", i="Ni"),
+            axiom("mom[j?][i?]", j="Nj", i="Ni"),
+        ],
+        goals=[goal("rnew(rho[j][i])", store_as="rnew",
+                    j=("Nj", 0, 0), i=("Ni", 2, -2))],
+        loop_order=("j", "i"),
+        name=name,
+    )

@@ -1,0 +1,248 @@
+"""Reuse analysis, software-pipeline leads, and storage contraction
+(Sections 3.4 & 3.5).
+
+For every intermediate variable inside a fused nest we compute:
+
+* the *reuse order* — the Hamiltonian path of Fig. 8, i.e. the order in
+  which a fixed storage location is touched by the stencil references as
+  the iteration progresses (descending lexicographic offsets in loop
+  order);
+* per-group *leads* for non-innermost dimensions — how far ahead of the
+  canonical iteration point each producer must run so that consumers
+  reading positive offsets see initialized data (the paper's software
+  pipeline / prologue priming);
+* the *contraction* of intermediate storage to rolling buffers whose stage
+  count is the reuse distance in the outermost varying dimension plus one
+  (Fig. 9a/9b), with rows padded for lane-aligned vectorization (Fig. 9c —
+  on TPU the 'vector length' is the 128-wide lane tile; the pure-JAX
+  backend vectorizes whole rows).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .dataflow import DataflowDAG, Group, Var
+from .fusion import FusedSchedule
+from .inest import Body, INest, Node, walk_bodies
+from .terms import Term
+
+
+# ---------------------------------------------------------------------------
+# Reuse order (Fig. 8)
+# ---------------------------------------------------------------------------
+
+def reuse_order(var_dims: tuple[str, ...], offsets: set[tuple[int, ...]],
+                loop_order: tuple[str, ...]) -> list[tuple[int, ...]]:
+    """Order references by first-touch time of a fixed location.
+
+    With a linear progression in ``loop_order`` a location ``p`` is read by
+    reference offset ``o`` at iteration ``p - o``; larger offsets touch it
+    earlier.  Sorting descending-lexicographically (outermost dimension
+    most significant) yields the Hamiltonian reuse path.
+    """
+    dim_pos = [var_dims.index(d) for d in loop_order if d in var_dims]
+
+    def key(off: tuple[int, ...]):
+        return tuple(-off[p] for p in dim_pos)
+
+    return sorted(offsets, key=key)
+
+
+def reuse_graph(var_dims, offsets, loop_order):
+    """The explicit 3-step construction of Section 3.5: vertices per
+    reference, edges a->b when a touches before b, longest path = the
+    Hamiltonian reuse path.  Used by tests to cross-check ``reuse_order``."""
+    order = reuse_order(var_dims, offsets, loop_order)
+    verts = list(offsets)
+    edges = {
+        (a, b)
+        for a in verts
+        for b in verts
+        if a != b and order.index(a) < order.index(b)
+    }
+    # longest path in a transitive tournament DAG == topological order.
+    return verts, edges, order
+
+
+# ---------------------------------------------------------------------------
+# Plans
+# ---------------------------------------------------------------------------
+
+@dataclass
+class VarPlan:
+    var: Var
+    kind: str  # external_in | external_out | full | rolling | row | scalar
+    nest_index: int | None = None  # top-level nest owning its lifetime
+    contraction_dim: str | None = None
+    stages: int = 1
+    # Row (innermost-dim) halo coverage relative to the size symbol:
+    # the materialized row spans [i_lo, N_i + i_hi).
+    i_lo: int = 0
+    i_hi: int = 0
+    reuse_path: list[tuple[int, ...]] = field(default_factory=list)
+
+    @property
+    def name(self) -> str:
+        return self.var.name
+
+
+@dataclass
+class NestPlan:
+    node: Node
+    gids: set[int]
+    # gid -> dim -> lead (iterations ahead of the canonical point)
+    leads: dict[int, dict[str, int]] = field(default_factory=dict)
+
+    def lead(self, gid: int, dim: str) -> int:
+        return self.leads.get(gid, {}).get(dim, 0)
+
+
+@dataclass
+class StoragePlan:
+    schedule: FusedSchedule
+    vars: dict[Term, VarPlan] = field(default_factory=dict)
+    nests: list[NestPlan] = field(default_factory=list)
+
+    def plan_of(self, key: Term) -> VarPlan:
+        return self.vars[key]
+
+    def summary(self) -> str:
+        lines = []
+        for p in self.vars.values():
+            extra = ""
+            if p.kind == "rolling":
+                extra = f" dim={p.contraction_dim} stages={p.stages}"
+            lines.append(f"{p.name}: {p.kind}{extra} row=[{p.i_lo},{p.i_hi}]")
+        return "\n".join(sorted(lines))
+
+
+def _nest_of(schedule: FusedSchedule) -> list[NestPlan]:
+    plans = []
+    for node in schedule.nests:
+        gids = node.groups()
+        plans.append(NestPlan(node, gids))
+    return plans
+
+
+def _innermost(schedule: FusedSchedule) -> str:
+    return schedule.program.loop_order[-1]
+
+
+def _compute_leads(schedule: FusedSchedule, np_: NestPlan) -> None:
+    """lead_P(d) >= lead_C(d) + max read offset in d, minimized, floored at
+    0 per nest (longest-path over the nest's internal dataflow edges)."""
+    dag = schedule.dag
+    inner = _innermost(schedule)
+    by_id = {g.gid: g for g in dag.groups}
+    gids = np_.gids
+    order = [g.gid for g in dag.topo_order() if g.gid in gids]
+    lead: dict[int, dict[str, int]] = {gid: {} for gid in gids}
+    for gid in reversed(order):
+        g = by_id[gid]
+        for _, base in g.writes:
+            v = dag.variables[base]
+            for use in v.consumers:
+                c = use.group
+                if c.gid not in gids:
+                    continue
+                for offs in use.offsets:
+                    for di, d in enumerate(v.dims):
+                        if d == inner:
+                            continue  # row halo handles innermost offsets
+                        need = lead[c.gid].get(d, 0) + offs[di]
+                        if need > lead[gid].get(d, 0):
+                            lead[gid][d] = need
+    np_.leads = lead
+
+
+def analyze_storage(schedule: FusedSchedule) -> StoragePlan:
+    dag = schedule.dag
+    program = schedule.program
+    inner = _innermost(schedule)
+    plan = StoragePlan(schedule)
+    plan.nests = _nest_of(schedule)
+    for np_ in plan.nests:
+        _compute_leads(schedule, np_)
+
+    nest_of_gid: dict[int, int] = {}
+    for k, np_ in enumerate(plan.nests):
+        for gid in np_.gids:
+            nest_of_gid[gid] = k
+    body_of_gid: dict[int, int] = {}
+    bid = 0
+    for np_ in plan.nests:
+        for body in walk_bodies(np_.node):
+            for gid in body.gids:
+                body_of_gid[gid] = bid
+            bid += 1
+
+    for key, v in dag.variables.items():
+        offsets: set[tuple[int, ...]] = set()
+        for use in v.consumers:
+            offsets |= use.offsets
+        path = reuse_order(v.dims, offsets, program.loop_order) if offsets else []
+
+        # Row halo (innermost dimension coverage).
+        i_lo = i_hi = 0
+        if inner in v.dims and inner in v.extent:
+            i_lo, i_hi = v.extent[inner].lo, v.extent[inner].hi
+
+        prod_nest = nest_of_gid.get(v.producer.gid) if v.producer else None
+        cons_nests = {nest_of_gid[u.group.gid] for u in v.consumers if u.group.gid in nest_of_gid}
+
+        if v.is_input:
+            kind, nest_index = "external_in", None
+        elif v.is_output:
+            kind, nest_index = "external_out", prod_nest
+        elif v.producer is not None and v.producer.is_reduction:
+            kind, nest_index = "acc", prod_nest
+        elif prod_nest is None or (cons_nests and cons_nests != {prod_nest}):
+            kind, nest_index = "full", None  # crosses a split: materialize
+        else:
+            outer = [d for d in v.dims if d != inner]
+            np_ = plan.nests[prod_nest]
+            di_of = {d: v.dims.index(d) for d in outer}
+            p_leads = {d: np_.lead(v.producer.gid, d) for d in outer}
+            active: set[str] = set()
+            for use in v.consumers:
+                for d in outer:
+                    if np_.lead(use.group.gid, d) != p_leads[d]:
+                        active.add(d)
+                for offs in use.offsets:
+                    for d in outer:
+                        if offs[di_of[d]] != 0:
+                            active.add(d)
+            same_body = all(
+                body_of_gid.get(u.group.gid) == body_of_gid.get(v.producer.gid)
+                for u in v.consumers
+            )
+            prod_outer = [d for d in v.producer.dims if d != inner]
+            if not v.dims:
+                kind, nest_index = "scalar", prod_nest
+            elif not active and (same_body or not prod_outer):
+                # same-iteration local / broadcast row from an enclosing
+                # scope — no carried storage at all.
+                kind, nest_index = "row", prod_nest
+            elif not outer or active - {outer[-1]}:
+                # activity in a non-adjacent outer dimension: contraction
+                # would need multi-row planes; materialize in full.
+                kind, nest_index = "full", None
+            else:
+                kind, nest_index = "rolling", prod_nest
+        vp = VarPlan(v, kind, nest_index, i_lo=i_lo, i_hi=i_hi, reuse_path=path)
+        if kind == "rolling":
+            d0 = outer[-1]
+            di = v.dims.index(d0)
+            p_lead = p_leads[d0]
+            oldest = None
+            for use in v.consumers:
+                c_lead = np_.lead(use.group.gid, d0)
+                for offs in use.offsets:
+                    pos = c_lead + offs[di]
+                    oldest = pos if oldest is None else min(oldest, pos)
+            if oldest is None:
+                oldest = p_lead
+            vp.contraction_dim = d0
+            vp.stages = max(1, p_lead - min(oldest, p_lead) + 1)
+        plan.vars[key] = vp
+    return plan

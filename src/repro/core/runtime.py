@@ -1,0 +1,78 @@
+"""Runtime helpers referenced by HFAV-generated JAX source.
+
+The generated code works on *rows* — 1-D arrays over the vectorized
+(innermost) dimension — streamed through rolling buffers.  Dynamic row
+indices arise from loop counters; ``lax.dynamic_slice`` clamps
+out-of-range starts, which the generator exploits to fold the paper's
+prologue/epilogue iterations into a masked steady state (the 'HFAV +
+Tuning' variant of Section 5.3, which is the idiomatic predicated form on
+TPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def row2(arr, r, col0: int, width: int):
+    """Row ``arr[r, col0:col0+width]`` with clamped dynamic start."""
+    return lax.dynamic_slice(arr, (r, col0), (1, width))[0]
+
+
+def row3(arr, p, r, col0: int, width: int):
+    return lax.dynamic_slice(arr, (p, r, col0), (1, 1, width))[0, 0]
+
+
+def setrow2(arr, r, col0: int, row, valid):
+    """Masked row write ``arr[r, col0:...] = where(valid, row, old)``."""
+    old = lax.dynamic_slice(arr, (r, col0), (1, row.shape[0]))[0]
+    new = jnp.where(valid, row, old)
+    return lax.dynamic_update_slice(arr, new[None, :], (r, col0))
+
+
+def setrow3(arr, p, r, col0: int, row, valid):
+    old = lax.dynamic_slice(arr, (p, r, col0), (1, 1, row.shape[0]))[0, 0]
+    new = jnp.where(valid, row, old)
+    return lax.dynamic_update_slice(arr, new[None, None, :], (p, r, col0))
+
+
+def brow(buf, stage, col0: int, width: int):
+    """Read a row slice from a rolling buffer at a dynamic stage index."""
+    return lax.dynamic_slice(buf, (stage, col0), (1, width))[0]
+
+
+def bset(buf, stage, row):
+    """Write one full row into a rolling-buffer stage (rotation by index
+    arithmetic — the functional analogue of the paper's pointer rotation,
+    Fig. 9a/9b)."""
+    return lax.dynamic_update_slice(buf, row[None, :], (stage, 0))
+
+
+def lane_reduce(fn, row, ident):
+    """Associative lane reduction of a vector partial accumulator
+    (the vectorized-reduction epilogue of Section 3.5): log2 halving,
+    padding odd halves with the identity."""
+    n = row.shape[0]
+    while n > 1:
+        half = (n + 1) // 2
+        pad = half * 2 - n
+        if pad:
+            row = jnp.concatenate([row, jnp.full((pad,), ident, row.dtype)])
+        row = fn(row[:half], row[half:])
+        n = half
+    return row[0]
+
+
+NAMESPACE = {
+    "jax": jax,
+    "jnp": jnp,
+    "lax": lax,
+    "_row2": row2,
+    "_row3": row3,
+    "_setrow2": setrow2,
+    "_setrow3": setrow3,
+    "_brow": brow,
+    "_bset": bset,
+    "_lane_reduce": lane_reduce,
+}

@@ -1,0 +1,53 @@
+"""Active-mesh context: lets mesh-agnostic model code emit sharding
+constraints only when a production mesh is in scope (dry-run, training
+launcher); CPU smoke tests run with no mesh and no constraints."""
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ACTIVE: list[tuple[Mesh, str]] = []
+
+
+@contextmanager
+def use_mesh(mesh: Mesh, policy: str = "fsdp_tp"):
+    _ACTIVE.append((mesh, policy))
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _ACTIVE.pop()
+
+
+def active_mesh() -> Mesh | None:
+    return _ACTIVE[-1][0] if _ACTIVE else None
+
+
+def active_policy() -> str:
+    return _ACTIVE[-1][1] if _ACTIVE else "fsdp_tp"
+
+
+def constrain(x, *dims):
+    """Constrain activation sharding: 'b' -> data axes, 'm' -> model.
+    No-op without an active mesh or when a dim does not divide."""
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    from .sharding import batch_axes
+
+    policy = active_policy()
+    baxes = batch_axes(mesh, policy)
+    bsize = 1
+    for a in baxes:
+        bsize *= mesh.shape[a]
+    spec = []
+    for d, size in zip(dims, x.shape):
+        if d == "b" and size % bsize == 0:
+            spec.append(baxes)
+        elif d == "m" and policy != "fsdp_only" and size % mesh.shape["model"] == 0:
+            spec.append("model")
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))

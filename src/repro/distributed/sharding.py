@@ -1,0 +1,168 @@
+"""Sharding rules: FSDP(data[,pod]) x TP(model) over the production mesh.
+
+Strategy (DESIGN.md §7): every weight is 2-D sharded — its largest dim
+over ``model`` (tensor parallel) and the other dim over the data axes
+(FSDP / ZeRO-3); XLA GSPMD inserts the per-layer all-gathers and
+reduce-scatters.  Activations are constrained at block boundaries
+(batch -> data axes); interior shardings propagate from the weights.
+Head-aligned TP for attention is applied when head counts divide the TP
+degree; otherwise GSPMD's resharding handles it (a measured cost —
+see EXPERIMENTS.md §Perf for the head-aligned hillclimb).
+
+Named rules keep the spec tree *structure-identical* to the param tree so
+it can be passed straight to pjit in_shardings."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def batch_axes(mesh: Mesh, policy: str = "fsdp_tp") -> tuple[str, ...]:
+    """The data-parallel axes: ('pod', 'data') multi-pod, else ('data',).
+    Under 'fsdp_only' the model axis joins data parallelism."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if policy == "fsdp_only":
+        axes = axes + ("model",)
+    return axes
+
+
+def weight_axes(mesh: Mesh, policy: str) -> tuple[str, ...]:
+    """Axes across which weights are ZeRO-sharded."""
+    if policy == "zero_dp":
+        # weights sharded over everything; batch only over the data axes
+        return tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+    return batch_axes(mesh, policy)
+
+
+def _divides(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def _weight_spec(path: str, shape: tuple[int, ...], mesh: Mesh,
+                 policy: str = "fsdp_tp") -> P:
+    """fsdp_tp: largest dim over model (TP), second over data (FSDP).
+    fsdp_only: largest dim over ALL axes (pure ZeRO-3, no TP)."""
+    baxes = weight_axes(mesh, policy)
+    dp = int(np.prod([mesh.shape[a] for a in baxes]))
+    if len(shape) == 0:
+        return P()
+    if len(shape) == 1:
+        (n,) = shape
+        if _divides(n, dp) and n >= 1024:
+            return P(baxes)
+        return P(None)
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    spec: list[Any] = [None] * len(shape)
+    if policy in ("fsdp_only", "zero_dp"):
+        # pure ZeRO: shard storage on ONE dim, never contraction-partial
+        if _divides(shape[order[0]], dp):
+            spec[order[0]] = baxes
+        elif len(order) > 1 and _divides(shape[order[1]], dp):
+            spec[order[1]] = baxes
+        return P(*spec)
+    tp = mesh.shape["model"]
+    if _divides(shape[order[0]], tp):
+        spec[order[0]] = "model"
+    if len(order) > 1 and _divides(shape[order[1]], dp):
+        spec[order[1]] = baxes
+    elif spec[order[0]] is None and _divides(shape[order[0]], dp):
+        spec[order[0]] = baxes
+    return P(*spec)
+
+
+def param_specs(params, mesh: Mesh, policy: str = "fsdp_tp"):
+    """Spec tree for a model/optimizer param pytree.
+
+    The leading stacked-layer axis (from scan-over-layers) is never
+    sharded; rules below apply to the per-layer shape."""
+
+    def spec_for(path, leaf) -> P:
+        names = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+        sname = "/".join(str(n) for n in names)
+        shape = leaf.shape
+        stacked = "blocks" in sname or "enc_blocks" in sname
+        inner = shape[1:] if stacked and len(shape) >= 1 else shape
+        s = _weight_spec(sname, tuple(inner), mesh, policy)
+        if stacked:
+            return P(None, *s)
+        return s
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def shardings_of(specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def sanitize_spec(shape: tuple[int, ...], spec: P, mesh: Mesh) -> P:
+    """Drop mesh axes from dims they do not evenly divide (e.g. batch=1
+    decode cells cannot shard over data)."""
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        if i < len(shape) and shape[i] % size == 0:
+            out.append(entry)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def sharded(mesh: Mesh, leaf, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, sanitize_spec(tuple(leaf.shape), spec, mesh))
+
+
+def act_spec(mesh: Mesh, *dims) -> P:
+    """Activation spec helper: 'b' -> data axes, 'm' -> model, None."""
+    baxes = batch_axes(mesh)
+    out = []
+    for d in dims:
+        if d == "b":
+            out.append(baxes)
+        elif d == "m":
+            out.append("model")
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def data_specs(mesh: Mesh, cfg, kind: str):
+    """Input shardings per step kind (tokens/positions/caches...)."""
+    b = batch_axes(mesh)
+    if kind == "train":
+        return {"tokens": P(b, None), "targets": P(b, None)}
+    if kind == "prefill":
+        return {"tokens": P(b, None)}
+    if kind == "decode":
+        return {"token": P(b), "lengths": P(b)}
+    raise ValueError(kind)
+
+
+def cache_specs(mesh: Mesh, cfg, caches):
+    """KV caches: batch over data axes, head_dim over model (divisible for
+    all assigned archs: 64/80/128 vs tp=16 -> 4/5/8 lanes)."""
+    b = batch_axes(mesh)
+    tp = mesh.shape["model"]
+
+    def spec(path, leaf):
+        names = "/".join(str(getattr(k, "key", getattr(k, "name", ""))) for k in path)
+        shp = leaf.shape
+        if "enc_len" in names:
+            return P(b)
+        if names.endswith("conv") or "/conv" in names:
+            # (L, B, W-1, di)
+            return P(None, b, None, "model" if _divides(shp[-1], tp) else None)
+        if names.endswith("state") or "/state" in names:
+            # (L, B, H, N, P)
+            return P(None, b, None, None, "model" if _divides(shp[-1], tp) else None)
+        # kv caches (L, B, S, KVH, hd)
+        return P(None, b, None, None, "model" if _divides(shp[-1], tp) else None)
+
+    return jax.tree_util.tree_map_with_path(spec, caches)

@@ -1,0 +1,90 @@
+"""Fault-tolerance scaffolding: heartbeats, straggler detection, restart.
+
+At pod scale the launcher (one process per host) runs:
+
+* a :class:`Heartbeat` — an atomically-updated per-host file with step +
+  wall time; an external supervisor (or the reference
+  :func:`check_heartbeats`) declares a host dead after ``timeout_s`` and
+  triggers job restart from the last committed checkpoint (ckpt/ has the
+  atomic-commit guarantees this relies on);
+* a :class:`StragglerDetector` — robust per-step timing stats (median +
+  MAD); hosts whose step time exceeds ``median + k*MAD`` for
+  ``patience`` consecutive steps are flagged so the supervisor can
+  hot-swap them (elastic re-shard on restore handles the new topology).
+
+These are deliberately plain-file/process mechanisms: they work the same
+under Borg/SLURM/k8s, and the unit tests exercise them directly."""
+from __future__ import annotations
+
+import json
+import os
+import statistics
+import time
+from dataclasses import dataclass, field
+
+
+class Heartbeat:
+    def __init__(self, run_dir: str, host_id: int):
+        self.path = os.path.join(run_dir, f"heartbeat_{host_id}.json")
+        os.makedirs(run_dir, exist_ok=True)
+
+    def beat(self, step: int, extra: dict | None = None) -> None:
+        rec = {"step": step, "time": time.time()}
+        if extra:
+            rec.update(extra)
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(rec, f)
+        os.replace(tmp, self.path)  # atomic
+
+
+def check_heartbeats(run_dir: str, timeout_s: float, now: float | None = None
+                     ) -> list[int]:
+    """Return host ids whose heartbeat is stale (the supervisor's poll)."""
+    now = now if now is not None else time.time()
+    dead = []
+    for name in os.listdir(run_dir):
+        if not name.startswith("heartbeat_"):
+            continue
+        host = int(name.split("_")[1].split(".")[0])
+        try:
+            with open(os.path.join(run_dir, name)) as f:
+                rec = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            dead.append(host)  # torn write == suspect
+            continue
+        if now - rec["time"] > timeout_s:
+            dead.append(host)
+    return sorted(dead)
+
+
+@dataclass
+class StragglerDetector:
+    k: float = 4.0  # MAD multiplier
+    patience: int = 3
+    window: int = 50
+    _times: dict[int, list[float]] = field(default_factory=dict)
+    _strikes: dict[int, int] = field(default_factory=dict)
+
+    def record(self, host_id: int, step_time: float) -> None:
+        ts = self._times.setdefault(host_id, [])
+        ts.append(step_time)
+        if len(ts) > self.window:
+            ts.pop(0)
+
+    def stragglers(self) -> list[int]:
+        """Hosts consistently slower than median + k*MAD of the fleet."""
+        latest = {h: ts[-1] for h, ts in self._times.items() if ts}
+        if len(latest) < 3:
+            return []
+        med = statistics.median(latest.values())
+        mad = statistics.median(abs(t - med) for t in latest.values()) or 1e-9
+        out = []
+        for h, t in latest.items():
+            if t > med + self.k * mad:
+                self._strikes[h] = self._strikes.get(h, 0) + 1
+            else:
+                self._strikes[h] = 0
+            if self._strikes.get(h, 0) >= self.patience:
+                out.append(h)
+        return sorted(out)

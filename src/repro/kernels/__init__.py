@@ -1,0 +1,5 @@
+"""Pallas TPU kernels (validated on CPU via interpret mode).
+
+Each kernel package provides: kernel.py (pl.pallas_call + BlockSpec
+VMEM tiling), ops.py (jit'd wrapper), ref.py (pure-jnp oracle).
+"""

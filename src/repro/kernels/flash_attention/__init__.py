@@ -1,0 +1,3 @@
+from .ops import attention, chunked_attention
+from .kernel import flash_attention_fwd
+from .ref import dense_attention

@@ -1,0 +1,145 @@
+"""Flash attention forward as a Pallas TPU kernel.
+
+HFAV framing (DESIGN.md §2/§5): the (Sq, Skv) score matrix is an
+intermediate whose reuse distance along the KV axis is one block — the
+engine's contraction rule replaces it with rolling accumulators
+(m, l, acc), and the softmax normalization is the reduction triple:
+identity init (prologue, ki == 0), online combine (steady state),
+finalize acc/l (epilogue, ki == last).  The KV axis is the innermost
+sequential grid dimension; accumulators persist in VMEM scratch across
+those grid steps, exactly like the stencil executor's rolling rows.
+
+Block layout: grid = (B*H, nq, nkv); q blocks (BQ, D), kv blocks (BKV, D)
+with D untiled (heads are small).  GQA is expressed in the K/V BlockSpec
+index maps (q head h reads kv head h // group).  Causal and sliding-window
+masks are applied with lane iota inside the block; fully-masked blocks are
+skipped via the grid bounds.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref, k_ref, v_ref, o_ref,  # blocks
+    acc_ref, m_ref, l_ref,  # VMEM scratch
+    *,
+    bq: int,
+    bkv: int,
+    nkv: int,
+    causal: bool,
+    window: int | None,
+    q_offset: int,
+    scale: float,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():  # reduction-triple prologue: identities
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale  # (BQ, D)
+    k = k_ref[0].astype(jnp.float32)  # (BKV, D)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (BQ, BKV)
+
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0) + q_offset
+    kpos = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+    mask = jnp.ones((bq, bkv), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]  # (BQ,)
+    m_cur = jnp.maximum(m_prev, s.max(axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_cur
+
+    @pl.when(ki == nkv - 1)
+    def _fini():  # reduction-triple epilogue: normalize
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(
+    q: jnp.ndarray,  # (B, Sq, H, D)
+    k: jnp.ndarray,  # (B, Skv, KVH, D)
+    v: jnp.ndarray,
+    *,
+    causal: bool = False,
+    window: int | None = None,
+    q_offset: int | None = None,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, Sq, H, D = q.shape
+    _, Skv, KVH, _ = k.shape
+    group = H // KVH
+    scale = scale if scale is not None else D ** -0.5
+    q_off = q_offset if q_offset is not None else (Skv - Sq)
+    bq = min(block_q, Sq)
+    while bq > 1 and Sq % bq:
+        bq //= 2
+    bkv = min(block_kv, Skv)
+    while bkv > 1 and Skv % bkv:
+        bkv //= 2
+    assert Sq % bq == 0 and Skv % bkv == 0, "pad sequences to block multiples"
+    nq, nkv = Sq // bq, Skv // bkv
+
+    # (B*H, S, D) views; kv head selected in the index map (GQA)
+    qv = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kv = k.transpose(0, 2, 1, 3).reshape(B * KVH, Skv, D)
+    vv = v.transpose(0, 2, 1, 3).reshape(B * KVH, Skv, D)
+
+    def q_map(bh, qi, ki):
+        return (bh, qi, 0)
+
+    def kv_map(bh, qi, ki):
+        b = bh // H
+        h = bh % H
+        return (b * KVH + h // group, ki, 0)
+
+    kernel = functools.partial(
+        _attn_kernel,
+        bq=bq, bkv=bkv, nkv=nkv,
+        causal=causal, window=window, q_offset=q_off, scale=scale,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), q_map),
+            pl.BlockSpec((1, bkv, D), kv_map),
+            pl.BlockSpec((1, bkv, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), q_map),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qv, kv, vv)
+    return out.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)

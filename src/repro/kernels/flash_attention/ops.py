@@ -1,0 +1,133 @@
+"""Attention front door used by all model code.
+
+Three interchangeable implementations (same math, same mask semantics):
+
+* ``reference`` — dense oracle (ref.py), materializes (Sq, Skv) scores.
+* ``chunked``   — pure-JAX online-softmax scan over KV chunks.  This is the
+  HFAV contraction applied in XLA-land: the score matrix never
+  materializes beyond one (Sq, C) tile, the running (m, l, acc)
+  accumulators are the contracted rolling buffers, and the softmax is the
+  init/combine/finalize reduction triple.  Differentiable (used inside
+  rematted blocks for training) and CPU-lowerable (used by the dry-run).
+* ``pallas``    — the TPU kernel (kernel.py); ``interpret=True`` validates
+  it on CPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_fwd
+from .ref import dense_attention
+
+NEG_INF = -1e30
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_offset", "scale", "chunk", "unroll"),
+)
+def chunked_attention(
+    q: jnp.ndarray,  # (B, Sq, H, D)
+    k: jnp.ndarray,  # (B, Skv, KVH, D)
+    v: jnp.ndarray,
+    *,
+    causal: bool = False,
+    window: int | None = None,
+    kv_len: jnp.ndarray | None = None,  # (B,)
+    q_offset: int | None = None,
+    qpos: jnp.ndarray | None = None,  # (B, Sq) explicit query positions
+    scale: float | None = None,
+    chunk: int = 512,
+    unroll: bool = False,
+) -> jnp.ndarray:
+    B, Sq, H, D = q.shape
+    _, Skv, KVH, _ = k.shape
+    group = H // KVH
+    scale = scale if scale is not None else D ** -0.5
+    C = min(chunk, Skv)
+    while C > 1 and Skv % C:
+        C //= 2
+    assert Skv % C == 0, "pad KV length to the chunk size"
+    nC = Skv // C
+
+    qs = (q.astype(jnp.float32) * scale).reshape(B, Sq, KVH, group, D)
+    kc = jnp.moveaxis(k.reshape(B, nC, C, KVH, D), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nC, C, KVH, D), 1, 0)
+    if qpos is None:
+        q_off = q_offset if q_offset is not None else (Skv - Sq)
+        qpos = jnp.arange(Sq)[None, :] + q_off  # (1, Sq)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kci, vci, ci = xs
+        s = jnp.einsum(
+            "bqhgd,bkhd->bhgqk", qs, kci.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )  # (B, KVH, group, Sq, C)
+        kpos = ci * C + jnp.arange(C)
+        qp = qpos[:, :, None]  # (B|1, Sq, 1)
+        mask = jnp.ones((1, Sq, C), jnp.bool_)
+        if causal:
+            mask = mask & (kpos[None, None, :] <= qp)
+        if window is not None:
+            mask = mask & (kpos[None, None, :] > qp - window)
+        if kv_len is not None:
+            mask = mask & (kpos[None, None, :] < kv_len[:, None, None])
+        m4 = mask[:, None, None]  # (B|1, 1, 1, Sq, C)
+        s = jnp.where(m4, s, NEG_INF)
+        mc = jnp.maximum(m, s.max(-1))
+        alpha = jnp.exp(m - mc)
+        p = jnp.exp(s - mc[..., None])
+        l = l * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p, vci.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        return (mc, l, acc), None
+
+    m0 = jnp.full((B, KVH, group, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KVH, group, Sq), jnp.float32)
+    a0 = jnp.zeros((B, KVH, group, Sq, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, jnp.arange(nC)), unroll=unroll)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out, (1, 2), (2, 3)).reshape(B, Sq, H, D)
+    return out.astype(q.dtype)
+
+
+def attention(
+    q, k, v, *,
+    causal: bool = False,
+    window: int | None = None,
+    kv_len=None,
+    q_offset: int | None = None,
+    qpos=None,
+    scale: float | None = None,
+    impl: str = "chunked",
+    chunk: int = 512,
+    unroll: bool = False,
+    interpret: bool = True,
+):
+    """Dispatch across implementations; semantics identical by test."""
+    if impl == "reference":
+        return dense_attention(
+            q, k, v, causal=causal, window=window, kv_len=kv_len,
+            q_offset=q_offset, qpos=qpos, scale=scale,
+        )
+    if impl == "chunked":
+        return chunked_attention(
+            q, k, v, causal=causal, window=window, kv_len=kv_len,
+            q_offset=q_offset, qpos=qpos, scale=scale, chunk=chunk,
+            unroll=unroll,
+        )
+    if impl == "pallas":
+        assert kv_len is None and qpos is None, (
+            "the pallas fwd kernel is the train/prefill path"
+        )
+        return flash_attention_fwd(
+            q, k, v, causal=causal, window=window, q_offset=q_offset,
+            scale=scale, interpret=interpret,
+        )
+    raise ValueError(f"unknown attention impl {impl!r}")

@@ -1,0 +1,45 @@
+"""Pure-jnp oracle: dense softmax attention with GQA / causal / sliding
+window.  Materializes the full (S_q, S_kv) score matrix — the 'unfused'
+form whose contraction (per the paper's reuse-distance argument) yields
+flash attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dense_attention(
+    q: jnp.ndarray,  # (B, Sq, H, D)
+    k: jnp.ndarray,  # (B, Skv, KVH, D)
+    v: jnp.ndarray,  # (B, Skv, KVH, D)
+    *,
+    causal: bool = False,
+    window: int | None = None,
+    kv_len: jnp.ndarray | None = None,  # (B,) valid kv length
+    q_offset: int | None = None,  # position of q[0] within the kv axis
+    qpos: jnp.ndarray | None = None,  # (B, Sq) explicit query positions
+    scale: float | None = None,
+) -> jnp.ndarray:
+    B, Sq, H, D = q.shape
+    _, Skv, KVH, _ = k.shape
+    assert H % KVH == 0
+    group = H // KVH
+    scale = scale if scale is not None else D ** -0.5
+    kr = jnp.repeat(k, group, axis=2)
+    vr = jnp.repeat(v, group, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q * scale, kr).astype(jnp.float32)
+    if qpos is None:
+        q_off = q_offset if q_offset is not None else (Skv - Sq)
+        qpos = jnp.arange(Sq)[None, :] + q_off  # (1, Sq)
+    qp = qpos[:, None, :, None]  # (B|1, 1, Sq, 1)
+    kpos = jnp.arange(Skv)[None, None, None, :]
+    m = jnp.ones((1, 1, Sq, Skv), bool)
+    if causal:
+        m = m & (kpos <= qp)
+    if window is not None:
+        m = m & (kpos > qp - window)
+    if kv_len is not None:
+        m = m & (kpos < kv_len[:, None, None, None])
+    logits = jnp.where(m, logits, -jnp.inf)
+    p = jnp.nan_to_num(jnp.exp(logits - logits.max(-1, keepdims=True)))
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), vr)

@@ -1,0 +1,3 @@
+from .ops import decode_attention
+from .kernel import flash_decode
+from .ref import dense_decode

@@ -1,0 +1,123 @@
+"""Split-KV decode attention as a Pallas TPU kernel.
+
+One new token per sequence attends over a long KV cache.  HFAV framing:
+the KV axis is the reduced dimension of a reduction triple — identity
+init at the first KV block, online-softmax combine across blocks
+(rolling (m, l, acc) accumulators in VMEM), normalize in the epilogue.
+Per-sequence cache lengths arrive via scalar prefetch (SMEM) and mask the
+tail block; the sliding-window variant masks the head blocks.
+
+Grid = (B, KVH, nkv); the q block carries the ``group`` query heads that
+share one KV head (GQA), giving an (group, C) score tile per step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    len_ref,  # scalar prefetch: (B,) int32 cache lengths
+    q_ref, k_ref, v_ref, o_ref,
+    acc_ref, m_ref, l_ref,
+    *,
+    bkv: int,
+    nkv: int,
+    window: int | None,
+    scale: float,
+):
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # (group, D)
+    k = k_ref[0, 0].astype(jnp.float32)  # (C, D)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (group, C)
+
+    length = len_ref[b]
+    kpos = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = kpos < length
+    if window is not None:
+        mask &= kpos > (length - 1) - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, s.max(axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v_ref[0, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_cur
+
+    @pl.when(ki == nkv - 1)
+    def _fini():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_decode(
+    q: jnp.ndarray,  # (B, H, D) — one token per sequence
+    k_cache: jnp.ndarray,  # (B, S, KVH, D)
+    v_cache: jnp.ndarray,
+    lengths: jnp.ndarray,  # (B,) int32 valid cache lengths (inclusive of new token)
+    *,
+    window: int | None = None,
+    scale: float | None = None,
+    block_kv: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, H, D = q.shape
+    _, S, KVH, _ = k_cache.shape
+    group = H // KVH
+    scale = scale if scale is not None else D ** -0.5
+    bkv = min(block_kv, S)
+    while bkv > 1 and S % bkv:
+        bkv //= 2
+    assert S % bkv == 0, "pad the cache to the KV block size"
+    nkv = S // bkv
+
+    qv = q.reshape(B, KVH, group, D)
+    kv = k_cache.transpose(0, 2, 1, 3)  # (B, KVH, S, D)
+    vv = v_cache.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(
+        _decode_kernel, bkv=bkv, nkv=nkv, window=window, scale=scale
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, KVH, nkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, D), lambda b, h, ki, lens: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bkv, D), lambda b, h, ki, lens: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, bkv, D), lambda b, h, ki, lens: (b, h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, D), lambda b, h, ki, lens: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group, D), jnp.float32),
+            pltpu.VMEM((group,), jnp.float32),
+            pltpu.VMEM((group,), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KVH, group, D), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qv, kv, vv)
+    return out.reshape(B, H, D)

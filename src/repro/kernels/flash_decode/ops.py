@@ -1,0 +1,27 @@
+"""Decode-attention front door: pallas kernel or chunked-scan fallback."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..flash_attention.ops import chunked_attention
+from .kernel import flash_decode
+from .ref import dense_decode
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, window=None,
+                     scale=None, impl: str = "chunked", chunk: int = 512,
+                     unroll: bool = False, interpret: bool = True):
+    """q: (B, H, D) one token per sequence; caches (B, S, KVH, D)."""
+    if impl == "reference":
+        return dense_decode(q, k_cache, v_cache, lengths, window=window, scale=scale)
+    if impl == "chunked":
+        out = chunked_attention(
+            q[:, None], k_cache, v_cache,
+            kv_len=lengths, qpos=(lengths - 1)[:, None],
+            window=window, scale=scale, chunk=chunk, unroll=unroll,
+        )
+        return out[:, 0]
+    if impl == "pallas":
+        return flash_decode(q, k_cache, v_cache, lengths, window=window,
+                            scale=scale, interpret=interpret)
+    raise ValueError(f"unknown decode impl {impl!r}")

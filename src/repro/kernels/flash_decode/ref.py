@@ -1,0 +1,16 @@
+"""Oracle: dense decode attention over the cache with length masking."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..flash_attention.ref import dense_attention
+
+
+def dense_decode(q, k_cache, v_cache, lengths, *, window=None, scale=None):
+    # q: (B, H, D) -> (B, 1, H, D); qpos = lengths - 1
+    out = dense_attention(
+        q[:, None], k_cache, v_cache,
+        kv_len=lengths, qpos=(lengths - 1)[:, None],
+        window=window, scale=scale,
+    )
+    return out[:, 0]

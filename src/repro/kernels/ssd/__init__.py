@@ -1,0 +1,3 @@
+from .ops import ssd, ssd_scan
+from .kernel import ssd_pallas
+from .ref import naive_ssd

@@ -1,0 +1,87 @@
+"""Mamba2 SSD chunked scan as a Pallas TPU kernel.
+
+Grid = (B, H, n_chunks) with the chunk axis innermost/sequential; the
+(N, P) SSM state lives in VMEM scratch and rolls across chunk steps —
+the HFAV contraction of the state stream (reuse distance = 1 chunk).
+All intra-chunk work is MXU matmuls; the prefix sum uses the
+lower-triangular-ones matmul idiom.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, s_ref,
+                *, L: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    f32 = jnp.float32
+    x = x_ref[0, :, 0, :].astype(f32)  # (L, P)
+    dt = dt_ref[0, :, 0].astype(f32)  # (L,)
+    bm = b_ref[0].astype(f32)  # (L, N)
+    cm = c_ref[0].astype(f32)  # (L, N)
+    a = a_ref[0].astype(f32)  # scalar
+    d = d_ref[0].astype(f32)
+
+    tril = jnp.tril(jnp.ones((L, L), f32))
+    cs = jax.lax.dot_general(
+        tril, dt, (((1,), (0,)), ((), ())), preferred_element_type=f32
+    )  # inclusive cumsum (L,)
+    seg = cs[:, None] - cs[None, :]
+    decay = jnp.where(tril > 0, jnp.exp(a * seg), 0.0)  # (L, L)
+    cb = jax.lax.dot_general(
+        cm, bm, (((1,), (1,)), ((), ())), preferred_element_type=f32
+    )  # (L, L)
+    M = cb * decay * dt[None, :]
+    y = jax.lax.dot_general(M, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=f32)  # (L, P)
+    # inter-chunk from the rolled-in state
+    cS = jax.lax.dot_general(cm, s_ref[...], (((1,), (0,)), ((), ())),
+                             preferred_element_type=f32)  # (L, P)
+    y = y + cS * jnp.exp(a * cs)[:, None]
+    y = y + d * x
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    # state passing (the rolling buffer update)
+    w = jnp.exp(a * (cs[-1] - cs)) * dt  # (L,)
+    z = jax.lax.dot_general(bm * w[:, None], x, (((0,), (0,)), ((), ())),
+                            preferred_element_type=f32)  # (N, P)
+    s_ref[...] = jnp.exp(a * cs[-1]) * s_ref[...] + z
+
+
+def ssd_pallas(x, dt, A, Bm, Cm, D, *, chunk: int = 128,
+               interpret: bool = False):
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    L = min(chunk, S)
+    while L > 1 and S % L:
+        L //= 2
+    nc = S // L
+
+    kernel = functools.partial(_ssd_kernel, L=L)
+    y = pl.pallas_call(
+        kernel,
+        grid=(Bsz, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, L, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, L, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, L, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, L, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+        ],
+        out_specs=pl.BlockSpec((1, L, 1, P), lambda b, h, c: (b, c, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bsz, S, H, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm, D)
+    return y

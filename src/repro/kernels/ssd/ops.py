@@ -1,0 +1,82 @@
+"""Chunked SSD scan (Mamba2 state-space duality) — pure JAX.
+
+HFAV framing (DESIGN.md §5): the per-chunk algorithm is the engine's
+storage contraction applied to the SSM state — the (N, P) state carried
+between chunks is a rolling buffer with reuse distance one chunk, and the
+intra/inter-chunk split is the prologue/steady/epilogue phase structure.
+Within a chunk everything is dense matmuls (MXU-friendly); the chunk loop
+is a ``lax.scan`` (differentiable; the training path runs inside rematted
+blocks).  The Pallas version (kernel.py) keeps the state in VMEM scratch.
+
+Cumulative sums are computed with a lower-triangular ones matmul — the
+MXU-idiomatic prefix sum used in TPU SSD implementations.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "unroll"))
+def ssd_scan(x, dt, A, Bm, Cm, D, *, chunk: int = 128, unroll: bool = False):
+    """x (B,S,H,P), dt (B,S,H) post-softplus, A (H,) negative,
+    Bm/Cm (B,S,N), D (H,) -> y (B,S,H,P)."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    L = min(chunk, S)
+    assert S % L == 0, "pad sequence to the chunk size"
+    nc = S // L
+
+    f32 = jnp.float32
+    xc = jnp.moveaxis(x.reshape(Bsz, nc, L, H, P), 1, 0).astype(f32)
+    dtc = jnp.moveaxis(dt.reshape(Bsz, nc, L, H), 1, 0).astype(f32)
+    bc = jnp.moveaxis(Bm.reshape(Bsz, nc, L, N), 1, 0).astype(f32)
+    cc = jnp.moveaxis(Cm.reshape(Bsz, nc, L, N), 1, 0).astype(f32)
+    A = A.astype(f32)
+
+    tril = jnp.tril(jnp.ones((L, L), f32))  # inclusive prefix-sum operator
+    tril_strict = jnp.tril(jnp.ones((L, L), f32), k=-1)
+
+    def step(state, inp):  # state (B,H,N,P)
+        xi, dti, bi, ci = inp
+        cs = jnp.einsum("ts,bsh->bth", tril, dti)  # inclusive cumsum (B,L,H)
+        # decay from chunk entry to t (inclusive of a_t)
+        din = jnp.exp(A[None, None, :] * cs)  # (B,L,H)
+        # pairwise decay exp(A (cs_t - cs_tau)) for tau <= t
+        seg = cs[:, :, None, :] - cs[:, None, :, :]  # (B,L,L,H)
+        decay = jnp.exp(A[None, None, None, :] * seg)
+        mask = tril[None, :, :, None] > 0
+        decay = jnp.where(mask, decay, 0.0)
+        # intra-chunk: M[t,tau] = (C_t . B_tau) decay dt_tau
+        cb = jnp.einsum("btn,bsn->bts", ci, bi)  # (B,L,L)
+        M = cb[:, :, :, None] * decay * dti[:, None, :, :]  # (B,L,L,H)
+        y = jnp.einsum("btsh,bshp->bthp", M, xi)
+        # inter-chunk: C_t . (decay_to_t * S_prev)
+        y = y + jnp.einsum("btn,bhnp->bthp", ci, state) * din[..., None]
+        # state passing: S' = decay_full * S + B^T diag(w) X
+        w = jnp.exp(A[None, None, :] * (cs[:, -1:, :] - cs)) * dti  # (B,L,H)
+        z = jnp.einsum("bsn,bsh,bshp->bhnp", bi, w, xi)
+        dfull = jnp.exp(A[None, :] * cs[:, -1, :])  # (B,H)
+        state = dfull[..., None, None] * state + z
+        return state, y
+
+    s0 = jnp.zeros((Bsz, H, N, P), f32)
+    _, ys = jax.lax.scan(step, s0, (xc, dtc, bc, cc), unroll=unroll)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, S, H, P)
+    y = y + (D[None, None, :, None] * x.astype(f32))
+    return y.astype(x.dtype)
+
+
+def ssd(x, dt, A, Bm, Cm, D, *, chunk: int = 128, impl: str = "chunked",
+        unroll: bool = False, interpret: bool = True):
+    if impl == "reference":
+        from .ref import naive_ssd
+        return naive_ssd(x, dt, A, Bm, Cm, D)
+    if impl == "chunked":
+        return ssd_scan(x, dt, A, Bm, Cm, D, chunk=chunk, unroll=unroll)
+    if impl == "pallas":
+        from .kernel import ssd_pallas
+        return ssd_pallas(x, dt, A, Bm, Cm, D, chunk=chunk, interpret=interpret)
+    raise ValueError(f"unknown ssd impl {impl!r}")

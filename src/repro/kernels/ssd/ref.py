@@ -1,0 +1,35 @@
+"""Oracle: naive per-token SSD recurrence (state-space duality linear form).
+
+    S_t = exp(dt_t * A_h) * S_{t-1} + dt_t * (B_t ⊗ x_t)
+    y_t = C_t · S_t + D_h * x_t
+
+Shapes: x (B,S,H,P), dt (B,S,H) [post-softplus], A (H,) [negative],
+B/C (B,S,N) [single state group], D (H,).  Small sizes only.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def naive_ssd(x, dt, A, Bm, Cm, D):
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp  # (B,H,P), (B,H), (B,N), (B,N)
+        a = jnp.exp(dtt * A[None, :])  # (B,H)
+        upd = dtt[..., None, None] * bt[:, None, :, None] * xt[:, :, None, :]
+        state = a[..., None, None] * state + upd  # (B,H,N,P)
+        y = jnp.einsum("bn,bhnp->bhp", ct, state) + D[None, :, None] * xt
+        return state, y
+
+    s0 = jnp.zeros((Bsz, H, N, P), jnp.float32)
+    xs = (
+        jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(Bm, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(Cm, 1, 0).astype(jnp.float32),
+    )
+    _, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)  # (B,S,H,P)

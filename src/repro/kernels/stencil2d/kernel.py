@@ -1,0 +1,213 @@
+"""Pallas TPU executor for HFAV-fused stencil pipelines.
+
+This is the TPU-native realization of the paper's generated code
+(Section 3.6 + the hardware adaptation of DESIGN.md §2): the fused
+iteration nest's steady state becomes the Pallas grid, and *all* rolling
+buffers — including the optional input-row window the paper mentions for
+COSMO — live in VMEM scratch that persists across sequential grid steps.
+Each grid step:
+
+1. streams exactly one new row per external input from HBM into that
+   input's VMEM window (the DMA is expressed through the BlockSpec
+   index map, running ``lead`` rows ahead of the canonical point);
+2. executes every fused kernel at its software-pipeline lead, reading
+   neighbor rows from VMEM windows via mod-``stages`` index arithmetic
+   (the functional form of the paper's pointer rotation, Fig. 9a/9b);
+3. writes one output row back to HBM.
+
+Rolling windows are padded to the 128-wide TPU lane tile (the
+vector-length expansion of Fig. 9c).  Warm-up/drain grid steps compute
+garbage rows into a padded output that the ops wrapper slices away — the
+masked steady-state ('HFAV + Tuning') form.
+
+All row widths in the spec are stored as *deltas against Ni* so one spec
+serves every problem size; they are concretized in :func:`build_call`.
+
+The executor is driven by the engine's storage plan — see
+:func:`repro.core.codegen_pallas.extract_stencil_spec`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANE = 128
+
+
+def _pad_to_lane(w: int) -> int:
+    return max(LANE, ((w + LANE - 1) // LANE) * LANE)
+
+
+def _mod(pos, stages: int):
+    """Floor-mod robust to negative pipeline-priming positions."""
+    return jax.lax.rem(jax.lax.rem(pos, stages) + stages, stages)
+
+
+@dataclasses.dataclass(frozen=True)
+class BufSpec:
+    """One VMEM rolling window: ``stages`` rows covering column positions
+    [i_lo, Ni + i_hi) of its variable (widths are Ni-relative)."""
+
+    name: str
+    stages: int
+    i_lo: int
+    i_hi: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ReadSpec:
+    src: str  # buffer name, or 'local:<name>'
+    j_off: int  # total row offset (consumer lead + stencil offset)
+    col0: int  # absolute column position of the first lane read
+    w_off: int  # read width = Ni + w_off
+
+
+@dataclasses.dataclass(frozen=True)
+class StepSpec:
+    """One fused kernel at its software-pipeline lead."""
+
+    fn: Callable
+    reads: tuple[ReadSpec, ...]
+    # each write: ('buf', name) | ('local', name) | ('out', 0)
+    writes: tuple[tuple[str, str | int], ...]
+    lead: int
+    out_col0: int = 0  # absolute column of the produced row's first lane
+
+
+@dataclasses.dataclass(frozen=True)
+class StencilSpec:
+    """A complete fused, contracted stencil pipeline."""
+
+    name: str
+    n_outer: int  # 0 -> grid (j,); 1 -> grid (k, j)
+    inputs: tuple[str, ...]
+    in_bufs: tuple[BufSpec, ...]
+    in_leads: tuple[int, ...]
+    bufs: tuple[BufSpec, ...]
+    steps: tuple[StepSpec, ...]
+    x_lo: int  # canonical loop start (negative = pipeline priming rows)
+    x_hi_off: int  # loop end offset: x in [x_lo, Nj + x_hi_off)
+    out_lead: int = 0
+
+
+def build_call(spec: StencilSpec, shape: tuple[int, ...], dtype,
+               interpret: bool = False):
+    """Concretize the spec for one problem size and build the pallas_call.
+
+    Returns ``(call, steps_j)`` where the call maps the input arrays to a
+    padded output of ``steps_j`` rows per outer iteration (row ``t`` holds
+    iteration position ``t + x_lo + out_lead``).
+    """
+    if spec.n_outer == 0:
+        nj, ni = shape
+        nk = None
+    else:
+        nk, nj, ni = shape
+    steps_j = (nj + spec.x_hi_off) - spec.x_lo
+    all_bufs = (*spec.in_bufs, *spec.bufs)
+    bwidth = {b.name: ni + (b.i_hi - b.i_lo) for b in all_bufs}
+
+    def kernel(*refs):
+        nin = len(spec.inputs)
+        in_refs = refs[:nin]
+        o_ref = refs[nin]
+        scratch = refs[nin + 1:]
+        ref_of = {b.name: (r, b) for r, b in zip(scratch, all_bufs)}
+
+        x = pl.program_id(spec.n_outer) + spec.x_lo
+
+        # 1. stream one new input row per grid step into its VMEM window
+        for k, name in enumerate(spec.inputs):
+            ref, b = ref_of[f"in_{name}"]
+            row = in_refs[k][0, :] if spec.n_outer == 0 else in_refs[k][0, 0, :]
+            pos = x + spec.in_leads[k]
+            pl.store(
+                ref,
+                (pl.dslice(_mod(pos, b.stages), 1), pl.dslice(0, ni)),
+                row[None, :],
+            )
+
+        # 2. fused kernels, in dataflow order, at their leads
+        local: dict[str, jnp.ndarray] = {}
+        for step in spec.steps:
+            ins = []
+            for rd in step.reads:
+                w = ni + rd.w_off
+                if rd.src.startswith("local:"):
+                    lrow = local[rd.src[6:]]
+                    ins.append(jax.lax.slice(lrow, (rd.col0,), (rd.col0 + w,)))
+                else:
+                    ref, b = ref_of[rd.src]
+                    stage = _mod(x + rd.j_off, b.stages)
+                    ins.append(
+                        pl.load(ref, (pl.dslice(stage, 1),
+                                      pl.dslice(rd.col0 - b.i_lo, w)))[0]
+                    )
+            vals = step.fn(*ins)
+            if len(step.writes) == 1:
+                vals = (vals,)
+            for (wkind, wtgt), val in zip(step.writes, vals):
+                if wkind == "local":
+                    local[str(wtgt)] = val
+                elif wkind == "buf":
+                    ref, b = ref_of[str(wtgt)]
+                    stage = _mod(x + step.lead, b.stages)
+                    pl.store(
+                        ref,
+                        (pl.dslice(stage, 1),
+                         pl.dslice(step.out_col0 - b.i_lo, val.shape[0])),
+                        val[None, :],
+                    )
+                else:  # 3. the output row for this grid step
+                    out_row = jnp.zeros((ni,), val.dtype)
+                    out_row = jax.lax.dynamic_update_slice(
+                        out_row, val, (step.out_col0,)
+                    )
+                    if spec.n_outer == 0:
+                        o_ref[0, :] = out_row
+                    else:
+                        o_ref[0, 0, :] = out_row
+
+    if spec.n_outer == 0:
+        grid = (steps_j,)
+        in_specs = [
+            pl.BlockSpec(
+                (1, ni),
+                (lambda j, _l=lead: (jnp.clip(j + spec.x_lo + _l, 0, nj - 1), 0)),
+            )
+            for lead in spec.in_leads
+        ]
+        out_specs = pl.BlockSpec((1, ni), lambda j: (j, 0))
+        out_shape = jax.ShapeDtypeStruct((steps_j, ni), dtype)
+    else:
+        grid = (nk, steps_j)
+        in_specs = [
+            pl.BlockSpec(
+                (1, 1, ni),
+                (lambda kk, j, _l=lead:
+                 (kk, jnp.clip(j + spec.x_lo + _l, 0, nj - 1), 0)),
+            )
+            for lead in spec.in_leads
+        ]
+        out_specs = pl.BlockSpec((1, 1, ni), lambda kk, j: (kk, j, 0))
+        out_shape = jax.ShapeDtypeStruct((nk, steps_j, ni), dtype)
+
+    scratch_shapes = [
+        pltpu.VMEM((b.stages, _pad_to_lane(ni + (b.i_hi - b.i_lo))), dtype)
+        for b in all_bufs
+    ]
+    call = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch_shapes,
+        interpret=interpret,
+    )
+    return call, steps_j

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle: the unfused pass-per-kernel reference evaluator."""
+from __future__ import annotations
+
+from repro.core.unfused import build_unfused
+
+
+def run_unfused_reference(program, arrays):
+    return build_unfused(program).fn(**arrays)

@@ -1,0 +1,219 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (assignment §MULTI-POD DRY-RUN).
+
+For every (architecture x input-shape) cell and mesh:
+
+1. **Full compile** — ``jit(step).lower(*ShapeDtypeStructs).compile()``
+   against the production mesh.  This is the required pass/fail artifact;
+   its ``memory_analysis()`` proves the cell fits per device.
+2. **Cost extrapolation** — XLA:CPU ``cost_analysis()`` does not descend
+   into ``while`` bodies (scan-over-layers), so per-layer FLOPs / bytes /
+   collective traffic are extracted from two reduced *unrolled* compiles
+   (1 and 2 layer-units) and extrapolated linearly; train cells add one
+   extra compile at 2 microbatches to capture per-microbatch weight
+   re-gathers.  All numbers still originate from compiled artifacts.
+
+The XLA_FLAGS line above MUST precede any jax import (jax locks the
+device count at first init).  Results land as JSON in reports/dryrun/.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes [--out DIR]
+"""
+import argparse
+import json
+import math
+import time
+import traceback
+
+import jax
+
+from ..configs import ARCHS, SHAPES, get_arch
+from ..distributed.ctx import use_mesh
+from ..roofline.analysis import (Roofline, collective_bytes, extrapolate,
+                                 model_flops_for)
+from .mesh import make_production_mesh
+from .specs import build_cell, iter_cells, target_units, with_units
+
+
+def _compile(cell, mesh):
+    jitted = jax.jit(
+        cell.fn, in_shardings=cell.in_shardings, donate_argnums=cell.donate
+    )
+    lowered = jitted.lower(*cell.args)
+    return lowered.compile()
+
+
+def _costs(compiled, n_chips: int) -> dict:
+    cost = compiled.cost_analysis() or {}
+    coll = collective_bytes(compiled.as_text(), default_group=n_chips)
+    out = {"flops": float(cost.get("flops", 0.0)),
+           "bytes": float(cost.get("bytes accessed", 0.0))}
+    for k, v in coll.items():
+        out[f"coll:{k}"] = v
+    return out
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, out_dir: str,
+             skip_full: bool = False, cfg_mutate: dict | None = None,
+             policy: str | None = None, grad_comp: str = "none",
+             microbatch_override: int | None = None, tag: str = "") -> dict:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = math.prod(mesh.devices.shape)
+    cfg = get_arch(arch)
+    if cfg_mutate:
+        cfg = cfg.replace(**cfg_mutate)
+    policy = policy or cfg.parallelism
+    shape = SHAPES[shape_name]
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                 "n_chips": n_chips, "status": "ok", "tag": tag,
+                 "policy": policy, "cfg_mutate": cfg_mutate or {}}
+    try:
+        with use_mesh(mesh, policy):
+            # ---- 1. full compile (the deliverable) -------------------------
+            if not skip_full:
+                cell = build_cell(arch, shape_name, mesh, cfg_override=cfg,
+                                  microbatch_override=microbatch_override,
+                                  policy=policy, grad_comp=grad_comp)
+                compiled = _compile(cell, mesh)
+                mem = compiled.memory_analysis()
+                mem_stats = {
+                    k: int(getattr(mem, k, 0) or 0)
+                    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                              "temp_size_in_bytes")
+                }
+                print(f"[{arch} x {shape_name} x {mesh_name}] "
+                      f"memory_analysis: {mem_stats}")
+                full_cost = compiled.cost_analysis() or {}
+                print(f"[{arch} x {shape_name} x {mesh_name}] cost_analysis "
+                      f"(outer module): flops={full_cost.get('flops', 0):.3e} "
+                      f"bytes={full_cost.get('bytes accessed', 0):.3e}")
+                rec["memory_stats"] = mem_stats
+                rec["microbatches"] = cell.microbatches
+                del compiled
+            t_full = time.time() - t0
+
+            # ---- 2. unrolled cost extrapolation ----------------------------
+            units = target_units(cfg)
+            mb = rec.get("microbatches", 1)
+            c1 = _costs(_compile(build_cell(
+                arch, shape_name, mesh,
+                cfg_override=with_units(cfg, 1, shape),
+                microbatch_override=1, policy=policy, grad_comp=grad_comp),
+                mesh), n_chips)
+            c2 = _costs(_compile(build_cell(
+                arch, shape_name, mesh,
+                cfg_override=with_units(cfg, 2, shape),
+                microbatch_override=1, policy=policy, grad_comp=grad_comp),
+                mesh), n_chips)
+            ex = extrapolate(c1, c2, units)
+            if shape.kind == "train" and mb > 1:
+                c3 = _costs(_compile(build_cell(
+                    arch, shape_name, mesh,
+                    cfg_override=with_units(cfg, 1, shape),
+                    microbatch_override=2, policy=policy,
+                    grad_comp=grad_comp), mesh), n_chips)
+                for k in ex:
+                    ex[k] += (mb - 1) * units * max(0.0, c3[k] - c1[k])
+            rec["cost_points"] = {"u1": c1, "u2": c2, "units": units}
+
+            coll_total = sum(v for k, v in ex.items() if k.startswith("coll:"))
+            roof = Roofline(
+                arch=arch, shape=shape_name, mesh=mesh_name, n_chips=n_chips,
+                flops_per_device=ex["flops"],
+                bytes_per_device=ex["bytes"],
+                coll_bytes_per_device=coll_total,
+                coll_breakdown={k[5:]: v for k, v in ex.items()
+                                if k.startswith("coll:")},
+                model_flops=model_flops_for(cfg, shape),
+                memory_stats=rec.get("memory_stats", {}),
+            )
+            rec.update(roof.to_dict())
+            rec["t_wall_full_compile_s"] = round(t_full, 1)
+            rec["t_wall_total_s"] = round(time.time() - t0, 1)
+            print(f"  t_compute={roof.t_compute:.4f}s t_memory={roof.t_memory:.4f}s "
+                  f"t_collective={roof.t_collective:.4f}s -> {roof.bottleneck} "
+                  f"(roofline fraction {roof.roofline_fraction:.3f}) "
+                  f"[total {rec['t_wall_total_s']}s]")
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        traceback.print_exc()
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_name}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--skip-full", action="store_true",
+                    help="cost extrapolation only (skip the full compile)")
+    ap.add_argument("--out", default="reports/dryrun")
+    ap.add_argument("--tag", default="", help="variant suffix for the record")
+    ap.add_argument("--policy", default=None, choices=[None, "fsdp_tp", "fsdp_only", "zero_dp"])
+    ap.add_argument("--cast-once", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--ssd-chunk", type=int, default=None)
+    ap.add_argument("--attn-chunk", type=int, default=None)
+    ap.add_argument("--grad-comp", default="none", choices=["none", "bf16"])
+    args = ap.parse_args()
+    mutate: dict = {}
+    if args.cast_once:
+        mutate["cast_once"] = True
+    if args.ssd_chunk:
+        mutate["ssd_chunk"] = args.ssd_chunk
+    if args.attn_chunk:
+        mutate["attn_chunk"] = args.attn_chunk
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        for arch, shape_name, skip in iter_cells():
+            if skip:
+                for mp in meshes:
+                    mesh_name = "2x16x16" if mp else "16x16"
+                    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                           "status": "skipped", "reason": skip}
+                    os.makedirs(args.out, exist_ok=True)
+                    with open(os.path.join(
+                            args.out, f"{arch}__{shape_name}__{mesh_name}.json"),
+                            "w") as f:
+                        json.dump(rec, f, indent=1)
+                    print(f"[{arch} x {shape_name}] SKIP: {skip}")
+                continue
+            cells.append((arch, shape_name))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        cells = [(args.arch, args.shape)]
+
+    ok = err = 0
+    for arch, shape_name in cells:
+        for mp in meshes:
+            rec = run_cell(arch, shape_name, multi_pod=mp, out_dir=args.out,
+                           skip_full=args.skip_full, cfg_mutate=mutate,
+                           policy=args.policy, grad_comp=args.grad_comp,
+                           microbatch_override=args.microbatches,
+                           tag=args.tag)
+            if rec["status"] == "ok":
+                ok += 1
+            else:
+                err += 1
+    print(f"dry-run complete: {ok} ok, {err} errors")
+    if err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

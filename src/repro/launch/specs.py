@@ -1,0 +1,200 @@
+"""Per-(architecture x shape) cell builders for the multi-pod dry-run.
+
+``build_cell`` returns everything ``jax.jit(...).lower(...)`` needs:
+the step function, abstract args (ShapeDtypeStruct — never allocated),
+and in/out shardings over the production mesh.  ``train_*`` cells lower
+``train_step``; ``prefill_*`` lowers the cache-building prefill;
+``decode_*`` / ``long_*`` lower ``serve_step`` (one token against a
+seq_len KV cache), per the assignment.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES, ArchConfig, ShapeCfg, get_arch
+from ..distributed.sharding import (batch_axes, cache_specs, param_specs,
+                                    sharded, shardings_of)
+from ..models import init_caches, init_params
+from ..optim.adamw import AdamWCfg, init_opt_state
+from ..serve.engine import make_decode_step, make_prefill_step
+from ..train.step import make_train_step
+
+SDS = jax.ShapeDtypeStruct
+
+# per-chip activation budget driving the microbatch choice (bf16 carries)
+ACT_BUDGET_BYTES = 2e9
+
+
+def skip_reason(cfg: ArchConfig, shape: ShapeCfg) -> Optional[str]:
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return ("full attention at 524288-token decode has no sub-quadratic "
+                "path (DESIGN.md §Shape/skip policy)")
+    return None
+
+
+def microbatches_for(cfg: ArchConfig, shape: ShapeCfg, n_chips: int) -> int:
+    total_act = cfg.n_layers * shape.global_batch * shape.seq_len * cfg.d_model * 2
+    need = total_act / (n_chips * ACT_BUDGET_BYTES)
+    m = 1
+    while m < need and m < shape.global_batch:
+        m *= 2
+    return m
+
+
+def _abstract_params(cfg: ArchConfig, dtype=None):
+    shapes = jax.eval_shape(
+        functools.partial(init_params, cfg=cfg), SDS((2,), jnp.uint32)
+    )
+    if dtype is not None:
+        shapes = jax.tree.map(lambda s: SDS(s.shape, dtype), shapes)
+    return shapes
+
+
+def _batch_struct(cfg: ArchConfig, shape: ShapeCfg, *, train: bool):
+    GB, S = shape.global_batch, shape.seq_len
+    batch: dict[str, Any] = {"tokens": SDS((GB, S), jnp.int32)}
+    if train:
+        batch["targets"] = SDS((GB, S), jnp.int32)
+    if cfg.family == "encdec":
+        batch["enc_frames"] = SDS((GB, cfg.encdec.enc_seq, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm":
+        batch["positions"] = SDS((3, GB, S), jnp.int32)
+    return batch
+
+
+def _batch_shardings(batch, mesh: Mesh, policy: str = "fsdp_tp"):
+    b = batch_axes(mesh, policy)
+
+    def spec(path, leaf):
+        name = str(getattr(path[-1], "key", ""))
+        if name == "positions":
+            return sharded(mesh, leaf, P(None, b, None))
+        if name == "enc_frames":
+            return sharded(mesh, leaf, P(b, None, None))
+        return sharded(mesh, leaf, P(b, None))
+
+    return jax.tree_util.tree_map_with_path(spec, batch)
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str
+    fn: Callable
+    args: tuple
+    in_shardings: tuple
+    donate: tuple[int, ...]
+    microbatches: int = 1
+
+
+def layer_unit(cfg: ArchConfig) -> int:
+    return cfg.hybrid.attn_every if cfg.hybrid is not None else 1
+
+
+def with_units(cfg: ArchConfig, units: int, shape: ShapeCfg) -> ArchConfig:
+    """Reduced-depth, fully-unrolled config for cost-analysis compiles
+    (XLA:CPU cost_analysis does not descend into while bodies, so the
+    dry-run extrapolates per-layer costs from unrolled 1- and 2-unit
+    compiles; see roofline/analysis.py)."""
+    kw: dict = {"n_layers": units * layer_unit(cfg), "unroll": True}
+    if cfg.encdec is not None:
+        import dataclasses as _dc
+        kw["encdec"] = _dc.replace(cfg.encdec, n_enc_layers=units)
+    if shape.kind == "decode" and shape.seq_len > 65536:
+        kw["attn_chunk"] = 8192  # keep the unrolled KV scan tractable
+    if cfg.ssm is not None and shape.kind != "decode":
+        # cap unrolled SSD chunk count at ~32/layer (hybrid prefill would
+        # otherwise unroll 128 chunk bodies x 12 layers and stall XLA);
+        # chunk size shifts the intra/inter flop split slightly — noted
+        # in EXPERIMENTS.md §Roofline methodology.
+        kw["ssd_chunk"] = max(cfg.ssd_chunk, shape.seq_len // 32)
+    return cfg.replace(**kw)
+
+
+def target_units(cfg: ArchConfig) -> int:
+    return cfg.n_layers // layer_unit(cfg)
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh, *,
+               interpret: bool = True, cfg_override: ArchConfig | None = None,
+               microbatch_override: int | None = None,
+               policy: str | None = None, grad_comp: str = "none") -> Cell:
+    cfg = cfg_override or get_arch(arch)
+    policy = policy or cfg.parallelism
+    shape = SHAPES[shape_name]
+    n_chips = math.prod(mesh.devices.shape)
+    reason = skip_reason(cfg, shape)
+    if reason:
+        raise ValueError(f"cell skipped: {reason}")
+
+    if shape.kind == "train":
+        mb = microbatch_override or microbatches_for(get_arch(arch), shape, n_chips)
+        params = _abstract_params(cfg)
+        opt = jax.eval_shape(init_opt_state, params)
+        batch = _batch_struct(cfg, shape, train=True)
+        pspec = param_specs(params, mesh, policy)
+        pshard = shardings_of(pspec, mesh)
+        oshard = {
+            "m": pshard, "v": pshard,
+            "step": NamedSharding(mesh, P()),
+        }
+        fn = make_train_step(cfg, AdamWCfg(grad_compression=grad_comp),
+                             microbatches=mb, interpret=interpret)
+        return Cell(
+            arch, shape_name, "train", fn,
+            (params, opt, batch),
+            (pshard, oshard, _batch_shardings(batch, mesh, policy)),
+            donate=(0, 1), microbatches=mb,
+        )
+
+    params = _abstract_params(cfg, dtype=jnp.bfloat16)
+    pshard = shardings_of(param_specs(params, mesh, policy), mesh)
+    b = batch_axes(mesh, policy)
+
+    if shape.kind == "prefill":
+        batch = _batch_struct(cfg, shape, train=False)
+        fn = make_prefill_step(cfg, interpret=interpret)
+        return Cell(
+            arch, shape_name, "prefill", fn,
+            (params, batch),
+            (pshard, _batch_shardings(batch, mesh, policy)),
+            donate=(),
+        )
+
+    # decode / long-context decode
+    GB, S = shape.global_batch, shape.seq_len
+    caches = jax.eval_shape(
+        functools.partial(init_caches, cfg, GB, S, cache_dtype=jnp.bfloat16)
+    )
+    cspecs = cache_specs(mesh, cfg, caches)
+    cshard = jax.tree.map(
+        lambda leaf, sp: sharded(mesh, leaf, sp), caches, cspecs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    token = SDS((GB,), jnp.int32)
+    lengths = SDS((GB,), jnp.int32)
+    fn = make_decode_step(cfg, interpret=interpret)
+    tok_shard = sharded(mesh, token, P(b))
+    return Cell(
+        arch, shape_name, "decode", fn,
+        (params, token, caches, lengths),
+        (pshard, tok_shard, cshard, tok_shard),
+        donate=(2,),
+    )
+
+
+def iter_cells():
+    """All assigned (arch, shape) pairs with skip annotations."""
+    from ..configs import ARCHS
+
+    for arch, cfg in ARCHS.items():
+        for shape_name, shape in SHAPES.items():
+            yield arch, shape_name, skip_reason(cfg, shape)

@@ -1,0 +1,1 @@
+from .lm import decode_step, forward, init_caches, init_params

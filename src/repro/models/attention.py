@@ -1,0 +1,107 @@
+"""GQA attention layer with KV cache, SWA, qk-norm, M-RoPE and cross
+attention.  Cache layout: (B, S_max, KVH, D) per layer (stacked along a
+leading layer axis by the model)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..kernels.flash_attention.ops import attention
+from ..kernels.flash_decode.ops import decode_attention
+from .common import dense_init, rmsnorm, rmsnorm_init
+from .rope import apply_rope
+
+
+def attn_init(key, cfg: ArchConfig, cross: bool = False):
+    d, hd, H, KVH = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, H * hd),
+        "wk": dense_init(ks[1], d, KVH * hd),
+        "wv": dense_init(ks[2], d, KVH * hd),
+        "wo": dense_init(ks[3], H * hd, d, scale=1.0 / jnp.sqrt(H * hd)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd)
+        p["k_norm"] = rmsnorm_init(hd)
+    return p
+
+
+def _project_q(p, x, cfg: ArchConfig):
+    B, S, _ = x.shape
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, S, cfg.n_heads, cfg.hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+    return q
+
+
+def _project_kv(p, x, cfg: ArchConfig):
+    B, S, _ = x.shape
+    k = (x @ p["wk"].astype(x.dtype)).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    if cfg.qk_norm:
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    return k, v
+
+
+def self_attention(p, x, cfg: ArchConfig, *, positions, causal: bool = True,
+                   interpret: bool = True):
+    """Train/prefill path; returns (out, (k, v)) so callers can fill caches."""
+    q = _project_q(p, x, cfg)
+    k, v = _project_kv(p, x, cfg)
+    if cfg.n_heads and cfg.hd:
+        q = apply_rope(q, positions, theta=cfg.rope_theta,
+                       mrope_sections=cfg.mrope_sections)
+        k = apply_rope(k, positions, theta=cfg.rope_theta,
+                       mrope_sections=cfg.mrope_sections)
+    o = attention(
+        q, k, v, causal=causal, window=cfg.window, q_offset=0,
+        impl=cfg.attn_impl, chunk=cfg.attn_chunk, unroll=cfg.unroll,
+        interpret=interpret,
+    )
+    B, S = x.shape[:2]
+    out = o.reshape(B, S, cfg.n_heads * cfg.hd) @ p["wo"].astype(x.dtype)
+    return out, (k, v)
+
+
+def decode_self_attention(p, x_t, cfg: ArchConfig, *, cache_k, cache_v,
+                          lengths, interpret: bool = True):
+    """One-token step.  ``lengths`` counts tokens INCLUDING the new one;
+    the new (k, v) is written at index lengths-1 before attending."""
+    B = x_t.shape[0]
+    x = x_t[:, None]  # (B,1,d)
+    q = _project_q(p, x, cfg)
+    k, v = _project_kv(p, x, cfg)
+    pos = (lengths - 1)[:, None]  # (B,1)
+    rp = pos if cfg.mrope_sections is None else jnp.broadcast_to(pos, (3, B, 1))
+    q = apply_rope(q, rp, theta=cfg.rope_theta, mrope_sections=cfg.mrope_sections)
+    k = apply_rope(k, rp, theta=cfg.rope_theta, mrope_sections=cfg.mrope_sections)
+    bidx = jnp.arange(B)
+    cache_k = cache_k.at[bidx, lengths - 1].set(k[:, 0].astype(cache_k.dtype))
+    cache_v = cache_v.at[bidx, lengths - 1].set(v[:, 0].astype(cache_v.dtype))
+    o = decode_attention(
+        q[:, 0], cache_k.astype(x.dtype), cache_v.astype(x.dtype), lengths,
+        window=cfg.window,
+        impl="chunked" if cfg.attn_impl != "reference" else "reference",
+        chunk=cfg.attn_chunk, unroll=cfg.unroll,
+        interpret=interpret,
+    )
+    out = o.reshape(B, cfg.n_heads * cfg.hd) @ p["wo"].astype(x.dtype)
+    return out, (cache_k, cache_v)
+
+
+def cross_attention(p, x, enc_kv, cfg: ArchConfig, *, interpret: bool = True):
+    """Decoder->encoder attention; enc_kv = (k, v) precomputed once."""
+    B, S, _ = x.shape
+    q = _project_q(p, x, cfg)
+    k, v = enc_kv
+    o = attention(q, k, v, causal=False, impl=cfg.attn_impl,
+                  chunk=cfg.attn_chunk, unroll=cfg.unroll, interpret=interpret)
+    return o.reshape(B, S, cfg.n_heads * cfg.hd) @ p["wo"].astype(x.dtype)
+
+
+def encode_cross_kv(p, enc_out, cfg: ArchConfig):
+    return _project_kv(p, enc_out, cfg)

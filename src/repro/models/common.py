@@ -1,0 +1,62 @@
+"""Functional module primitives (pure pytrees, no framework deps)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "float16": jnp.float16}
+
+
+def dense_init(key, d_in: int, d_out: int, scale: float | None = None):
+    s = scale if scale is not None else (1.0 / jnp.sqrt(d_in))
+    return jax.random.normal(key, (d_in, d_out), jnp.float32) * s
+
+
+def embed_init(key, vocab: int, d: int):
+    return jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+
+
+def rmsnorm_init(d: int):
+    return jnp.ones((d,), jnp.float32)
+
+
+def rmsnorm(x, scale, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def layernorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(x, p, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(-1, keepdims=True)
+    var = ((x32 - mu) ** 2).mean(-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def sinusoidal_positions(seq: int, d: int, offset: int = 0):
+    pos = jnp.arange(offset, offset + seq)[:, None].astype(jnp.float32)
+    dim = jnp.arange(0, d, 2)[None, :].astype(jnp.float32)
+    angle = pos / jnp.power(10000.0, dim / d)
+    pe = jnp.zeros((seq, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(angle))
+    pe = pe.at[:, 1::2].set(jnp.cos(angle))
+    return pe
+
+
+def sinusoidal_at(positions, d: int):
+    """Sinusoidal embedding at traced positions (B,) -> (B, d)."""
+    pos = positions[:, None].astype(jnp.float32)
+    dim = jnp.arange(0, d, 2)[None, :].astype(jnp.float32)
+    angle = pos / jnp.power(10000.0, dim / d)
+    pe = jnp.zeros((positions.shape[0], d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(angle))
+    pe = pe.at[:, 1::2].set(jnp.cos(angle))
+    return pe

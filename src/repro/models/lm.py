@@ -1,0 +1,416 @@
+"""Model assembly for all assigned architectures.
+
+Families: dense / vlm (M-RoPE) / moe / ssm (Mamba2) / hybrid (Zamba2:
+Mamba2 backbone + one shared-weight attention block applied every
+``attn_every`` layers) / encdec (Whisper backbone; the conv/vision
+frontend is a stub — callers pass precomputed frame/patch embeddings).
+
+Layers are *scanned* with stacked parameters (keeps HLO size independent
+of depth — essential for the 88-layer dry-runs), with per-block remat.
+
+Entry points:
+  init_params(key, cfg)                  -> param pytree (f32 masters)
+  forward(params, batch, cfg, mode)      -> logits[, caches][, aux]
+  init_caches(cfg, batch, max_seq)       -> decode cache pytree
+  decode_step(params, token, caches, lengths, cfg) -> logits, caches
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ArchConfig
+from ..distributed.ctx import constrain
+from .attention import (attn_init, cross_attention, decode_self_attention,
+                        encode_cross_kv, self_attention)
+from .common import DTYPES, dense_init, embed_init, layernorm, layernorm_init, rmsnorm, rmsnorm_init, sinusoidal_positions
+from .mlp import gelu_mlp, gelu_mlp_init, swiglu, swiglu_init
+from .moe import moe_ffn, moe_init
+from .ssm import (mamba_cache_init, mamba_decode_step, mamba_forward,
+                  mamba_init)
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _block_init(key, cfg: ArchConfig, kind: str):
+    ks = jax.random.split(key, 4)
+    if kind == "dense":
+        return {
+            "ln1": rmsnorm_init(cfg.d_model),
+            "attn": attn_init(ks[0], cfg),
+            "ln2": rmsnorm_init(cfg.d_model),
+            "mlp": swiglu_init(ks[1], cfg.d_model, cfg.d_ff),
+        }
+    if kind == "moe":
+        return {
+            "ln1": rmsnorm_init(cfg.d_model),
+            "attn": attn_init(ks[0], cfg),
+            "ln2": rmsnorm_init(cfg.d_model),
+            "moe": moe_init(ks[1], cfg),
+        }
+    if kind == "ssm":
+        return {"ln1": rmsnorm_init(cfg.d_model), "mamba": mamba_init(ks[0], cfg)}
+    if kind == "enc":
+        return {
+            "ln1": layernorm_init(cfg.d_model),
+            "attn": attn_init(ks[0], cfg),
+            "ln2": layernorm_init(cfg.d_model),
+            "mlp": gelu_mlp_init(ks[1], cfg.d_model, cfg.d_ff),
+        }
+    if kind == "dec":
+        return {
+            "ln1": layernorm_init(cfg.d_model),
+            "self_attn": attn_init(ks[0], cfg),
+            "ln2": layernorm_init(cfg.d_model),
+            "cross_attn": attn_init(ks[1], cfg),
+            "ln3": layernorm_init(cfg.d_model),
+            "mlp": gelu_mlp_init(ks[2], cfg.d_model, cfg.d_ff),
+        }
+    raise ValueError(kind)
+
+
+def _stacked_init(key, cfg: ArchConfig, kind: str, n: int):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: _block_init(k, cfg, kind))(keys)
+
+
+def init_params(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 8)
+    p: dict[str, Any] = {
+        "embed": embed_init(ks[0], cfg.vocab, cfg.d_model),
+        "final_norm": rmsnorm_init(cfg.d_model)
+        if cfg.family != "encdec" else layernorm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[1], cfg.d_model, cfg.vocab)
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        p["blocks"] = _stacked_init(ks[2], cfg, "dense", cfg.n_layers)
+    elif fam == "moe":
+        p["blocks"] = _stacked_init(ks[2], cfg, "moe", cfg.n_layers)
+    elif fam == "ssm":
+        p["blocks"] = _stacked_init(ks[2], cfg, "ssm", cfg.n_layers)
+    elif fam == "hybrid":
+        p["blocks"] = _stacked_init(ks[2], cfg, "ssm", cfg.n_layers)
+        p["shared_attn"] = _block_init(ks[3], cfg, "dense")
+    elif fam == "encdec":
+        p["enc_blocks"] = _stacked_init(ks[2], cfg, "enc", cfg.encdec.n_enc_layers)
+        p["blocks"] = _stacked_init(ks[3], cfg, "dec", cfg.n_layers)
+        p["enc_norm"] = layernorm_init(cfg.d_model)
+    else:
+        raise ValueError(fam)
+    return p
+
+
+# --------------------------------------------------------------------------
+# block applications (sequence path)
+# --------------------------------------------------------------------------
+
+def _remat(fn, cfg: ArchConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.checkpoint_dots
+    else:
+        pol = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=pol)
+
+
+def _dense_block(bp, x, cfg: ArchConfig, positions, causal, interpret):
+    h, kv = self_attention(bp["attn"], rmsnorm(x, bp["ln1"], cfg.norm_eps), cfg,
+                           positions=positions, causal=causal,
+                           interpret=interpret)
+    x = x + h
+    x = x + swiglu(bp["mlp"], rmsnorm(x, bp["ln2"], cfg.norm_eps))
+    return x, kv
+
+
+def _moe_block(bp, x, cfg: ArchConfig, positions, interpret):
+    h, kv = self_attention(bp["attn"], rmsnorm(x, bp["ln1"], cfg.norm_eps), cfg,
+                           positions=positions, causal=True,
+                           interpret=interpret)
+    x = x + h
+    y, aux = moe_ffn(bp["moe"], rmsnorm(x, bp["ln2"], cfg.norm_eps), cfg)
+    return x + y, kv, aux
+
+
+def _ssm_block(bp, x, cfg: ArchConfig, interpret):
+    return x + mamba_forward(bp["mamba"], rmsnorm(x, bp["ln1"], cfg.norm_eps),
+                             cfg, interpret=interpret)
+
+
+def _enc_block(bp, x, cfg: ArchConfig, positions, interpret):
+    h, _ = self_attention(bp["attn"], layernorm(x, bp["ln1"], cfg.norm_eps), cfg,
+                          positions=positions, causal=False, interpret=interpret)
+    x = x + h
+    return x + gelu_mlp(bp["mlp"], layernorm(x, bp["ln2"], cfg.norm_eps))
+
+
+def _dec_block(bp, x, enc_out, cfg: ArchConfig, positions, interpret):
+    h, kv = self_attention(bp["self_attn"], layernorm(x, bp["ln1"], cfg.norm_eps),
+                           cfg, positions=positions, causal=True,
+                           interpret=interpret)
+    x = x + h
+    enc_kv = encode_cross_kv(bp["cross_attn"], enc_out, cfg)
+    x = x + cross_attention(bp["cross_attn"], layernorm(x, bp["ln2"], cfg.norm_eps),
+                            enc_kv, cfg, interpret=interpret)
+    x = x + gelu_mlp(bp["mlp"], layernorm(x, bp["ln3"], cfg.norm_eps))
+    return x, kv, enc_kv
+
+
+# --------------------------------------------------------------------------
+# forward (train / prefill)
+# --------------------------------------------------------------------------
+
+def _compute_dtype(cfg: ArchConfig):
+    return DTYPES[cfg.dtype]
+
+
+def _cast(tree, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype) if x.dtype == jnp.float32 else x, tree)
+
+
+def forward(params, batch: dict, cfg: ArchConfig, *, mode: str = "train",
+            interpret: bool = True):
+    """batch: tokens (B,S) int32 [+ positions, enc_frames].
+
+    Returns dict with 'logits' and (prefill) 'caches', plus 'aux' for MoE.
+    """
+    dt = _compute_dtype(cfg)
+    if cfg.cast_once:
+        # bf16-cast the (sharded) masters once, outside the layer scan:
+        # per-layer FSDP gathers then move bf16 (§Perf hillclimb 1)
+        params = _cast(params, dt)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = constrain(params["embed"].astype(dt)[tokens], "b", None, "m")
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        if cfg.mrope_sections is not None:
+            positions = jnp.broadcast_to(positions[None], (3, B, S))
+    collect = mode == "prefill"
+    aux_total = jnp.zeros((), jnp.float32)
+    fam = cfg.family
+
+    if fam in ("dense", "vlm"):
+        def body(carry, bp):
+            y, kv = _dense_block(_cast(bp, dt), carry, cfg, positions, True, interpret)
+            return constrain(y, "b", None, "m"), kv if collect else None
+        x, kvs = lax.scan(_remat(body, cfg), x, params["blocks"], unroll=cfg.unroll)
+        caches = kvs
+    elif fam == "moe":
+        def body(carry, bp):
+            y, kv, aux = _moe_block(_cast(bp, dt), carry[0], cfg, positions, interpret)
+            return (constrain(y, "b", None, "m"), carry[1] + aux), kv if collect else None
+        (x, aux_total), kvs = lax.scan(_remat(body, cfg), (x, aux_total), params["blocks"], unroll=cfg.unroll)
+        caches = kvs
+    elif fam == "ssm":
+        def body(carry, bp):
+            return constrain(_ssm_block(_cast(bp, dt), carry, cfg, interpret),
+                             "b", None, "m"), None
+        x, _ = lax.scan(_remat(body, cfg), x, params["blocks"], unroll=cfg.unroll)
+        caches = None
+    elif fam == "hybrid":
+        every = cfg.hybrid.attn_every
+        groups = cfg.n_layers // every
+        stacked = jax.tree.map(
+            lambda a: a.reshape((groups, every) + a.shape[1:]), params["blocks"]
+        )
+        shared = _cast(params["shared_attn"], dt)
+
+        def group_body(carry, gp):
+            def inner(c, bp):
+                return _ssm_block(_cast(bp, dt), c, cfg, interpret), None
+            y, _ = lax.scan(inner, carry, gp, unroll=cfg.unroll)
+            y, kv = _dense_block(shared, y, cfg, positions, True, interpret)
+            return constrain(y, "b", None, "m"), kv if collect else None
+        x, kvs = lax.scan(_remat(group_body, cfg), x, stacked, unroll=cfg.unroll)
+        caches = kvs
+    elif fam == "encdec":
+        enc_x = batch["enc_frames"].astype(dt)  # stub frontend embeddings
+        Se = enc_x.shape[1]
+        enc_x = enc_x + sinusoidal_positions(Se, cfg.d_model).astype(dt)[None]
+        enc_pos = jnp.broadcast_to(jnp.arange(Se)[None], (enc_x.shape[0], Se))
+
+        def ebody(carry, bp):
+            return constrain(_enc_block(_cast(bp, dt), carry, cfg, enc_pos, interpret),
+                             "b", None, "m"), None
+        enc_out, _ = lax.scan(_remat(ebody, cfg), enc_x, params["enc_blocks"], unroll=cfg.unroll)
+        enc_out = layernorm(enc_out, params["enc_norm"], cfg.norm_eps)
+        x = x + sinusoidal_positions(S, cfg.d_model).astype(dt)[None]
+
+        def dbody(carry, bp):
+            y, kv, enc_kv = _dec_block(_cast(bp, dt), carry, enc_out, cfg,
+                                       positions, interpret)
+            return constrain(y, "b", None, "m"), (kv, enc_kv) if collect else None
+        x, kvs = lax.scan(_remat(dbody, cfg), x, params["blocks"], unroll=cfg.unroll)
+        caches = kvs
+    else:
+        raise ValueError(fam)
+
+    if fam == "encdec":
+        x = layernorm(x, params["final_norm"], cfg.norm_eps)
+    else:
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head", None)
+    if head is None:
+        head = params["embed"].T
+    logits = constrain((x @ head.astype(dt)).astype(jnp.float32), "b", None, "m")
+    out = {"logits": logits, "aux": aux_total}
+    if collect:
+        out["caches"] = caches
+    return out
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+
+def init_caches(cfg: ArchConfig, batch: int, max_seq: int,
+                cache_dtype=jnp.bfloat16, enc_seq: int | None = None):
+    fam = cfg.family
+    L = cfg.n_layers
+    kvshape = (L, batch, max_seq, cfg.n_kv_heads, cfg.hd)
+    if fam in ("dense", "vlm", "moe"):
+        return {"k": jnp.zeros(kvshape, cache_dtype),
+                "v": jnp.zeros(kvshape, cache_dtype)}
+    if fam == "ssm":
+        one = mamba_cache_init(cfg, batch, cache_dtype)
+        return jax.tree.map(
+            lambda a: jnp.zeros((L,) + a.shape, a.dtype), one
+        )
+    if fam == "hybrid":
+        groups = L // cfg.hybrid.attn_every
+        one = mamba_cache_init(cfg, batch, cache_dtype)
+        return {
+            "ssm": jax.tree.map(lambda a: jnp.zeros((L,) + a.shape, a.dtype), one),
+            "k": jnp.zeros((groups, batch, max_seq, cfg.n_kv_heads, cfg.hd), cache_dtype),
+            "v": jnp.zeros((groups, batch, max_seq, cfg.n_kv_heads, cfg.hd), cache_dtype),
+        }
+    if fam == "encdec":
+        se = enc_seq or cfg.encdec.enc_seq
+        return {
+            "k": jnp.zeros(kvshape, cache_dtype),
+            "v": jnp.zeros(kvshape, cache_dtype),
+            "cross_k": jnp.zeros((L, batch, se, cfg.n_kv_heads, cfg.hd), cache_dtype),
+            "cross_v": jnp.zeros((L, batch, se, cfg.n_kv_heads, cfg.hd), cache_dtype),
+            "enc_len": jnp.zeros((batch,), jnp.int32),
+        }
+    raise ValueError(fam)
+
+
+def decode_step(params, token, caches, lengths, cfg: ArchConfig, *,
+                interpret: bool = True):
+    """token (B,) int32; lengths (B,) includes the new token.
+    Returns (logits (B,V), new caches)."""
+    dt = _compute_dtype(cfg)
+    B = token.shape[0]
+    x = params["embed"].astype(dt)[token]  # (B,d)
+    fam = cfg.family
+
+    if fam in ("dense", "vlm", "moe"):
+        def body(carry, xs):
+            bp, ck, cv = xs
+            bp = _cast(bp, dt)
+            h = rmsnorm(carry, bp["ln1"], cfg.norm_eps)
+            h, (ck, cv) = decode_self_attention(bp["attn"], h, cfg, cache_k=ck,
+                                                cache_v=cv, lengths=lengths,
+                                                interpret=interpret)
+            y = carry + h
+            hy = rmsnorm(y, bp["ln2"], cfg.norm_eps)[:, None]
+            if fam == "moe":
+                ff, _ = moe_ffn(bp["moe"], hy, cfg)
+            else:
+                ff = swiglu(bp["mlp"], hy)
+            return y + ff[:, 0], (ck, cv)
+        x, (ks, vs) = lax.scan(body, x, (params["blocks"], caches["k"], caches["v"]), unroll=cfg.unroll)
+        new_caches = {"k": ks, "v": vs}
+    elif fam == "ssm":
+        def body(carry, xs):
+            bp, c = xs
+            bp = _cast(bp, dt)
+            h = rmsnorm(carry, bp["ln1"], cfg.norm_eps)
+            h, c = mamba_decode_step(bp["mamba"], h, c, cfg)
+            return carry + h, c
+        x, new_caches = lax.scan(body, x, (params["blocks"], caches), unroll=cfg.unroll)
+    elif fam == "hybrid":
+        every = cfg.hybrid.attn_every
+        groups = cfg.n_layers // every
+        stacked = jax.tree.map(
+            lambda a: a.reshape((groups, every) + a.shape[1:]), params["blocks"]
+        )
+        sc = jax.tree.map(
+            lambda a: a.reshape((groups, every) + a.shape[1:]), caches["ssm"]
+        )
+        shared = _cast(params["shared_attn"], dt)
+
+        def gbody(carry, xs):
+            gp, gc, ck, cv = xs
+            def inner(c2, xs2):
+                bp, cc = xs2
+                bp = _cast(bp, dt)
+                h = rmsnorm(c2, bp["ln1"], cfg.norm_eps)
+                h, cc = mamba_decode_step(bp["mamba"], h, cc, cfg)
+                return c2 + h, cc
+            y, gc = lax.scan(inner, carry, (gp, gc), unroll=cfg.unroll)
+            h = rmsnorm(y, shared["ln1"], cfg.norm_eps)
+            h, (ck, cv) = decode_self_attention(shared["attn"], h, cfg, cache_k=ck,
+                                                cache_v=cv, lengths=lengths,
+                                                interpret=interpret)
+            y = y + h
+            y = y + swiglu(shared["mlp"], rmsnorm(y, shared["ln2"], cfg.norm_eps)[:, None])[:, 0]
+            return y, (gc, ck, cv)
+        x, (scs, ks, vs) = lax.scan(gbody, x, (stacked, sc, caches["k"], caches["v"]), unroll=cfg.unroll)
+        new_caches = {
+            "ssm": jax.tree.map(
+                lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]), scs
+            ),
+            "k": ks, "v": vs,
+        }
+    elif fam == "encdec":
+        from .common import sinusoidal_at
+        x = x + sinusoidal_at(lengths - 1, cfg.d_model).astype(dt)
+
+        def body(carry, xs):
+            bp, ck, cv, xk, xv = xs
+            bp = _cast(bp, dt)
+            h = layernorm(carry, bp["ln1"], cfg.norm_eps)
+            h, (ck, cv) = decode_self_attention(bp["self_attn"], h, cfg, cache_k=ck,
+                                                cache_v=cv, lengths=lengths,
+                                                interpret=interpret)
+            y = carry + h
+            h = layernorm(y, bp["ln2"], cfg.norm_eps)[:, None]
+            h = cross_attention(bp["cross_attn"], h,
+                                (xk.astype(dt), xv.astype(dt)), cfg,
+                                interpret=interpret)
+            y = y + h[:, 0]
+            y = y + gelu_mlp(bp["mlp"], layernorm(y, bp["ln3"], cfg.norm_eps)[:, None])[:, 0]
+            return y, (ck, cv)
+        x, (ks, vs) = lax.scan(
+            body, x,
+            (params["blocks"], caches["k"], caches["v"],
+             caches["cross_k"], caches["cross_v"]),
+            unroll=cfg.unroll,
+        )
+        new_caches = dict(caches)
+        new_caches["k"] = ks
+        new_caches["v"] = vs
+    else:
+        raise ValueError(fam)
+
+    if fam == "encdec":
+        x = layernorm(x, params["final_norm"], cfg.norm_eps)
+    else:
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head", None)
+    if head is None:
+        head = params["embed"].T
+    logits = constrain((x @ head.astype(dt)).astype(jnp.float32), "b", "m")
+    return logits, new_caches

@@ -1,0 +1,35 @@
+"""Dense feed-forward blocks: SwiGLU (LLaMA-family) and GELU (whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, silu
+
+
+def swiglu_init(key, d: int, ff: int):
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], d, ff),
+        "w_up": dense_init(ks[1], d, ff),
+        "w_down": dense_init(ks[2], ff, d, scale=1.0 / jnp.sqrt(ff)),
+    }
+
+
+def swiglu(p, x):
+    g = silu(x @ p["w_gate"].astype(x.dtype))
+    u = x @ p["w_up"].astype(x.dtype)
+    return (g * u) @ p["w_down"].astype(x.dtype)
+
+
+def gelu_mlp_init(key, d: int, ff: int):
+    ks = jax.random.split(key, 2)
+    return {
+        "w_in": dense_init(ks[0], d, ff),
+        "w_out": dense_init(ks[1], ff, d, scale=1.0 / jnp.sqrt(ff)),
+    }
+
+
+def gelu_mlp(p, x):
+    h = jax.nn.gelu(x @ p["w_in"].astype(x.dtype))
+    return h @ p["w_out"].astype(x.dtype)

@@ -1,0 +1,96 @@
+"""Top-k MoE with per-sequence sort-based dispatch.
+
+Routing is data-dependent gather/scatter — outside the HFAV static
+dataflow model (DESIGN.md §Arch-applicability) — so the dispatch is
+implemented directly: tokens are routed *within each sequence* (local
+routing), which keeps every dispatch op batch-local.  Under pjit the
+batch axis is sharded over `data`, so dispatch needs no cross-device
+collectives; expert weights are sharded over `model` on the expert FFN
+dim (TP) and over `data` for FSDP.  Expert compute is a grouped matmul
+``(B, E, C, d) x (E, d, f)``.
+
+Capacity per sequence C = ceil(S * top_k / E * capacity_factor); dropped
+tokens (beyond capacity) simply contribute nothing (standard
+capacity-dropping semantics).  The auxiliary load-balance loss follows
+Switch Transformer."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .common import dense_init, silu
+
+
+def moe_init(key, cfg: ArchConfig):
+    m = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    E, f = m.n_experts, m.d_ff_expert
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(f)
+    return {
+        "router": dense_init(ks[0], d, E),
+        "w_gate": jax.random.normal(ks[1], (E, d, f), jnp.float32) * s_in,
+        "w_up": jax.random.normal(ks[2], (E, d, f), jnp.float32) * s_in,
+        "w_down": jax.random.normal(ks[3], (E, f, d), jnp.float32) * s_out,
+    }
+
+
+def capacity(seq: int, cfg: ArchConfig) -> int:
+    m = cfg.moe
+    c = int(math.ceil(seq * m.top_k / m.n_experts * m.capacity_factor))
+    return max(4, min(c, seq * m.top_k))
+
+
+def moe_ffn(p, x, cfg: ArchConfig):
+    """x: (B, S, d) -> (y, aux_loss)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    E, K = m.n_experts, m.top_k
+    C = capacity(S, cfg)
+
+    logits = (x @ p["router"].astype(x.dtype)).astype(jnp.float32)  # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_i = jax.lax.top_k(probs, K)  # (B,S,K)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance auxiliary loss.
+    me = probs.mean(axis=(0, 1))  # (E,)
+    ce = jax.nn.one_hot(gate_i[..., 0], E).mean(axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+
+    # ---- per-sequence sort-based dispatch (batch-local) -------------------
+    flat_e = gate_i.reshape(B, S * K)  # expert id per (token, slot)
+    flat_w = gate_w.reshape(B, S * K)
+    order = jnp.argsort(flat_e, axis=1, stable=True)  # (B, S*K)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    sorted_w = jnp.take_along_axis(flat_w, order, axis=1)
+    tok = order // K  # source token per slot
+
+    counts = jax.nn.one_hot(flat_e, E, dtype=jnp.int32).sum(axis=1)  # (B,E)
+    offs = jnp.cumsum(counts, axis=1) - counts  # exclusive
+    pos = jnp.arange(S * K)[None, :] - jnp.take_along_axis(offs, sorted_e, axis=1)
+    keep = pos < C
+    dest = sorted_e * C + jnp.clip(pos, 0, C - 1)  # (B, S*K) in [0, E*C)
+
+    xs = jnp.take_along_axis(x, tok[..., None], axis=1)  # (B, S*K, d)
+    xs = jnp.where(keep[..., None], xs, 0)
+    # one trash slot at the end absorbs dropped tokens
+    buf = jnp.zeros((B, E * C + 1, d), x.dtype)
+    bidx = jnp.arange(B)[:, None]
+    buf = buf.at[bidx, jnp.where(keep, dest, E * C)].add(xs)
+
+    h = buf[:, : E * C].reshape(B, E, C, d)
+    g = silu(jnp.einsum("becd,edf->becf", h, p["w_gate"].astype(x.dtype)))
+    u = jnp.einsum("becd,edf->becf", h, p["w_up"].astype(x.dtype))
+    y = jnp.einsum("becf,efd->becd", g * u, p["w_down"].astype(x.dtype))
+    y = y.reshape(B, E * C, d)
+
+    gathered = jnp.take_along_axis(y, dest[..., None], axis=1)  # (B,S*K,d)
+    contrib = gathered * (sorted_w * keep)[..., None].astype(x.dtype)
+    out = jnp.zeros_like(x)
+    out = out.at[bidx, tok].add(contrib)
+    return out, aux

@@ -1,0 +1,42 @@
+"""Rotary position embeddings, including Qwen2-VL's multimodal M-RoPE.
+
+M-RoPE splits the (half) head dimension into sections, each rotated by a
+different position component (temporal / height / width).  The stub
+modality frontend supplies the (3, B, S) position tensor; pure-text runs
+use identical components."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2).astype(jnp.float32) / head_dim))
+
+
+def _rotate(x, cos, sin):
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(x, positions, *, theta: float = 1e4,
+               mrope_sections: tuple[int, ...] | None = None):
+    """x: (B, S, H, D); positions: (B, S) or (3, B, S) for M-RoPE."""
+    D = x.shape[-1]
+    half = D // 2
+    freqs = rope_freqs(D, theta)  # (half,)
+    if mrope_sections is None:
+        if positions.ndim == 3:
+            positions = positions[0]
+        ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,half)
+    else:
+        assert positions.ndim == 3 and sum(mrope_sections) == half
+        parts = []
+        start = 0
+        for comp, sec in enumerate(mrope_sections):
+            f = freqs[start:start + sec]
+            parts.append(positions[comp][..., None].astype(jnp.float32) * f)
+            start += sec
+        ang = jnp.concatenate(parts, axis=-1)  # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)

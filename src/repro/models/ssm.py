@@ -1,0 +1,117 @@
+"""Mamba2 block: in-proj -> causal depthwise conv -> SSD -> gated out-proj.
+
+The sequence path uses the chunked SSD scan (kernels/ssd) — the HFAV
+contraction of the SSM state stream.  Decode keeps O(1) state per layer:
+a (conv_width-1) rolling input window plus the (H, N, P) SSM state, which
+is what makes the 500k-context decode shape tractable for SSM/hybrid
+architectures."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..kernels.ssd.ops import ssd
+from .common import dense_init, rmsnorm, rmsnorm_init, silu
+
+
+def mamba_init(key, cfg: ArchConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    H = s.n_heads(d)
+    N = s.d_state
+    ks = jax.random.split(key, 5)
+    # in_proj emits [z (di), x (di), B (N), C (N), dt (H)]
+    return {
+        "w_in": dense_init(ks[0], d, 2 * di + 2 * N + H),
+        "conv_w": jax.random.normal(ks[1], (s.conv_width, di), jnp.float32) * 0.2,
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "norm": rmsnorm_init(di),
+        "w_out": dense_init(ks[4], di, d),
+    }
+
+
+def _split(p, proj, cfg: ArchConfig):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    H = s.n_heads(cfg.d_model)
+    N = s.d_state
+    z, xbc = jnp.split(proj, [di], axis=-1)
+    x, b, c, dt = jnp.split(xbc, [di, di + N, di + 2 * N], axis=-1)
+    return z, x, b, c, dt
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv over (B, S, C) with taps (W, C)."""
+    W = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for t in range(W):  # W is tiny (4); unrolled taps keep HLO simple
+        out = out + pad[:, t:t + x.shape[1], :] * w[t]
+    return out + b
+
+
+def mamba_forward(p, x, cfg: ArchConfig, *, impl: str | None = None,
+                  interpret: bool = True):
+    """Sequence path (train/prefill). Returns (y, final_state_cache)."""
+    s = cfg.ssm
+    B, S, _ = x.shape
+    di = s.d_inner(cfg.d_model)
+    H = s.n_heads(cfg.d_model)
+    P = s.head_dim
+    proj = x @ p["w_in"].astype(x.dtype)
+    z, xs, bm, cm, dt = _split(p, proj, cfg)
+    xs = silu(_causal_conv(xs, p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype)))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["a_log"])
+    y = ssd(
+        xs.reshape(B, S, H, P), dt, A,
+        bm.astype(jnp.float32), cm.astype(jnp.float32), p["d_skip"],
+        chunk=cfg.ssd_chunk,
+        impl=impl or ("chunked" if cfg.attn_impl != "reference" else "reference"),
+        unroll=cfg.unroll, interpret=interpret,
+    ).reshape(B, S, di)
+    y = rmsnorm(y * silu(z), p["norm"], cfg.norm_eps)
+    return y @ p["w_out"].astype(x.dtype)
+
+
+def mamba_cache_init(cfg: ArchConfig, batch: int, dtype):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    H = s.n_heads(d)
+    return {
+        "conv": jnp.zeros((batch, s.conv_width - 1, di), dtype),
+        "state": jnp.zeros((batch, H, s.d_state, s.head_dim), jnp.float32),
+    }
+
+
+def mamba_decode_step(p, x_t, cache, cfg: ArchConfig):
+    """One-token recurrence: O(1) state update."""
+    s = cfg.ssm
+    B = x_t.shape[0]
+    di = s.d_inner(cfg.d_model)
+    H = s.n_heads(cfg.d_model)
+    P = s.head_dim
+    proj = x_t @ p["w_in"].astype(x_t.dtype)  # (B, ...)
+    z, xs, bm, cm, dt = _split(p, proj, cfg)
+    # rolling conv window
+    win = jnp.concatenate([cache["conv"], xs[:, None]], axis=1)  # (B, W, di)
+    w = p["conv_w"].astype(x_t.dtype)
+    xc = silu((win * w[None]).sum(axis=1) + p["conv_b"].astype(x_t.dtype))
+    new_conv = win[:, 1:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["a_log"])
+    a = jnp.exp(dt * A)  # (B,H)
+    xh = xc.reshape(B, H, P).astype(jnp.float32)
+    upd = dt[..., None, None] * bm.astype(jnp.float32)[:, None, :, None] * xh[:, :, None, :]
+    state = a[..., None, None] * cache["state"] + upd
+    y = jnp.einsum("bn,bhnp->bhp", cm.astype(jnp.float32), state)
+    y = y + p["d_skip"][None, :, None] * xh
+    y = y.reshape(B, di).astype(x_t.dtype)
+    y = rmsnorm(y * silu(z), p["norm"], cfg.norm_eps)
+    return y @ p["w_out"].astype(x_t.dtype), {"conv": new_conv, "state": state}

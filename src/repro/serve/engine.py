@@ -1,0 +1,58 @@
+"""Serving steps: prefill (cache build, last-token logits) and decode
+(one token per sequence against the cache).
+
+Prefill returns logits for the *last* position only — materializing
+(B, S, V) logits at 32k prefill would be ~100 TB for the large vocabs.
+Decode follows vLLM-style semantics: lengths include the new token, the
+KV write lands at ``lengths - 1`` before attending."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models import decode_step as _decode_step
+from ..models import forward, init_caches
+
+
+def make_prefill_step(cfg: ArchConfig, *, interpret: bool = True):
+    def prefill_step(params, batch):
+        out = forward(params, batch, cfg, mode="prefill", interpret=interpret)
+        last = out["logits"][:, -1]
+        return last, out.get("caches")
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, *, interpret: bool = True):
+    def serve_step(params, token, caches, lengths):
+        return _decode_step(params, token, caches, lengths, cfg,
+                            interpret=interpret)
+
+    return serve_step
+
+
+def greedy_decode(params, cfg: ArchConfig, prompt, steps: int, max_seq: int,
+                  *, interpret: bool = True, cache_dtype=jnp.float32):
+    """Runnable small-scale driver: sequential decode from a prompt.
+    Used by examples/serve_lm.py and the serving integration test."""
+    B, S0 = prompt.shape
+    caches = init_caches(cfg, B, max_seq, cache_dtype=cache_dtype)
+    step = make_decode_step(cfg, interpret=interpret)
+    lengths = jnp.zeros((B,), jnp.int32)
+    tokens = []
+    tok = prompt[:, 0]
+    # feed the prompt one token at a time (exercises the decode path)
+    for t in range(S0):
+        lengths = lengths + 1
+        logits, caches = step(params, prompt[:, t], caches, lengths)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    tokens.append(tok)
+    for _ in range(steps - 1):
+        lengths = lengths + 1
+        logits, caches = step(params, tok, caches, lengths)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        tokens.append(tok)
+    return jnp.stack(tokens, axis=1)

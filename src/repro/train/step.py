@@ -1,0 +1,80 @@
+"""Training step: loss, grads, AdamW update — pjit-ready.
+
+Mixed precision: f32 master params, ``cfg.dtype`` compute (cast inside
+the model), f32 logits/loss/optimizer.  Microbatch gradient accumulation
+folds into a ``lax.scan`` over microbatches (keeps the HLO small).
+MoE auxiliary load-balance loss is added with a fixed coefficient."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models import forward
+from ..optim.adamw import AdamWCfg, adamw_update, compress_grads
+
+AUX_COEF = 0.01
+
+
+def cross_entropy(logits, targets):
+    """logits (B,S,V) f32 (possibly vocab-sharded), targets (B,S) int32."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return (lse - gold).mean()
+
+
+def loss_fn(params, batch, cfg: ArchConfig, *, interpret: bool = True):
+    out = forward(params, batch, cfg, mode="train", interpret=interpret)
+    logits = out["logits"]
+    loss = cross_entropy(logits[:, :-1], batch["targets"][:, 1:])
+    loss = loss + AUX_COEF * out["aux"]
+    return loss, {"loss": loss, "aux": out["aux"]}
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: AdamWCfg, *,
+                    microbatches: int = 1, interpret: bool = True):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    grad_fn = jax.value_and_grad(
+        functools.partial(loss_fn, cfg=cfg, interpret=interpret), has_aux=True
+    )
+
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            B = batch["tokens"].shape[0]
+            mb = B // microbatches
+
+            def split(key, x):
+                # M-RoPE positions carry batch on axis 1: (3, B, S)
+                ax = 1 if key == "positions" else 0
+                x = jnp.moveaxis(x, ax, 0)
+                x = x.reshape((microbatches, mb) + x.shape[1:])
+                return jnp.moveaxis(x, 1, ax + 1)
+
+            mbatches = {k: split(k, v) for k, v in batch.items()}
+            zero = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+            def acc_step(carry, mbatch):
+                g_acc, l_acc = carry
+                (loss, aux), g = grad_fn(params, mbatch)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + loss), None
+
+            (grads, loss_sum), _ = jax.lax.scan(
+                acc_step, (zero, jnp.zeros(())), mbatches, unroll=cfg.unroll
+            )
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss_sum / microbatches
+            metrics = {"loss": loss}
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+        grads = compress_grads(grads, opt_cfg.grad_compression)
+        params, opt_state, om = adamw_update(opt_cfg, params, grads, opt_state)
+        metrics = dict(metrics)
+        metrics.update(om)
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,114 @@
+"""Engine behaviour pinned to the paper's worked examples:
+
+* Laplace fuses to one nest (Fig. 2 pipeline);
+* normalization fuses to exactly TWO nests with the reduction's finalize
+  in the first nest's epilogue and the flux intermediate materialized
+  across the split (§5.2: "five to two");
+* COSMO fuses to one nest with 2-row rolling buffers for the Laplacian
+  and y-flux (tighter than the paper's 3+2 thanks to exact leads);
+* hydro fuses all seven kernels into one nest with zero materialized
+  intermediates (§5.4);
+* inference errors: multiple producers, unreachable goals.
+"""
+import pytest
+
+from repro.core import (InferenceError, Program, analyze_storage, axiom,
+                        build_dataflow, fuse_inest_dag, goal, infer, kernel)
+from repro.core.programs import (cosmo_program, hydro1d_program,
+                                 laplace5_program, normalization_program)
+from repro.core.reuse import reuse_graph, reuse_order
+
+
+def pipeline(prog):
+    idag = infer(prog)
+    dag = build_dataflow(idag)
+    sched = fuse_inest_dag(dag)
+    plan = analyze_storage(sched)
+    return idag, dag, sched, plan
+
+
+def test_laplace_single_nest():
+    idag, dag, sched, plan = pipeline(laplace5_program())
+    assert sched.n_toplevel() == 1
+    # 5 loads grouped into one callsite group
+    loads = [g for g in dag.groups if g.kind == "load"]
+    assert len(loads) == 1 and len(loads[0].instances) == 5
+
+
+def test_normalization_two_nests_and_split():
+    idag, dag, sched, plan = pipeline(normalization_program())
+    assert sched.n_toplevel() == 2, "reduction->broadcast must split"
+    # finalize (norm_root) fused into the FIRST nest's epilogue
+    first = sched.nests[0]
+    eplg = first.phase_groups("epilogue")
+    by_id = {g.gid: g for g in dag.groups}
+    assert any(by_id[g].name == "norm_root" for g in eplg)
+    # flux crosses the split -> materialized in full
+    kinds = {p.name: p.kind for p in plan.vars.values()}
+    assert kinds["flux_u"] == "full"
+    assert kinds["fluxsq_u"] == "row"  # consumed in-nest only
+
+
+def test_cosmo_rolling_buffers():
+    _, _, sched, plan = pipeline(cosmo_program())
+    assert sched.n_toplevel() == 1
+    kinds = {p.name: (p.kind, p.stages) for p in plan.vars.values()}
+    assert kinds["ulap_u"] == ("rolling", 2)
+    assert kinds["fy_u"] == ("rolling", 2)
+    assert kinds["fx_u"][0] == "row"
+
+
+def test_hydro_full_fusion_zero_intermediates():
+    _, dag, sched, plan = pipeline(hydro1d_program())
+    assert sched.n_toplevel() == 1
+    for p in plan.vars.values():
+        assert p.kind in ("external_in", "external_out", "row"), p.name
+
+
+def test_reuse_order_matches_paper_fig8():
+    # 5-point stencil, (j, i) progression: first touch (j+1,i), last (j-1,i)
+    offsets = {(0, 0), (1, 0), (-1, 0), (0, 1), (0, -1)}
+    order = reuse_order(("j", "i"), offsets, ("j", "i"))
+    assert order == [(1, 0), (0, 1), (0, 0), (0, -1), (-1, 0)]
+    verts, edges, path = reuse_graph(("j", "i"), offsets, ("j", "i"))
+    # transitive tournament: the longest path covers all vertices in order
+    assert path == order and len(edges) == 10
+
+
+def test_single_producer_violation():
+    k1 = kernel("k1", [("a", "u[i?]")], [("o", "v(u[i?])")], fn=lambda a: a)
+    k2 = kernel("k2", [("a", "u[i?]")], [("o", "v(u[i?])")], fn=lambda a: a)
+    prog = Program(
+        rules=[k1, k2],
+        axioms=[axiom("u[i?]", i="Ni")],
+        goals=[goal("v(u[i])", i=("Ni", 0, 0))],
+        loop_order=("i",),
+    )
+    with pytest.raises(InferenceError):
+        infer(prog)
+
+
+def test_unreachable_goal():
+    prog = Program(
+        rules=[],
+        axioms=[axiom("u[i?]", i="Ni")],
+        goals=[goal("w(u[i])", i=("Ni", 0, 0))],
+        loop_order=("i",),
+    )
+    with pytest.raises(InferenceError):
+        infer(prog)
+
+
+def test_demand_exceeding_availability_raises():
+    # goal wants the full range but the kernel needs i+1 halo from an
+    # axiom that only covers [0, N)
+    k = kernel("shift", [("a", "u[i?+1]")], [("o", "v(u[i?])")], fn=lambda a: a)
+    prog = Program(
+        rules=[k],
+        axioms=[axiom("u[i?]", i="Ni")],
+        goals=[goal("v(u[i])", i=("Ni", 0, 0))],
+        loop_order=("i",),
+    )
+    idag = infer(prog)
+    with pytest.raises(ValueError, match="exceeds"):
+        build_dataflow(idag)

@@ -1,0 +1,102 @@
+"""Per-kernel allclose sweeps vs pure-jnp oracles (interpret mode)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.programs import cosmo_program, hydro1d_program, laplace5_program
+from repro.kernels.flash_attention import (attention, chunked_attention,
+                                           dense_attention)
+from repro.kernels.flash_decode import decode_attention
+from repro.kernels.ssd import ssd
+from repro.kernels.stencil2d import run_fused_stencil, run_unfused_reference
+
+
+def _mk(rng, shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape) * scale, dtype)
+
+
+ATTN_CASES = [
+    # B, Sq, Skv, H, KVH, D, causal, window, dtype
+    (2, 128, 128, 4, 2, 64, True, None, jnp.float32),
+    (1, 256, 256, 8, 8, 32, False, None, jnp.float32),
+    (2, 128, 128, 6, 2, 64, True, 48, jnp.float32),
+    (1, 64, 192, 4, 1, 128, False, None, jnp.float32),
+    (2, 128, 128, 4, 2, 64, True, None, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", ATTN_CASES)
+def test_attention_chunked_vs_dense(case, rng):
+    B, Sq, Skv, H, KVH, D, causal, window, dt = case
+    q, k, v = _mk(rng, (B, Sq, H, D), dt), _mk(rng, (B, Skv, KVH, D), dt), _mk(rng, (B, Skv, KVH, D), dt)
+    ref = dense_attention(q, k, v, causal=causal, window=window)
+    got = chunked_attention(q, k, v, causal=causal, window=window, chunk=64)
+    tol = 2e-2 if dt == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("case", ATTN_CASES[:4])
+def test_attention_pallas_vs_dense(case, rng):
+    B, Sq, Skv, H, KVH, D, causal, window, dt = case
+    q, k, v = _mk(rng, (B, Sq, H, D), dt), _mk(rng, (B, Skv, KVH, D), dt), _mk(rng, (B, Skv, KVH, D), dt)
+    ref = dense_attention(q, k, v, causal=causal, window=window)
+    got = attention(q, k, v, causal=causal, window=window, impl="pallas",
+                    interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=2e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("impl", ["chunked", "pallas"])
+@pytest.mark.parametrize("B,S,H,KVH,D,window", [
+    (2, 512, 8, 2, 64, None),
+    (3, 256, 4, 4, 32, 96),
+    (1, 384, 6, 3, 128, None),
+])
+def test_decode_attention(impl, B, S, H, KVH, D, window, rng):
+    q = _mk(rng, (B, H, D))
+    kc, vc = _mk(rng, (B, S, KVH, D)), _mk(rng, (B, S, KVH, D))
+    lens = jnp.asarray(rng.integers(S // 3, S, (B,)), jnp.int32)
+    ref = decode_attention(q, kc, vc, lens, window=window, impl="reference")
+    got = decode_attention(q, kc, vc, lens, window=window, impl=impl,
+                           chunk=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=2e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("impl", ["chunked", "pallas"])
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [
+    (2, 128, 3, 32, 16, 32),
+    (1, 64, 2, 16, 8, 64),
+    (2, 96, 4, 64, 32, 32),
+])
+def test_ssd(impl, B, S, H, P, N, chunk, rng):
+    x = _mk(rng, (B, S, H, P), scale=0.5)
+    dt = jnp.asarray(np.log1p(np.exp(rng.standard_normal((B, S, H)) * 0.5 - 1)), jnp.float32)
+    A = jnp.asarray(-np.exp(rng.standard_normal(H) * 0.3), jnp.float32)
+    Bm, Cm = _mk(rng, (B, S, N), scale=0.5), _mk(rng, (B, S, N), scale=0.5)
+    D = _mk(rng, (H,), scale=0.2)
+    ref = ssd(x, dt, A, Bm, Cm, D, impl="reference")
+    got = ssd(x, dt, A, Bm, Cm, D, impl=impl, chunk=chunk, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=5e-5, rtol=1e-3)
+
+
+@pytest.mark.parametrize("build,arrays", [
+    (laplace5_program, {"cell": (12, 257)}),
+    (cosmo_program, {"u": (3, 10, 140)}),
+    (hydro1d_program, {"rho": (6, 130), "mom": (6, 130)}),
+])
+def test_stencil2d_pallas(build, arrays, rng):
+    prog = build()
+    data = {}
+    for k, shp in arrays.items():
+        a = rng.standard_normal(shp).astype(np.float32)
+        if k == "rho":
+            a = a ** 2 + 1.0
+        data[k] = jnp.asarray(a)
+    got = run_fused_stencil(prog, data, interpret=True)
+    want = run_unfused_reference(prog, data)
+    for key in want:
+        np.testing.assert_allclose(np.asarray(got[key]), np.asarray(want[key]),
+                                   atol=2e-5, rtol=1e-4)
