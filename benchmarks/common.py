@@ -23,3 +23,19 @@ def time_fn(fn, *args, warmup: int = 2, iters: int = 5, **kw):
 
 def mk(rng, shape, scale=1.0, dtype=jnp.float32):
     return jnp.asarray(rng.standard_normal(shape) * scale, dtype)
+
+
+def pallas_leg_row(name, fn, ref, x, *, interpret, extra="", atol=1e-5):
+    """Time one Pallas-backend leg, assert it against the oracle value
+    ``ref``, and emit the suite row (shared by cosmo/normalization)."""
+    t_p, p = time_fn(fn, x)
+    assert np.allclose(np.asarray(p), np.asarray(ref), atol=atol)
+    cells = int(np.prod(x.shape))
+    return {
+        "name": name,
+        "us_per_call": t_p * 1e6,
+        "derived": (
+            f"backend=pallas;interpret={interpret};{extra}"
+            f"Mcells_s={cells / t_p / 1e6:.0f}"
+        ),
+    }

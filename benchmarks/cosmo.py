@@ -1,9 +1,10 @@
 """Paper §5.3 / Fig. 11: COSMO fourth-order diffusion micro-kernels.
 
-Three legs: unfused (4 sweeps, 3 materialized intermediates), HFAV-fused
-JAX backend (single sweep, rolling buffers), and a 'STELLA-like' leg
-that fuses only the final three kernels with redundant flux recompute —
-the paper's comparison point.  Footprint note: our lead analysis needs
+Four legs: unfused (4 sweeps, 3 materialized intermediates), HFAV-fused
+JAX backend (single sweep, rolling buffers), a 'STELLA-like' leg that
+fuses only the final three kernels with redundant flux recompute — the
+paper's comparison point — and the Pallas stencil-executor leg
+(``backend="pallas"``, VMEM rolling windows over a (k, j) grid).  Footprint note: our lead analysis needs
 only 4 buffer rows (ulap 2 + fy 2, fx row-local) vs the paper's 5
 (EXPERIMENTS.md §Benchmarks)."""
 from __future__ import annotations
@@ -16,7 +17,7 @@ from repro.core import compile_program
 from repro.core.programs import cosmo_program, _ulap, _flux_x, _flux_y, _ustage
 from repro.core.unfused import build_unfused
 
-from .common import mk, time_fn
+from .common import mk, pallas_leg_row, time_fn
 
 
 def stella_like(u):
@@ -41,13 +42,18 @@ def stella_like(u):
     return out
 
 
-def run(sizes=((8, 64, 64), (16, 128, 128), (8, 256, 512))):
+PALLAS_MAX_ROWS = 96  # interpret mode unrolls the grid at trace time
+
+
+def run(sizes=((8, 64, 64), (16, 128, 128), (8, 256, 512)), interpret=True):
     prog = cosmo_program()
-    gen = compile_program(prog)
+    gen = compile_program(prog, backend="jax")
     unfused = build_unfused(prog, per_pass_jit=True).fn      # leg A: autovec
     fusedvec_fn = jax.jit(lambda u: build_unfused(prog).fn(u=u)["unew"])  # leg B
     rolling_fn = jax.jit(lambda u: gen.fn(u)["unew"])         # leg C
     stella_fn = jax.jit(stella_like)
+    pallas_gen = compile_program(prog, backend="pallas", interpret=interpret)
+    pallas_fn = jax.jit(lambda u: pallas_gen.fn(u=u)["unew"])  # leg D
     rng = np.random.default_rng(1)
     rows = []
     for shp in sizes:
@@ -72,4 +78,15 @@ def run(sizes=((8, 64, 64), (16, 128, 128), (8, 256, 512))):
                 f"buffers=4rows_vs_paper5;Mcells_s={cells/t_best/1e6:.0f}"
             ),
         })
+    # Pallas leg (single streamed (k, j) grid; bounded size off-TPU —
+    # interpret mode unrolls the grid at trace time, pass
+    # interpret=False on a TPU runtime)
+    nk, nj, ni = min(sizes)
+    if interpret:
+        nk, nj = min(nk, 4), min(nj, PALLAS_MAX_ROWS)
+    u = mk(rng, (nk, nj, ni))
+    ref = build_unfused(prog).fn(u=u)["unew"]
+    rows.append(pallas_leg_row(
+        f"cosmo_pallas_{nk}x{nj}x{ni}", pallas_fn, ref, u,
+        interpret=interpret, atol=1e-4))
     return rows

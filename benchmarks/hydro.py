@@ -19,7 +19,7 @@ from .common import mk, time_fn
 
 def run(sizes=((256, 512), (1024, 1024), (2048, 4096))):
     prog = hydro1d_program()
-    gen = compile_program(prog)
+    gen = compile_program(prog, backend="jax")
     unfused = build_unfused(prog, per_pass_jit=True).fn      # leg A: autovec
     fusedvec_fn = jax.jit(lambda rho, mom: build_unfused(prog).fn(rho=rho, mom=mom)["rnew"])
     rolling_fn = jax.jit(lambda rho, mom: gen.fn(rho=rho, mom=mom)["rnew"])

@@ -20,7 +20,7 @@ def main():
     prog = cosmo_program()
     print(explain(prog))
 
-    gen = compile_program(prog)
+    gen = compile_program(prog, backend="jax")
     rng = np.random.default_rng(0)
     u = jnp.asarray(rng.standard_normal((4, 48, 160)), jnp.float32)
 

@@ -19,7 +19,7 @@ def main():
     print("=== transformation report (paper's debugging output) ===")
     print(explain(prog))
 
-    gen = compile_program(prog)
+    gen = compile_program(prog, backend="jax")
     print("\n=== generated JAX source (the paper's emitted code) ===")
     print(gen.source)
 

@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Tier-1 fast wrapper: the full suite minus tests marked `slow`
+# (currently the ~160s dryrun subprocess compile).  The canonical
+# tier-1 command in ROADMAP.md runs everything.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -q -m "not slow" "$@"

@@ -1,5 +1,8 @@
 """HFAV core: the paper's fusion/vectorization engine as a JAX module."""
-from .engine import compile_program, explain
+from .codegen_jax import Generated
+from .codegen_pallas import PallasGenerated, PallasUnsupported
+from .engine import (BACKENDS, clear_compile_cache, compile_cache_size,
+                     compile_program, explain, program_signature)
 from .fusion import FusedSchedule, Unfusable, fuse_inest_dag
 from .infer import IDAG, InferenceError, infer
 from .dataflow import build_dataflow
@@ -8,7 +11,9 @@ from .rules import Extent, KernelRule, Program, axiom, goal, kernel
 from .terms import Term, parse_term, unify_term
 
 __all__ = [
-    "compile_program", "explain", "FusedSchedule", "Unfusable",
+    "BACKENDS", "Generated", "PallasGenerated", "PallasUnsupported",
+    "clear_compile_cache", "compile_cache_size", "compile_program",
+    "program_signature", "explain", "FusedSchedule", "Unfusable",
     "fuse_inest_dag", "IDAG", "InferenceError", "infer", "build_dataflow",
     "analyze_storage", "reuse_graph", "reuse_order", "Extent", "KernelRule",
     "Program", "axiom", "goal", "kernel", "Term", "parse_term", "unify_term",

@@ -1,210 +1,529 @@
 """Pallas backend: map an HFAV storage plan onto the TPU stencil executor.
 
-Applicability (checked by :func:`extract_stencil_spec`; the pure-JAX
-backend covers everything else):
+A fused schedule is executed as a *sequence of stencil calls*, one per
+top-level iteration nest, glued together on the host:
 
-* the whole program fused into a single top-level iteration nest;
-* loop order (j, i) or (k, j, i) with stencil offsets only in the two
-  innermost dimensions (k must be dependency-free, as in COSMO);
-* no reductions and a single terminal output.
+* every nest whose groups iterate the (j, i) plane becomes one
+  ``pallas_call`` (grid ``(j,)`` or ``(k, j)``) built by
+  :func:`repro.kernels.stencil2d.kernel.build_call`;
+* reductions (``acc``-kind variables) become carried VMEM accumulator
+  rows combined per grid step and lane-reduced on the host (the
+  vectorized-reduction triple of Section 3.5);
+* 0-dim kernels (a reduction's finalize, broadcast factors) run on the
+  host between calls, in the prologue/epilogue slots the fusion pass
+  assigned them;
+* ``full``-kind variables crossing a split are materialized between
+  calls and re-streamed as inputs of the consuming nest, with their
+  halo-trimmed origins tracked in :class:`InSpec`;
+* multiple terminal outputs map to multi-ref out specs.
 
-These are precisely the conditions of the paper's COSMO and Hydro2D
-studies; the normalization example (reduction -> split) stays on the JAX
-backend.
+Remaining restrictions (checked here; the pure-JAX backend covers the
+rest): loop order (j, i) or (k, j, i) — ``n_outer > 1`` raises
+:class:`PallasUnsupported` explicitly, the flat output assembly would
+otherwise mis-index; stencil offsets only in the two innermost
+dimensions; reductions only on 2-D grids with at most the innermost
+dimension surviving; no cross-row reads of same-nest materialized
+variables.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable
+from typing import Callable, Optional
 
 import jax.numpy as jnp
 
-from ..kernels.stencil2d.kernel import BufSpec, ReadSpec, StencilSpec, StepSpec, build_call
-from .dataflow import build_dataflow
+from ..kernels.stencil2d.kernel import (AccSpec, BufSpec, InSpec, OutSpec,
+                                        ReadSpec, StencilSpec, StepSpec,
+                                        build_call)
+from .dataflow import Group, build_dataflow
 from .fusion import fuse_inest_dag
 from .infer import IDAG, infer
 from .inest import walk_bodies
-from .reuse import StoragePlan, analyze_storage
+from .reuse import StoragePlan, VarPlan, analyze_storage
 from .rules import Program
+from .runtime import lane_reduce
+from .terms import Term
 
 
 class PallasUnsupported(Exception):
     pass
 
 
-def extract_stencil_spec(plan: StoragePlan, idag: IDAG) -> StencilSpec:
+@dataclass(frozen=True)
+class HostStep:
+    """A 0-dim kernel executed on the host between stencil calls."""
+
+    fn: Callable
+    reads: tuple[str, ...]  # environment names
+    writes: tuple[str, ...]
+
+
+@dataclass(frozen=True)
+class OutBind:
+    """How one stencil output maps back into the host environment."""
+
+    env: str
+    kind: str  # 'external' | 'full' | 'acc'
+    lead: int = 0
+    j_lo: int = 0
+    j_hi: int = 0
+    i_lo: int = 0
+    i_hi: int = 0
+    reduce_fn: Optional[Callable] = None  # lane reduction for scalar accs
+    reduce_init: float = 0.0
+
+
+@dataclass
+class NestExec:
+    """One top-level nest: host prologue steps, an optional stencil
+    call, output bindings, host epilogue steps."""
+
+    spec: Optional[StencilSpec]
+    in_env: tuple[str, ...]
+    out_binds: tuple[OutBind, ...]
+    host_pre: tuple[HostStep, ...]
+    host_post: tuple[HostStep, ...]
+
+
+def _env_name(vp: VarPlan) -> str:
+    if vp.kind == "external_in":
+        return vp.var.key.ref.name
+    return vp.name
+
+
+def _host_step(plan: StoragePlan, g: Group) -> HostStep:
+    if g.dims:
+        raise PallasUnsupported(
+            f"host-side group {g} iterates {g.dims}: only 0-dim kernels "
+            f"can run between stencil calls"
+        )
+    assert g.rule is not None and g.rule.fn is not None
+    reads = []
+    for _, key, offs in g.reads:
+        if any(o != 0 for o in offs.values()):
+            raise PallasUnsupported(f"offset read in 0-dim group {g}")
+        reads.append(_env_name(plan.vars[key]))
+    writes = [_env_name(plan.vars[key]) for _, key in g.writes]
+    return HostStep(g.rule.fn, tuple(reads), tuple(writes))
+
+
+def _extract_nest(plan: StoragePlan, idag: IDAG, nest_idx: int,
+                  nest_of_gid: dict[int, int]) -> NestExec:
     schedule = plan.schedule
     program = schedule.program
     dag = schedule.dag
-    if len(schedule.nests) != 1:
-        raise PallasUnsupported("program does not fuse to a single nest")
-    if len(program.loop_order) not in (2, 3):
-        raise PallasUnsupported("loop order must be (j,i) or (k,j,i)")
     inner = program.loop_order[-1]
     jdim = program.loop_order[-2]
-    outer = program.loop_order[:-2]
-    np_ = plan.nests[0]
+    n_outer = len(program.loop_order) - 2
+    np_ = plan.nests[nest_idx]
     by_id = {g.gid: g for g in dag.groups}
+    goal_of_base = {t.base(): goal for t, goal in idag.goal_of.items()}
+    axiom_exts = {t.base(): ax.extents for t, ax in idag.axiom_of.items()}
 
-    ordered = []
-    for body in walk_bodies(schedule.nests[0]):
+    ordered: list[int] = []
+    for body in walk_bodies(schedule.nests[nest_idx]):
         ordered.extend(body.gids)
+    kernels = [by_id[gid] for gid in ordered if by_id[gid].kind == "kernel"]
+    grid = [g for g in kernels if jdim in g.dims]
+    grid_gids = {g.gid for g in grid}
 
-    goals = list(idag.goal_of.values())
-    if len(goals) != 1:
-        raise PallasUnsupported("exactly one terminal output supported")
-
-    in_bufs: list[BufSpec] = []
-    in_leads: list[int] = []
-    inputs: list[str] = []
-    bufs: list[BufSpec] = []
-    steps: list[StepSpec] = []
-    out_lead = 0
-    x_los: list[int] = []
-    x_his: list[int] = []
+    host_pre: list[HostStep] = []
+    host_post: list[HostStep] = []
+    for g in kernels:
+        if jdim in g.dims:
+            continue
+        if not grid or dag.dataflow_le({g.gid}, grid_gids):
+            host_pre.append(_host_step(plan, g))
+        elif dag.dataflow_le(grid_gids, {g.gid}):
+            host_post.append(_host_step(plan, g))
+        else:
+            raise PallasUnsupported(
+                f"group {g} cannot be ordered around the {jdim}-grid"
+            )
+    if not grid:
+        return NestExec(None, (), (), tuple(host_pre), tuple(host_post))
 
     def check_offsets(v, offs_by_dim):
         for d, o in offs_by_dim.items():
             if d not in (inner, jdim) and o != 0:
                 raise PallasUnsupported(f"offset in outer dim {d} on {v}")
 
-    # input windows: stage count from load leads vs consumer positions
-    for key, vp in plan.vars.items():
+    # ---- streamed inputs --------------------------------------------------
+    in_specs: list[InSpec] = []
+    in_env: list[str] = []
+    input_src: dict[Term, str] = {}
+    x_los: list[int] = []
+    x_his: list[int] = []
+
+    def add_input(key: Term) -> None:
+        vp = plan.vars[key]
         v = vp.var
-        if vp.kind != "external_in":
-            continue
-        load = v.producer
-        assert load is not None
-        lead_l = np_.lead(load.gid, jdim) if jdim in v.dims else 0
-        oldest = lead_l
-        ji = v.dims.index(jdim) if jdim in v.dims else None
+        name = _env_name(vp)
+        if not v.dims:
+            in_specs.append(InSpec(name, scalar=True))
+            in_env.append(name)
+            input_src[key] = f"scalar:{name}"
+            return
+        if jdim not in v.dims or inner not in v.dims:
+            raise PallasUnsupported(
+                f"input {name} over dims {v.dims}: only (j, i) arrays and "
+                f"scalars can cross a stencil-call boundary"
+            )
+        exts = axiom_exts[v.key] if vp.kind == "external_in" else v.extent
+        ej = exts.get(jdim)
+        ei = exts.get(inner)
+        j_lo, j_hi = (ej.lo, ej.hi) if ej is not None else (0, 0)
+        i_lo, i_hi = (ei.lo, ei.hi) if ei is not None else (0, 0)
+        ji = v.dims.index(jdim)
+        newest = oldest = 0
+        seen = False
         for use in v.consumers:
+            if use.group.gid not in grid_gids:
+                continue
             c_lead = np_.lead(use.group.gid, jdim)
             for offs in use.offsets:
-                o = offs[ji] if ji is not None else 0
-                oldest = min(oldest, c_lead + o)
-        stages = max(1, lead_l - oldest + 1)
-        name = v.key.ref.name
-        inputs.append(name)
-        in_bufs.append(BufSpec(f"in_{name}", stages, 0, 0))
-        in_leads.append(lead_l)
+                pos = c_lead + offs[ji]
+                newest = pos if not seen else max(newest, pos)
+                oldest = pos if not seen else min(oldest, pos)
+                seen = True
+        lead = max(0, newest)
+        stages = lead - min(oldest, lead) + 1
+        in_specs.append(InSpec(name, stages, lead, j_lo, j_hi, i_lo, i_hi))
+        in_env.append(name)
+        input_src[key] = f"in_{name}"
         ext = v.extent.get(jdim)
         if ext is not None:
-            x_los.append(ext.lo - lead_l)
-            x_his.append(ext.hi - lead_l)
+            x_los.append(ext.lo - lead)
+            x_his.append(ext.hi - lead)
+
+    for g in grid:
+        for _, key, _offs in g.reads:
+            if key in input_src:
+                continue
+            vp = plan.vars[key]
+            if vp.kind == "external_in":
+                add_input(key)
+            elif vp.kind in ("full", "acc", "scalar"):
+                p = vp.var.producer
+                assert p is not None
+                if p.gid in grid_gids:
+                    continue  # produced in-grid: same-step local (below)
+                p_nest = nest_of_gid.get(p.gid)
+                if p_nest is not None and p_nest > nest_idx:
+                    raise PallasUnsupported(
+                        f"{vp.name} consumed before its producing nest"
+                    )
+                if vp.kind == "acc" and vp.var.dims:
+                    raise PallasUnsupported(
+                        f"cross-call read of vector accumulator {vp.name}"
+                    )
+                add_input(key)
+
+    # ---- fused kernel steps ----------------------------------------------
+    bufs: list[BufSpec] = []
+    accs: list[AccSpec] = []
+    steps: list[StepSpec] = []
+    outs: list[OutSpec] = []
+    out_binds: list[OutBind] = []
+    seen_bufs: set[str] = set()
 
     for key, vp in plan.vars.items():
-        if vp.kind == "rolling":
+        if vp.kind == "rolling" and vp.var.producer is not None \
+                and vp.var.producer.gid in grid_gids:
             if vp.contraction_dim != jdim:
                 raise PallasUnsupported(f"contraction over {vp.contraction_dim}")
             bufs.append(BufSpec(f"b_{vp.name}", vp.stages, vp.i_lo, vp.i_hi))
-        elif vp.kind in ("acc", "scalar"):
-            raise PallasUnsupported("reductions not supported on Pallas backend")
-        elif vp.kind == "full":
-            raise PallasUnsupported(f"split variable {vp.name}")
+            seen_bufs.add(f"b_{vp.name}")
 
-    for gid in ordered:
-        g = by_id[gid]
-        if g.kind != "kernel":
-            continue
+    for g in grid:
         assert g.rule is not None and g.rule.fn is not None
-        lead = np_.lead(gid, jdim)
+        if n_outer and program.loop_order[0] not in g.dims:
+            raise PallasUnsupported(
+                f"group {g} lacks the outer grid dim "
+                f"{program.loop_order[0]}"
+            )
+        lead = np_.lead(g.gid, jdim)
         ext_j = g.extent.get(jdim)
         if ext_j is not None:
             x_los.append(ext_j.lo - lead)
             x_his.append(ext_j.hi - lead)
         c_ilo = g.extent[inner].lo if inner in g.extent else 0
         c_w = (g.extent[inner].hi - g.extent[inner].lo) if inner in g.extent else 0
+
         reads = []
-        for pname, key, offs in g.reads:
+        for _, key, offs in g.reads:
             vp = plan.vars[key]
             check_offsets(vp.name, offs)
             oj = offs.get(jdim, 0)
             oi = offs.get(inner, 0)
-            if vp.kind == "external_in":
-                src = f"in_{vp.var.key.ref.name}"
-                col0 = c_ilo + oi
+            src = input_src.get(key)
+            if src is not None:
+                if src.startswith("scalar:"):
+                    reads.append(ReadSpec(src, 0, 0, 0))
+                else:
+                    reads.append(ReadSpec(src, lead + oj, c_ilo + oi, c_w))
             elif vp.kind == "rolling":
-                src = f"b_{vp.name}"
-                col0 = c_ilo + oi
-            elif vp.kind == "row":
-                src = f"local:{vp.name}"
-                p_ilo = vp.var.producer.extent[inner].lo if inner in vp.var.producer.extent else 0
-                col0 = (c_ilo + oi) - p_ilo
+                reads.append(ReadSpec(f"b_{vp.name}", lead + oj, c_ilo + oi, c_w))
+            elif vp.kind in ("row", "full", "scalar"):
+                # produced by this nest's grid: visible as a same-step row
+                p = vp.var.producer
+                assert p is not None
+                if vp.kind != "row" and lead + oj != np_.lead(p.gid, jdim):
+                    raise PallasUnsupported(
+                        f"cross-row read of same-nest materialized {vp.name}"
+                    )
+                p_ilo = p.extent[inner].lo if inner in p.extent else 0
+                reads.append(
+                    ReadSpec(f"local:{vp.name}", 0, (c_ilo + oi) - p_ilo, c_w))
             else:
                 raise PallasUnsupported(f"read of {vp.name} kind {vp.kind}")
-            reads.append(ReadSpec(src, lead + oj, col0, c_w))
+
+        if g.is_reduction:
+            (_, okey), = g.writes
+            ovp = plan.vars[okey]
+            if ovp.kind not in ("acc",):
+                raise PallasUnsupported(
+                    f"reduction result {ovp.name} of kind {ovp.kind}"
+                )
+            if n_outer != 0:
+                raise PallasUnsupported("reductions require a 2-D (j, i) grid")
+            if set(ovp.var.dims) - {inner}:
+                raise PallasUnsupported(
+                    f"reduction output {ovp.name} keeps outer dims"
+                )
+            if inner not in g.dims:
+                raise PallasUnsupported(
+                    f"reduction {g} does not iterate the vector dim"
+                )
+            acc = AccSpec(f"a_{ovp.name}", c_w, ovp.acc_init)
+            accs.append(acc)
+            valid = (ext_j.lo, ext_j.hi) if ext_j is not None else (0, 0)
+            steps.append(StepSpec(g.rule.fn, tuple(reads), (), lead, c_ilo,
+                                  acc=acc.name, valid=valid))
+            outs.append(OutSpec(ovp.name, lead, acc=acc.name))
+            out_binds.append(OutBind(
+                env=_env_name(ovp), kind="acc", lead=lead,
+                reduce_fn=g.rule.fn if inner in ovp.acc_reduced else None,
+                reduce_init=ovp.acc_init,
+            ))
+            continue
+
         writes = []
-        for pname, key in g.writes:
+        for _, key in g.writes:
             vp = plan.vars[key]
+            v = vp.var
+            targets: list[tuple[str, object]] = []
             if vp.kind == "rolling":
-                writes.append(("buf", f"b_{vp.name}"))
+                if f"b_{vp.name}" not in seen_bufs:
+                    raise PallasUnsupported(f"unplanned rolling buffer {vp.name}")
+                targets.append(("buf", f"b_{vp.name}"))
             elif vp.kind == "row":
-                writes.append(("local", vp.name))
+                targets.append(("local", vp.name))
             elif vp.kind == "external_out":
-                writes.append(("out", 0))
-                out_lead = lead
+                if c_ilo < 0 or c_ilo + c_w > 0:
+                    raise PallasUnsupported(
+                        f"row of {vp.name} spans [{c_ilo}, Ni{c_ilo + c_w:+d})"
+                        f": outside the Ni-wide output row"
+                    )
+                goal = goal_of_base.get(key)
+                gj = goal.extents.get(jdim) if goal is not None else None
+                out_binds.append(OutBind(
+                    env=_env_name(vp), kind="external", lead=lead,
+                    j_lo=(gj.lo if gj is not None else 0),
+                    j_hi=(gj.hi if gj is not None else 0),
+                ))
+                targets.append(("out", len(outs)))
+                outs.append(OutSpec(vp.name, lead))
+            elif vp.kind == "full":
+                ej = v.extent.get(jdim)
+                ei = v.extent.get(inner)
+                if ej is None or ei is None:
+                    raise PallasUnsupported(f"materialized {vp.name} lacks "
+                                            f"(j, i) extents")
+                if (inner in g.extent and g.extent[inner] != ei) or \
+                        (jdim in g.extent and g.extent[jdim] != ej):
+                    raise PallasUnsupported(
+                        f"{vp.name}: producer extent differs from variable "
+                        f"extent; cannot materialize across calls"
+                    )
+                if ei.lo < 0 or ei.hi > 0:
+                    raise PallasUnsupported(
+                        f"row of {vp.name} spans [{ei.lo}, Ni{ei.hi:+d}): "
+                        f"outside the Ni-wide output row"
+                    )
+                out_binds.append(OutBind(
+                    env=_env_name(vp), kind="full", lead=lead,
+                    j_lo=ej.lo, j_hi=ej.hi, i_lo=ei.lo, i_hi=ei.hi,
+                ))
+                targets.append(("out", len(outs)))
+                outs.append(OutSpec(vp.name, lead))
+                # also visible to same-step consumers within this nest
+                targets.append(("local", vp.name))
             else:
                 raise PallasUnsupported(f"write of {vp.name} kind {vp.kind}")
-        steps.append(StepSpec(g.rule.fn, tuple(reads), tuple(writes), lead, c_ilo))
+            writes.append(tuple(targets))
+        steps.append(StepSpec(g.rule.fn, tuple(reads), tuple(writes),
+                              lead, c_ilo))
 
-    n_outer = len(outer)
-    return StencilSpec(
-        name=program.name,
+    if not outs:
+        raise PallasUnsupported(f"nest {nest_idx} produces no outputs")
+    spec = StencilSpec(
+        name=f"{program.name}_n{nest_idx}",
         n_outer=n_outer,
-        inputs=tuple(inputs),
-        in_bufs=tuple(in_bufs),
-        in_leads=tuple(in_leads),
+        inputs=tuple(in_specs),
         bufs=tuple(bufs),
+        accs=tuple(accs),
         steps=tuple(steps),
-        x_lo=min(x_los),
-        x_hi_off=max(x_his),
-        out_lead=out_lead,
+        outs=tuple(outs),
+        x_lo=min(x_los) if x_los else 0,
+        x_hi_off=max(x_his) if x_his else 0,
     )
+    return NestExec(spec, tuple(in_env), tuple(out_binds),
+                    tuple(host_pre), tuple(host_post))
+
+
+def extract_nest_execs(plan: StoragePlan, idag: IDAG) -> list[NestExec]:
+    program = plan.schedule.program
+    if len(program.loop_order) < 2:
+        raise PallasUnsupported("loop order must be (j,i) or (k,j,i)")
+    n_outer = len(program.loop_order) - 2
+    if n_outer > 1:
+        raise PallasUnsupported(
+            f"n_outer = {n_outer} > 1: output assembly only supports grids "
+            f"(j,) and (k, j)"
+        )
+    nest_of_gid: dict[int, int] = {}
+    for k, np_ in enumerate(plan.nests):
+        for gid in np_.gids:
+            nest_of_gid[gid] = k
+    return [_extract_nest(plan, idag, k, nest_of_gid)
+            for k in range(len(plan.nests))]
 
 
 @dataclass
 class PallasGenerated:
-    spec: StencilSpec
+    """The Pallas backend's end product: one stencil spec per grid nest
+    plus a callable executing the full schedule."""
+
+    specs: tuple[StencilSpec, ...]
     fn: Callable
     plan: StoragePlan
+    nest_execs: tuple[NestExec, ...] = ()
+
+    @property
+    def spec(self) -> StencilSpec:
+        return self.specs[0]
+
+    @property
+    def schedule(self):
+        return self.plan.schedule
+
+
+def _run_host(step: HostStep, env: dict) -> None:
+    vals = step.fn(*[env[n] for n in step.reads])
+    if len(step.writes) == 1:
+        vals = (vals,)
+    for name, val in zip(step.writes, vals):
+        env[name] = val
+
+
+def generate_pallas(plan: StoragePlan, idag: IDAG, *, dtype=jnp.float32,
+                    interpret: bool = True) -> PallasGenerated:
+    """Emit the Pallas execution of a storage plan.
+
+    ``interpret=True`` runs the kernel bodies on CPU for validation; on
+    a TPU runtime pass False."""
+    program = plan.schedule.program
+    dag = plan.schedule.dag
+    nest_execs = extract_nest_execs(plan, idag)
+    inner = program.loop_order[-1]
+    jdim = program.loop_order[-2]
+    n_outer = len(program.loop_order) - 2
+    kdim = program.loop_order[0] if n_outer else None
+
+    # dimension -> runtime size symbol (resolved from axiom array shapes)
+    dim_sym = {d: f"N{d}" for d in program.loop_order}
+    axiom_ext = {t.base(): ax.extents for t, ax in idag.axiom_of.items()}
+    for exts in axiom_ext.values():
+        for d, e in exts.items():
+            dim_sym[d] = e.size
+    input_names = sorted({key.ref.name for key in axiom_ext})
+    goal_out = [
+        (goal.store_as or dag.variables[t.base()].name,
+         dag.variables[t.base()].name)
+        for t, goal in idag.goal_of.items()
+    ]
+
+    def fn(**arrays):
+        sizes: dict[str, int] = {}
+        for key, exts in axiom_ext.items():
+            arr = arrays[key.ref.name]
+            for axis, d in enumerate(key.dims):
+                e = exts.get(d)
+                if e is not None and e.size not in sizes:
+                    sizes[e.size] = arr.shape[axis] - (e.hi - e.lo)
+        nj = sizes[dim_sym[jdim]]
+        ni = sizes[dim_sym[inner]]
+        nk = sizes[dim_sym[kdim]] if kdim is not None else None
+        sz = (nj, ni) if n_outer == 0 else (nk, nj, ni)
+        env: dict[str, jnp.ndarray] = {
+            name: arrays[name] for name in input_names
+        }
+        for ne in nest_execs:
+            for hs in ne.host_pre:
+                _run_host(hs, env)
+            if ne.spec is not None:
+                call, _ = build_call(ne.spec, sz, dtype, interpret=interpret)
+                args = []
+                for ispec, name in zip(ne.spec.inputs, ne.in_env):
+                    v = jnp.asarray(env[name], dtype)
+                    if ispec.scalar:
+                        v = v.reshape((1,) * (n_outer + 2))
+                    args.append(v)
+                padded = call(*args)
+                if not isinstance(padded, (list, tuple)):
+                    padded = [padded]
+                for bind, pout in zip(ne.out_binds, padded):
+                    env[bind.env] = _assemble(
+                        bind, pout, ne.spec, nj, ni, nk, dtype)
+            for hs in ne.host_post:
+                _run_host(hs, env)
+        return {out_name: env[var_name] for out_name, var_name in goal_out}
+
+    specs = tuple(ne.spec for ne in nest_execs if ne.spec is not None)
+    return PallasGenerated(specs, fn, plan, tuple(nest_execs))
+
+
+def _assemble(bind: OutBind, padded, spec: StencilSpec, nj: int, ni: int,
+              nk, dtype):
+    if bind.kind == "acc":
+        row = padded[0]
+        if bind.reduce_fn is not None:
+            return lane_reduce(bind.reduce_fn, row, bind.reduce_init)
+        return row
+    t0 = bind.j_lo - (spec.x_lo + bind.lead)
+    nrows = nj + bind.j_hi - bind.j_lo
+    if bind.kind == "external":
+        jlo, jhi = bind.j_lo, nj + bind.j_hi
+        if spec.n_outer == 0:
+            out = jnp.zeros((nj, ni), dtype)
+            return out.at[jlo:jhi, :].set(padded[t0:t0 + nrows, :])
+        out = jnp.zeros((nk, nj, ni), dtype)
+        return out.at[:, jlo:jhi, :].set(padded[:, t0:t0 + nrows, :])
+    w = ni + bind.i_hi - bind.i_lo
+    if spec.n_outer == 0:
+        return padded[t0:t0 + nrows, bind.i_lo:bind.i_lo + w]
+    return padded[:, t0:t0 + nrows, bind.i_lo:bind.i_lo + w]
 
 
 def compile_program_pallas(
     program: Program, *, dtype=jnp.float32, interpret: bool = True
 ) -> PallasGenerated:
-    """Engine pipeline + Pallas emission.  ``interpret=True`` runs the
-    kernel body on CPU for validation; on a TPU runtime pass False."""
+    """Engine pipeline + Pallas emission (standalone entry point; prefer
+    :func:`repro.core.engine.compile_program` with ``backend='pallas'``,
+    which shares the pipeline and caches compilations)."""
     idag = infer(program)
     dag = build_dataflow(idag)
     schedule = fuse_inest_dag(dag)
     plan = analyze_storage(schedule)
-    spec = extract_stencil_spec(plan, idag)
-    goal = list(idag.goal_of.values())[0]
-    gterm = list(idag.goal_of.keys())[0]
-    gvar = dag.variables[gterm.base()]
-    inner = program.loop_order[-1]
-    jdim = program.loop_order[-2]
-
-    def fn(**arrays):
-        args = [arrays[n] for n in spec.inputs]
-        shape = args[0].shape
-        call, steps_j = build_call(spec, shape, dtype, interpret=interpret)
-        padded = call(*args)
-        # assemble: padded row t holds position t + x_lo + out_lead
-        ej = goal.extents.get(jdim)
-        nj = shape[-2]
-        ni = shape[-1]
-        jlo = ej.lo if ej is not None else 0
-        jhi = nj + (ej.hi if ej is not None else 0)
-        t0 = jlo - (spec.x_lo + spec.out_lead)
-        out = jnp.zeros(shape, dtype)
-        rows = jnp.arange(jlo, jhi)
-        if spec.n_outer == 0:
-            out = out.at[jlo:jhi, :].set(padded[t0:t0 + (jhi - jlo), :])
-        else:
-            out = out.at[:, jlo:jhi, :].set(padded[:, t0:t0 + (jhi - jlo), :])
-        name = goal.store_as or gvar.name
-        return {name: out}
-
-    return PallasGenerated(spec, fn, plan)
+    return generate_pallas(plan, idag, dtype=dtype, interpret=interpret)

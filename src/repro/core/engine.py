@@ -1,34 +1,157 @@
 """HFAV engine driver: program -> inference -> dataflow -> fusion ->
-storage analysis -> generated JAX code.  The public entry point of the
-paper's contribution."""
+storage analysis -> backend dispatch.  The public entry point of the
+paper's contribution.
+
+:func:`compile_program` runs the shared analysis pipeline once and then
+dispatches to a backend:
+
+* ``backend="jax"`` — emit fused, vectorized JAX source
+  (:mod:`repro.core.codegen_jax`), returning :class:`Generated`;
+* ``backend="pallas"`` — execute the schedule on the TPU stencil
+  executor (:mod:`repro.core.codegen_pallas`), returning
+  :class:`PallasGenerated`; raises :class:`PallasUnsupported` for
+  programs outside the stencil executor's shape;
+* ``backend="auto"`` (default) — probe Pallas applicability and fall
+  back to JAX.  The probe is conservative: only single-nest schedules
+  with no reductions or cross-nest materialized intermediates go to the
+  stencil executor (those are the shapes where the streamed pipeline is
+  an unambiguous win); everything else takes the JAX backend, whose XLA
+  fusion already covers split schedules well.
+
+Compiled results are cached on (program signature, backend, dtype,
+interpret) so repeated compilation in serving/benchmark loops is free.
+"""
 from __future__ import annotations
 
+from typing import Union
+
+import jax.numpy as jnp
+
 from .codegen_jax import Generated, generate
+from .codegen_pallas import PallasGenerated, PallasUnsupported, generate_pallas
 from .dataflow import build_dataflow
 from .fusion import fuse_inest_dag
 from .infer import infer
-from .reuse import analyze_storage
+from .reuse import StoragePlan, analyze_storage
 from .rules import Program
 
+BACKENDS = ("auto", "jax", "pallas")
 
-def compile_program(program: Program) -> Generated:
+_CACHE: dict = {}
+
+
+def program_signature(program: Program):
+    """A hashable identity for a program: two structurally identical
+    programs (same rules/axioms/goals/loop order, same kernel callables)
+    share compiled artifacts."""
+
+    def params(ps):
+        return tuple((p.name, str(p.pattern)) for p in ps)
+
+    def exts(e):
+        return tuple(sorted((d, x.size, x.lo, x.hi) for d, x in e.items()))
+
+    rules = tuple(
+        (r.name, params(r.inputs), params(r.outputs), r.kind, r.init, r.fn)
+        for r in program.rules
+    )
+    axioms = tuple((str(a.term), exts(a.extents)) for a in program.axioms)
+    goals = tuple((str(g.term), g.store_as, exts(g.extents))
+                  for g in program.goals)
+    return (program.name, rules, axioms, goals,
+            tuple(program.loop_order), tuple(program.aliases))
+
+
+def clear_compile_cache() -> None:
+    _CACHE.clear()
+
+
+def compile_cache_size() -> int:
+    return len(_CACHE)
+
+
+def _build_plan(program: Program):
     idag = infer(program)
     dag = build_dataflow(idag)
     schedule = fuse_inest_dag(dag)
     plan = analyze_storage(schedule)
-    return generate(plan, idag)
+    return idag, plan
+
+
+def pallas_auto_viable(plan: StoragePlan) -> bool:
+    """Whether ``backend="auto"`` should route this plan to the stencil
+    executor: a single fused nest over (j,i)/(k,j,i) with rolling/row
+    contraction only (the COSMO/Hydro2D shape of §5.3-5.4)."""
+    if len(plan.schedule.program.loop_order) not in (2, 3):
+        return False
+    if len(plan.schedule.nests) != 1:
+        return False
+    return not any(vp.kind in ("acc", "full", "scalar")
+                   for vp in plan.vars.values())
+
+
+def compile_program(
+    program: Program,
+    backend: str = "auto",
+    *,
+    dtype=jnp.float32,
+    interpret: bool = True,
+    use_cache: bool = True,
+) -> Union[Generated, PallasGenerated]:
+    """Compile ``program`` through the HFAV pipeline onto a backend.
+
+    ``interpret`` only affects the Pallas backend (CPU validation vs TPU
+    execution).  Results are memoized; pass ``use_cache=False`` to force
+    a rebuild."""
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected {BACKENDS}")
+    key = (program_signature(program), backend, jnp.dtype(dtype).name,
+           bool(interpret))
+    if use_cache:
+        hit = _CACHE.get(key)
+        if hit is not None:
+            return hit
+    idag, plan = _build_plan(program)
+    if backend == "jax":
+        gen: Union[Generated, PallasGenerated] = generate(plan, idag)
+    elif backend == "pallas":
+        gen = generate_pallas(plan, idag, dtype=dtype, interpret=interpret)
+    else:
+        gen = None
+        if pallas_auto_viable(plan):
+            try:
+                gen = generate_pallas(plan, idag, dtype=dtype,
+                                      interpret=interpret)
+            except PallasUnsupported:
+                gen = None
+        if gen is None:
+            gen = generate(plan, idag)
+    if use_cache:
+        _CACHE[key] = gen
+    return gen
 
 
 def explain(program: Program) -> str:
     """Human-readable transformation report (the paper's debugging output)."""
-    idag = infer(program)
-    dag = build_dataflow(idag)
-    schedule = fuse_inest_dag(dag)
-    plan = analyze_storage(schedule)
+    from .codegen_pallas import extract_nest_execs
+
+    idag, plan = _build_plan(program)
+    schedule = plan.schedule
+    dag = schedule.dag
+    backend = "jax"
+    if pallas_auto_viable(plan):
+        # mirror compile_program's auto path exactly: the probe may still
+        # hit a PallasUnsupported shape during extraction
+        try:
+            extract_nest_execs(plan, idag)
+            backend = "pallas"
+        except PallasUnsupported:
+            pass
     lines = [
         f"program: {program.name}",
         f"raps: {len(idag.raps)}  groups: {len(dag.groups)}  "
         f"fused nests: {schedule.n_toplevel()}",
+        f"auto backend: {backend}",
         "--- fused schedule ---",
         schedule.pretty(),
         "--- storage plan ---",

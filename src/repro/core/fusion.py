@@ -90,6 +90,22 @@ def _fuse_phase(dag: DataflowDAG, program: Program, pa: list[Node], pb: list[Nod
     return _order_nodes(dag, result)
 
 
+def _reduction_split(dag: DataflowDAG, a: "INest", b: "INest") -> bool:
+    """A consumer of a reduction's accumulator cannot share the reduced
+    loop: the combined value only exists after that loop completes, so
+    fusing them would read a *partial* accumulator (the concave-dataflow
+    split of Section 3.4, Fig. 6)."""
+    ga, gb = a.groups(), b.groups()
+    for v in dag.variables.values():
+        p = v.producer
+        if p is None or not p.is_reduction or a.ident not in p.reduced_dims:
+            continue
+        cons = {u.group.gid for u in v.consumers}
+        if (p.gid in ga and cons & gb) or (p.gid in gb and cons & ga):
+            return True
+    return False
+
+
 def fuse_nodes(dag: DataflowDAG, program: Program, a: Node, b: Node) -> Node:
     """Recursively fuse two iteration-nest nodes (Fig. 7)."""
     ra, rb = irank(a, program), irank(b, program)
@@ -101,6 +117,11 @@ def fuse_nodes(dag: DataflowDAG, program: Program, a: Node, b: Node) -> Node:
         if a.extent.size != b.extent.size:
             raise Unfusable(
                 f"extent mismatch on {a.ident}: {a.extent} vs {b.extent}"
+            )
+        if _reduction_split(dag, a, b):
+            raise Unfusable(
+                f"{a.ident}-nests split: accumulator consumed inside its "
+                f"own reduced loop"
             )
         # Phase orderability (the four conditions of Fig. 7, diff == 0).
         if not (

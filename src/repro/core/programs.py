@@ -57,6 +57,52 @@ def laplace5_program(name: str = "laplace5") -> Program:
     )
 
 
+def _blur3(n, e, s, w_, c):
+    return 0.125 * (n + e + s + w_) + 0.5 * c
+
+
+def laplace_pair_program(name: str = "laplace_pair") -> Program:
+    """Two terminal outputs sharing one fused nest: the 5-point Laplacian
+    plus a cross-shaped blur over the same input windows.  Exercises
+    multi-goal dispatch (multi-ref out specs on the Pallas backend)."""
+    k_lap = kernel(
+        "laplace5",
+        inputs=[
+            ("n", "q?[j?-1][i?]"),
+            ("e", "q?[j?][i?+1]"),
+            ("s", "q?[j?+1][i?]"),
+            ("w", "q?[j?][i?-1]"),
+            ("c", "q?[j?][i?]"),
+        ],
+        outputs=[("o", "laplace(q?[j?][i?])")],
+        fn=_laplace5,
+    )
+    k_blur = kernel(
+        "blur3",
+        inputs=[
+            ("n", "q?[j?-1][i?]"),
+            ("e", "q?[j?][i?+1]"),
+            ("s", "q?[j?+1][i?]"),
+            ("w", "q?[j?][i?-1]"),
+            ("c", "q?[j?][i?]"),
+        ],
+        outputs=[("o", "blur(q?[j?][i?])")],
+        fn=_blur3,
+    )
+    return Program(
+        rules=[k_lap, k_blur],
+        axioms=[axiom("cell[j?][i?]", j="Nj", i="Ni")],
+        goals=[
+            goal("laplace(cell[j][i])", store_as="lap",
+                 j=("Nj", 1, -1), i=("Ni", 1, -1)),
+            goal("blur(cell[j][i])", store_as="blur",
+                 j=("Nj", 1, -1), i=("Ni", 1, -1)),
+        ],
+        loop_order=("j", "i"),
+        name=name,
+    )
+
+
 # ---------------------------------------------------------------------------
 # Normalization example (Figs. 3/4/6, Section 5.2)
 # ---------------------------------------------------------------------------

@@ -80,6 +80,12 @@ class VarPlan:
     i_lo: int = 0
     i_hi: int = 0
     reuse_path: list[tuple[int, ...]] = field(default_factory=list)
+    # Reduction accumulators ('acc' kind): the combine identity and the
+    # dims folded away — backends use these to stage the paper's
+    # init/combine/finalize triple (vector partial accumulator + lane
+    # reduction when the innermost dim is reduced).
+    acc_init: float = 0.0
+    acc_reduced: tuple[str, ...] = ()
 
     @property
     def name(self) -> str:
@@ -230,6 +236,14 @@ def analyze_storage(schedule: FusedSchedule) -> StoragePlan:
             else:
                 kind, nest_index = "rolling", prod_nest
         vp = VarPlan(v, kind, nest_index, i_lo=i_lo, i_hi=i_hi, reuse_path=path)
+        if kind == "acc":
+            g = v.producer
+            assert g is not None
+            vp.acc_init = g.rule.init if g.rule is not None else 0.0
+            vp.acc_reduced = g.reduced_dims
+            if inner in g.extent:
+                vp.i_lo = g.extent[inner].lo
+                vp.i_hi = g.extent[inner].hi
         if kind == "rolling":
             d0 = outer[-1]
             di = v.dims.index(d0)

@@ -1,4 +1,5 @@
 """Engine-driven fused rolling-buffer stencil executor (Pallas TPU)."""
-from .kernel import BufSpec, ReadSpec, StencilSpec, StepSpec, build_call
+from .kernel import (AccSpec, BufSpec, InSpec, OutSpec, ReadSpec,
+                     StencilSpec, StepSpec, build_call)
 from .ops import run_fused_stencil
 from .ref import run_unfused_reference

@@ -7,29 +7,41 @@ buffers — including the optional input-row window the paper mentions for
 COSMO — live in VMEM scratch that persists across sequential grid steps.
 Each grid step:
 
-1. streams exactly one new row per external input from HBM into that
+1. streams exactly one new row per array input from HBM into that
    input's VMEM window (the DMA is expressed through the BlockSpec
    index map, running ``lead`` rows ahead of the canonical point);
 2. executes every fused kernel at its software-pipeline lead, reading
    neighbor rows from VMEM windows via mod-``stages`` index arithmetic
    (the functional form of the paper's pointer rotation, Fig. 9a/9b);
-3. writes one output row back to HBM.
+   reduction kernels combine into VMEM accumulator rows carried across
+   grid steps (the vector partial accumulators of Section 3.5),
+   predicated on the canonical point being inside the reduced extent;
+3. writes one row per terminal output back to HBM; accumulator outputs
+   are dumped into a single revisited block whose final grid step holds
+   the fully-combined partial-accumulator row.
+
+Inputs may be full-size external arrays, halo-trimmed intermediates
+materialized by an earlier stencil call of the same schedule (their
+``j/i`` origins are carried in :class:`InSpec`), or 0-dim scalars
+(broadcast values such as a normalization factor) passed as ``(1, 1)``
+blocks.
 
 Rolling windows are padded to the 128-wide TPU lane tile (the
 vector-length expansion of Fig. 9c).  Warm-up/drain grid steps compute
-garbage rows into a padded output that the ops wrapper slices away — the
+garbage rows into padded outputs that the ops wrapper slices away — the
 masked steady-state ('HFAV + Tuning') form.
 
-All row widths in the spec are stored as *deltas against Ni* so one spec
-serves every problem size; they are concretized in :func:`build_call`.
+All row widths in the spec are stored as *deltas against Ni* (and row
+counts as deltas against Nj) so one spec serves every problem size; they
+are concretized in :func:`build_call`.
 
 The executor is driven by the engine's storage plan — see
-:func:`repro.core.codegen_pallas.extract_stencil_spec`.
+:func:`repro.core.codegen_pallas.generate_pallas`.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -49,6 +61,26 @@ def _mod(pos, stages: int):
 
 
 @dataclasses.dataclass(frozen=True)
+class InSpec:
+    """One streamed input.
+
+    Array inputs cover positions ``[j_lo, Nj + j_hi) x [i_lo, Ni + i_hi)``
+    of the iteration space (array index = position - origin) and stream
+    one row per grid step into a ``stages``-row VMEM window at ``lead``
+    rows ahead of the canonical point.  Scalar inputs are 0-dim values
+    passed as a single ``(1, 1)`` block."""
+
+    name: str
+    stages: int = 1
+    lead: int = 0
+    j_lo: int = 0
+    j_hi: int = 0  # array rows = Nj + (j_hi - j_lo)
+    i_lo: int = 0
+    i_hi: int = 0  # array cols = Ni + (i_hi - i_lo)
+    scalar: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
 class BufSpec:
     """One VMEM rolling window: ``stages`` rows covering column positions
     [i_lo, Ni + i_hi) of its variable (widths are Ni-relative)."""
@@ -60,8 +92,19 @@ class BufSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class AccSpec:
+    """One carried accumulator row (vector partial accumulator of a
+    fused reduction): width Ni + w_off, initialized to ``init`` on the
+    first grid step."""
+
+    name: str
+    w_off: int
+    init: float
+
+
+@dataclasses.dataclass(frozen=True)
 class ReadSpec:
-    src: str  # buffer name, or 'local:<name>'
+    src: str  # window/buffer name, 'local:<name>', or 'scalar:<name>'
     j_off: int  # total row offset (consumer lead + stencil offset)
     col0: int  # absolute column position of the first lane read
     w_off: int  # read width = Ni + w_off
@@ -69,66 +112,110 @@ class ReadSpec:
 
 @dataclasses.dataclass(frozen=True)
 class StepSpec:
-    """One fused kernel at its software-pipeline lead."""
+    """One fused kernel at its software-pipeline lead.
+
+    ``writes`` holds one tuple of targets per produced value; each
+    target is ``('buf', name) | ('local', name) | ('out', index)`` — a
+    value may go to several targets (e.g. a cross-call materialized
+    intermediate that is also consumed in the same grid step).
+
+    Reduction steps set ``acc``: the current accumulator row is
+    prepended to the kernel arguments and the combined result is stored
+    back, predicated on the canonical j-position lying inside
+    ``valid`` = (lo, hi_off), i.e. ``lo <= x + lead < Nj + hi_off``."""
 
     fn: Callable
     reads: tuple[ReadSpec, ...]
-    # each write: ('buf', name) | ('local', name) | ('out', 0)
-    writes: tuple[tuple[str, str | int], ...]
+    writes: tuple[tuple[tuple[str, Union[str, int]], ...], ...]
     lead: int
     out_col0: int = 0  # absolute column of the produced row's first lane
+    acc: Optional[str] = None
+    valid: tuple[int, int] = (0, 0)
+
+
+@dataclasses.dataclass(frozen=True)
+class OutSpec:
+    """One terminal output.  Row outputs get one padded row per grid
+    step; accumulator outputs (``acc`` set) are a single revisited
+    ``(1, Ni + w_off)`` block dumped from the named accumulator."""
+
+    name: str
+    lead: int = 0
+    acc: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)
 class StencilSpec:
-    """A complete fused, contracted stencil pipeline."""
+    """A complete fused, contracted stencil pipeline (one iteration
+    nest of the engine's schedule)."""
 
     name: str
     n_outer: int  # 0 -> grid (j,); 1 -> grid (k, j)
-    inputs: tuple[str, ...]
-    in_bufs: tuple[BufSpec, ...]
-    in_leads: tuple[int, ...]
+    inputs: tuple[InSpec, ...]
     bufs: tuple[BufSpec, ...]
+    accs: tuple[AccSpec, ...]
     steps: tuple[StepSpec, ...]
+    outs: tuple[OutSpec, ...]
     x_lo: int  # canonical loop start (negative = pipeline priming rows)
     x_hi_off: int  # loop end offset: x in [x_lo, Nj + x_hi_off)
-    out_lead: int = 0
 
 
-def build_call(spec: StencilSpec, shape: tuple[int, ...], dtype,
+def build_call(spec: StencilSpec, sizes: tuple[int, ...], dtype,
                interpret: bool = False):
     """Concretize the spec for one problem size and build the pallas_call.
 
-    Returns ``(call, steps_j)`` where the call maps the input arrays to a
-    padded output of ``steps_j`` rows per outer iteration (row ``t`` holds
-    iteration position ``t + x_lo + out_lead``).
-    """
+    ``sizes`` is ``(Nj, Ni)`` for 2-D grids or ``(Nk, Nj, Ni)`` for 3-D.
+    Returns ``(call, steps_j)``; the call maps the input arrays to one
+    padded output per ``spec.outs`` entry (a list when there are
+    several).  Row-output row ``t`` holds iteration position
+    ``t + x_lo + out.lead``; accumulator outputs are ``(1, width)``."""
     if spec.n_outer == 0:
-        nj, ni = shape
+        nj, ni = sizes
         nk = None
+    elif spec.n_outer == 1:
+        nk, nj, ni = sizes
     else:
-        nk, nj, ni = shape
+        raise ValueError(f"unsupported n_outer={spec.n_outer}")
+    if spec.accs and spec.n_outer != 0:
+        raise ValueError("carried accumulators require a 2-D (j,) grid")
     steps_j = (nj + spec.x_hi_off) - spec.x_lo
-    all_bufs = (*spec.in_bufs, *spec.bufs)
-    bwidth = {b.name: ni + (b.i_hi - b.i_lo) for b in all_bufs}
+
+    arr_ins = [i for i in spec.inputs if not i.scalar]
+    win_bufs = [BufSpec(f"in_{i.name}", i.stages, i.i_lo, i.i_hi)
+                for i in arr_ins] + list(spec.bufs)
+    bwidth = {b.name: ni + (b.i_hi - b.i_lo) for b in win_bufs}
+    acc_w = {a.name: ni + a.w_off for a in spec.accs}
+    ref_idx = {ispec.name: k for k, ispec in enumerate(spec.inputs)}
 
     def kernel(*refs):
         nin = len(spec.inputs)
         in_refs = refs[:nin]
-        o_ref = refs[nin]
-        scratch = refs[nin + 1:]
-        ref_of = {b.name: (r, b) for r, b in zip(scratch, all_bufs)}
+        o_refs = refs[nin:nin + len(spec.outs)]
+        scratch = refs[nin + len(spec.outs):]
+        ref_of = {b.name: (r, b) for r, b in zip(scratch, win_bufs)}
+        acc_of = {a.name: (r, a)
+                  for r, a in zip(scratch[len(win_bufs):], spec.accs)}
 
-        x = pl.program_id(spec.n_outer) + spec.x_lo
+        jid = pl.program_id(spec.n_outer)
+        x = jid + spec.x_lo
 
-        # 1. stream one new input row per grid step into its VMEM window
-        for k, name in enumerate(spec.inputs):
-            ref, b = ref_of[f"in_{name}"]
-            row = in_refs[k][0, :] if spec.n_outer == 0 else in_refs[k][0, 0, :]
-            pos = x + spec.in_leads[k]
+        # 0. identity-initialize accumulators on the first grid step
+        if spec.accs:
+            @pl.when(jid == 0)
+            def _init_accs():
+                for r, a in acc_of.values():
+                    r[0, :] = jnp.full((r.shape[1],), a.init, dtype)
+
+        # 1. stream one new row per array input into its VMEM window
+        for ispec in arr_ins:
+            ref, b = ref_of[f"in_{ispec.name}"]
+            w = bwidth[b.name]
+            src = in_refs[ref_idx[ispec.name]]
+            row = src[0, :] if spec.n_outer == 0 else src[0, 0, :]
+            pos = x + ispec.lead
             pl.store(
                 ref,
-                (pl.dslice(_mod(pos, b.stages), 1), pl.dslice(0, ni)),
+                (pl.dslice(_mod(pos, b.stages), 1), pl.dslice(0, w)),
                 row[None, :],
             )
 
@@ -136,11 +223,21 @@ def build_call(spec: StencilSpec, shape: tuple[int, ...], dtype,
         local: dict[str, jnp.ndarray] = {}
         for step in spec.steps:
             ins = []
+            cur = None
+            if step.acc is not None:
+                aref, _ = acc_of[step.acc]
+                wa = acc_w[step.acc]
+                cur = pl.load(aref, (pl.dslice(0, 1), pl.dslice(0, wa)))[0]
+                ins.append(cur)
             for rd in step.reads:
                 w = ni + rd.w_off
                 if rd.src.startswith("local:"):
                     lrow = local[rd.src[6:]]
                     ins.append(jax.lax.slice(lrow, (rd.col0,), (rd.col0 + w,)))
+                elif rd.src.startswith("scalar:"):
+                    sref = in_refs[ref_idx[rd.src[7:]]]
+                    ins.append(sref[0, 0] if spec.n_outer == 0
+                               else sref[0, 0, 0])
                 else:
                     ref, b = ref_of[rd.src]
                     stage = _mod(x + rd.j_off, b.stages)
@@ -149,64 +246,106 @@ def build_call(spec: StencilSpec, shape: tuple[int, ...], dtype,
                                       pl.dslice(rd.col0 - b.i_lo, w)))[0]
                     )
             vals = step.fn(*ins)
+            if step.acc is not None:
+                # predicated combine: warm-up/drain rows must not pollute
+                lo, hi = step.valid
+                pos = x + step.lead
+                ok = (pos >= lo) & (pos < nj + hi)
+                new = jnp.where(ok, vals, cur)
+                aref, _ = acc_of[step.acc]
+                pl.store(aref, (pl.dslice(0, 1), pl.dslice(0, acc_w[step.acc])),
+                         new[None, :])
+                continue
             if len(step.writes) == 1:
                 vals = (vals,)
-            for (wkind, wtgt), val in zip(step.writes, vals):
-                if wkind == "local":
-                    local[str(wtgt)] = val
-                elif wkind == "buf":
-                    ref, b = ref_of[str(wtgt)]
-                    stage = _mod(x + step.lead, b.stages)
-                    pl.store(
-                        ref,
-                        (pl.dslice(stage, 1),
-                         pl.dslice(step.out_col0 - b.i_lo, val.shape[0])),
-                        val[None, :],
-                    )
-                else:  # 3. the output row for this grid step
-                    out_row = jnp.zeros((ni,), val.dtype)
-                    out_row = jax.lax.dynamic_update_slice(
-                        out_row, val, (step.out_col0,)
-                    )
-                    if spec.n_outer == 0:
-                        o_ref[0, :] = out_row
-                    else:
-                        o_ref[0, 0, :] = out_row
+            for targets, val in zip(step.writes, vals):
+                for wkind, wtgt in targets:
+                    if wkind == "local":
+                        local[str(wtgt)] = val
+                    elif wkind == "buf":
+                        ref, b = ref_of[str(wtgt)]
+                        stage = _mod(x + step.lead, b.stages)
+                        pl.store(
+                            ref,
+                            (pl.dslice(stage, 1),
+                             pl.dslice(step.out_col0 - b.i_lo, val.shape[0])),
+                            val[None, :],
+                        )
+                    else:  # 3. one output row for this grid step
+                        out_row = jnp.zeros((ni,), val.dtype)
+                        out_row = jax.lax.dynamic_update_slice(
+                            out_row, val, (step.out_col0,)
+                        )
+                        oref = o_refs[int(wtgt)]
+                        if spec.n_outer == 0:
+                            oref[0, :] = out_row
+                        else:
+                            oref[0, 0, :] = out_row
 
+        # 3b. dump accumulators into their revisited output blocks
+        for oi, out in enumerate(spec.outs):
+            if out.acc is not None:
+                aref, _ = acc_of[out.acc]
+                wa = acc_w[out.acc]
+                o_refs[oi][0, :] = pl.load(
+                    aref, (pl.dslice(0, 1), pl.dslice(0, wa)))[0]
+
+    in_specs = []
+    out_specs = []
+    out_shape = []
     if spec.n_outer == 0:
         grid = (steps_j,)
-        in_specs = [
-            pl.BlockSpec(
-                (1, ni),
-                (lambda j, _l=lead: (jnp.clip(j + spec.x_lo + _l, 0, nj - 1), 0)),
-            )
-            for lead in spec.in_leads
-        ]
-        out_specs = pl.BlockSpec((1, ni), lambda j: (j, 0))
-        out_shape = jax.ShapeDtypeStruct((steps_j, ni), dtype)
+        for ispec in spec.inputs:
+            if ispec.scalar:
+                in_specs.append(pl.BlockSpec((1, 1), lambda j: (0, 0)))
+                continue
+            h = nj + (ispec.j_hi - ispec.j_lo)
+            w = ni + (ispec.i_hi - ispec.i_lo)
+            in_specs.append(pl.BlockSpec(
+                (1, w),
+                (lambda j, _l=ispec.lead, _o=ispec.j_lo, _h=h:
+                 (jnp.clip(j + spec.x_lo + _l - _o, 0, _h - 1), 0)),
+            ))
+        for out in spec.outs:
+            if out.acc is not None:
+                wa = acc_w[out.acc]
+                out_specs.append(pl.BlockSpec((1, wa), lambda j: (0, 0)))
+                out_shape.append(jax.ShapeDtypeStruct((1, wa), dtype))
+            else:
+                out_specs.append(pl.BlockSpec((1, ni), lambda j: (j, 0)))
+                out_shape.append(jax.ShapeDtypeStruct((steps_j, ni), dtype))
     else:
         grid = (nk, steps_j)
-        in_specs = [
-            pl.BlockSpec(
-                (1, 1, ni),
-                (lambda kk, j, _l=lead:
-                 (kk, jnp.clip(j + spec.x_lo + _l, 0, nj - 1), 0)),
-            )
-            for lead in spec.in_leads
-        ]
-        out_specs = pl.BlockSpec((1, 1, ni), lambda kk, j: (kk, j, 0))
-        out_shape = jax.ShapeDtypeStruct((nk, steps_j, ni), dtype)
+        for ispec in spec.inputs:
+            if ispec.scalar:
+                in_specs.append(
+                    pl.BlockSpec((1, 1, 1), lambda kk, j: (0, 0, 0)))
+                continue
+            h = nj + (ispec.j_hi - ispec.j_lo)
+            w = ni + (ispec.i_hi - ispec.i_lo)
+            in_specs.append(pl.BlockSpec(
+                (1, 1, w),
+                (lambda kk, j, _l=ispec.lead, _o=ispec.j_lo, _h=h:
+                 (kk, jnp.clip(j + spec.x_lo + _l - _o, 0, _h - 1), 0)),
+            ))
+        for out in spec.outs:
+            assert out.acc is None  # guarded above
+            out_specs.append(pl.BlockSpec((1, 1, ni), lambda kk, j: (kk, j, 0)))
+            out_shape.append(jax.ShapeDtypeStruct((nk, steps_j, ni), dtype))
 
     scratch_shapes = [
         pltpu.VMEM((b.stages, _pad_to_lane(ni + (b.i_hi - b.i_lo))), dtype)
-        for b in all_bufs
+        for b in win_bufs
+    ] + [
+        pltpu.VMEM((1, _pad_to_lane(ni + a.w_off)), dtype)
+        for a in spec.accs
     ]
     call = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=in_specs,
-        out_specs=out_specs,
-        out_shape=out_shape,
+        out_specs=out_specs if len(out_specs) > 1 else out_specs[0],
+        out_shape=out_shape if len(out_shape) > 1 else out_shape[0],
         scratch_shapes=scratch_shapes,
         interpret=interpret,
     )

@@ -4,12 +4,14 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.codegen_pallas import compile_program_pallas
-
 
 def run_fused_stencil(program, arrays, *, interpret: bool = True,
                       dtype=jnp.float32):
     """Compile `program` through the HFAV engine onto the Pallas backend
-    and execute it on `arrays` (dict name -> jnp array)."""
-    gen = compile_program_pallas(program, dtype=dtype, interpret=interpret)
+    and execute it on `arrays` (dict name -> jnp array).  Compilation is
+    cached by the engine's dispatch layer."""
+    from repro.core.engine import compile_program
+
+    gen = compile_program(program, backend="pallas", dtype=dtype,
+                          interpret=interpret)
     return gen.fn(**arrays)

@@ -46,8 +46,19 @@ def _compile(cell, mesh):
     return lowered.compile()
 
 
+def _cost_dict(cost) -> dict:
+    """Normalize ``compiled.cost_analysis()`` across JAX versions: older
+    releases return a dict (or None), newer ones a *list* of per-module
+    cost dicts whose first entry is the outer module."""
+    if cost is None:
+        return {}
+    if isinstance(cost, (list, tuple)):
+        return dict(cost[0]) if cost else {}
+    return dict(cost)
+
+
 def _costs(compiled, n_chips: int) -> dict:
-    cost = compiled.cost_analysis() or {}
+    cost = _cost_dict(compiled.cost_analysis())
     coll = collective_bytes(compiled.as_text(), default_group=n_chips)
     out = {"flops": float(cost.get("flops", 0.0)),
            "bytes": float(cost.get("bytes accessed", 0.0))}
@@ -88,7 +99,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool, out_dir: str,
                 }
                 print(f"[{arch} x {shape_name} x {mesh_name}] "
                       f"memory_analysis: {mem_stats}")
-                full_cost = compiled.cost_analysis() or {}
+                full_cost = _cost_dict(compiled.cost_analysis())
                 print(f"[{arch} x {shape_name} x {mesh_name}] cost_analysis "
                       f"(outer module): flops={full_cost.get('flops', 0):.3e} "
                       f"bytes={full_cost.get('bytes accessed', 0):.3e}")

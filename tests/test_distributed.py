@@ -82,9 +82,11 @@ print("SHARDED_OK")
     assert "SHARDED_OK" in r.stdout, r.stderr[-2000:]
 
 
+@pytest.mark.slow
 def test_dryrun_cell_end_to_end(tmp_path):
     """One full dry-run cell on the 16x16 production mesh: lower, compile,
-    memory_analysis, roofline record."""
+    memory_analysis, roofline record.  ~160s of XLA compile; marked slow
+    so scripts/test_fast.sh can skip it."""
     r = subprocess.run(
         [sys.executable, "-m", "repro.launch.dryrun",
          "--arch", "mamba2-130m", "--shape", "decode_32k",

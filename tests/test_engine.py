@@ -99,6 +99,75 @@ def test_unreachable_goal():
         infer(prog)
 
 
+def test_topo_merge_unorderable_bodies_raises():
+    """_topo_merge_bodies must refuse bodies with a mutual (cyclic)
+    dependency instead of emitting an arbitrary order."""
+    from repro.core.dataflow import DataflowDAG, Group
+    from repro.core.fusion import Unfusable, _topo_merge_bodies
+    from repro.core.inest import Body
+
+    prog = Program(rules=[], axioms=[], goals=[], loop_order=("i",))
+    g1 = Group(gid=1, kind="kernel", rule=None, instances=[])
+    g2 = Group(gid=2, kind="kernel", rule=None, instances=[])
+    dag = DataflowDAG(prog, [g1, g2], {}, {(1, 2), (2, 1)})
+    dag._succ = {1: {2}, 2: {1}}
+    dag._pred = {1: {2}, 2: {1}}
+    with pytest.raises(Unfusable):
+        _topo_merge_bodies(dag, Body([1]), Body([2]))
+
+
+def _direct_reduction_consumer_program():
+    """sq -> reduce -> scale, where scale ALSO reads sq's output: the
+    broadcast consumes the accumulator directly (no 0-dim finalize)."""
+    k_sq = kernel("sq", [("a", "u?[j?][i?]")], [("o", "sq(u?[j?][i?])")],
+                  fn=lambda a: a * a)
+    k_tot = kernel("tot", [("x", "sq(u[j][i])")], [("t", "tot(u)")],
+                   fn=lambda acc, x: acc + x, kind="reduce", init=0.0)
+    k_scale = kernel(
+        "scale", [("s", "sq(u?[j?][i?])"), ("t", "tot(u?)")],
+        [("o", "scaled(u?[j?][i?])")], fn=lambda s, t: s / (t + 1.0))
+    return Program(
+        rules=[k_sq, k_tot, k_scale],
+        axioms=[axiom("u[j?][i?]", j="Nj", i="Ni")],
+        goals=[goal("scaled(u[j][i])", store_as="scaled",
+                    j=("Nj", 0, 0), i=("Ni", 0, 0))],
+        loop_order=("j", "i"),
+    )
+
+
+def test_barred_vertex_cut_on_direct_reduction_consumer():
+    """The accumulator-consumer split (Fig. 6): `scale` cannot share the
+    reduced j-loop, and the store — reachable from the failed candidate —
+    must be *barred* into the second nest rather than fused upstream."""
+    idag, dag, sched, plan = pipeline(_direct_reduction_consumer_program())
+    assert sched.n_toplevel() == 2
+    by_id = {g.gid: g for g in dag.groups}
+    first = {by_id[g].name for g in sched.nests[0].groups()}
+    second = {by_id[g].name for g in sched.nests[1].groups()}
+    assert {"sq", "tot"} <= first and "scale" not in first
+    assert {"scale", "store"} <= second
+    # sq's output crosses the split and must be materialized
+    kinds = {p.name: p.kind for p in plan.vars.values()}
+    assert kinds["sq_u"] == "full"
+
+
+def test_direct_reduction_consumer_matches_unfused(rng):
+    """Regression: before the split fix the fused nest read a *partial*
+    accumulator and produced wrong values."""
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import compile_program
+    from repro.core.unfused import build_unfused
+
+    prog = _direct_reduction_consumer_program()
+    gen = compile_program(prog, backend="jax", use_cache=False)
+    u = jnp.asarray(rng.standard_normal((6, 7)), jnp.float32)
+    got = gen.fn(u)["scaled"]
+    want = build_unfused(prog).fn(u=u)["scaled"]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=1e-4)
+
+
 def test_demand_exceeding_availability_raises():
     # goal wants the full range but the kernel needs i+1 halo from an
     # axiom that only covers [0, N)

@@ -25,7 +25,7 @@ def test_paper_pass_counts():
 def test_emitted_source_is_compilable_python():
     for build in (laplace5_program, normalization_program, cosmo_program,
                   hydro1d_program):
-        gen = compile_program(build())
+        gen = compile_program(build(), backend="jax")
         compile(gen.source, "<test>", "exec")  # emitted source parses
         assert "lax.fori_loop" in gen.source
 

@@ -1,0 +1,22 @@
+"""Hypothesis property for term unification (translation invariance)."""
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)"
+)
+from hypothesis import given, strategies as st  # noqa: E402
+
+from repro.core.terms import Index, Ref, Term, parse_term, unify_term
+
+
+@given(st.integers(-4, 4), st.integers(-4, 4))
+def test_unify_translation_invariance(da, db):
+    """Unifying a pattern against any translate binds consistently."""
+    pat = parse_term("q?[j?-1][i?+1]")
+    con = Term(Ref("u", (Index("j", da - 1), Index("i", db + 1))))
+    b = unify_term(pat, con)
+    assert b.dims["j?"] == Index("j", da)
+    assert b.dims["i?"] == Index("i", db)
+    # every other occurrence shifts by the same displacement
+    other = b.subst_term(parse_term("q?[j?+2][i?]"))
+    assert other.ref.indices == (Index("j", da + 2), Index("i", db))
