@@ -1,0 +1,79 @@
+"""One benchmark leg per lifted Pallas-executor restriction.
+
+Each leg times ``backend="pallas"`` against the unfused oracle value
+(which it must match) and reports the JAX-backend time for the same
+program as its in-row baseline:
+
+* ``pyramid4d``  — outer grids (two loop dims flattened onto leading
+  Pallas grid dims, blur contracted to a 3-row rolling buffer);
+* ``energy3d``   — k-tiled reduction (carried VMEM accumulator across
+  every outer tile of the (k, j) grid);
+* ``plane_sum``  — per-outer-tile reduction (output keeps k);
+* ``smooth_norm`` — cross-row read of a same-nest materialized variable
+  (served from a rolling VMEM window);
+* ``cosmo_dbuf`` — double-buffered input DMA (explicit two-slot
+  async-copy pipeline) vs the BlockSpec-streamed cosmo leg.
+
+Off-TPU the legs run in interpret mode on bounded sizes (the grid
+unrolls at trace time); pass ``interpret=False`` on a TPU runtime for
+real timings, and feed measured split-schedule wins back into
+``repro.core.engine.register_pallas_split_win`` so ``backend="auto"``
+routes them to the stencil executor.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core import compile_program
+from repro.core.codegen_jax import CodegenError
+from repro.core.programs import (cosmo_program, energy3d_program,
+                                 plane_sum_program, pyramid4d_program,
+                                 smooth_norm_program)
+from repro.core.unfused import build_unfused
+
+from .common import mk, time_fn
+
+# interpret mode unrolls the grid at trace time: keep row counts bounded
+CASES = [
+    ("pyramid4d", pyramid4d_program, "edge", (2, 2, 24, 128), False),
+    ("energy3d", energy3d_program, "energy", (4, 32, 256), False),
+    ("plane_sum", plane_sum_program, "colsum", (4, 32, 256), False),
+    ("smooth_norm", smooth_norm_program, "nflux", (96, 256), False),
+    ("cosmo_dbuf", cosmo_program, "unew", (4, 48, 256), True),
+]
+
+
+def run(interpret: bool = True):
+    rng = np.random.default_rng(7)
+    rows = []
+    for name, build, out, shape, dbuf in CASES:
+        prog = build()
+        u = mk(rng, shape)
+        ref = build_unfused(prog).fn(u=u)[out]
+        gen = compile_program(prog, backend="pallas", interpret=interpret,
+                              double_buffer=dbuf)
+        pallas_fn = jax.jit(lambda u, _g=gen: _g.fn(u=u)[out])
+        t_p, got = time_fn(pallas_fn, u)
+        assert np.allclose(np.asarray(got), np.asarray(ref),
+                           atol=1e-4, rtol=1e-4), name
+        try:
+            gen_j = compile_program(prog, backend="jax")
+            jax_fn = jax.jit(lambda u, _g=gen_j: _g.fn(u)[out])
+            t_j, got_j = time_fn(jax_fn, u)
+            assert np.allclose(np.asarray(got_j), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4), name
+            base = f"jax_us={t_j * 1e6:.0f};"
+        except CodegenError:
+            base = "jax_us=n/a;"  # kept-outer-dim reductions are Pallas-only
+        cells = int(np.prod(shape))
+        rows.append({
+            "name": f"lifted_{name}_{'x'.join(map(str, shape))}",
+            "us_per_call": t_p * 1e6,
+            "derived": (
+                f"backend=pallas;interpret={interpret};"
+                f"double_buffer={dbuf};{base}"
+                f"Mcells_s={cells / t_p / 1e6:.0f}"
+            ),
+        })
+    return rows

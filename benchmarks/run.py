@@ -5,6 +5,7 @@ Prints ``name,us_per_call,derived`` CSV:
   cosmo          — paper Fig. 11 (§5.3)
   hydro          — paper Fig. 13 (§5.4)
   kernels        — HFAV contraction applied to LM hot paths (DESIGN.md §5)
+  lifted         — one leg per lifted Pallas restriction (docs/BACKENDS.md)
 """
 from __future__ import annotations
 
@@ -12,13 +13,14 @@ import sys
 
 
 def main() -> None:
-    from . import cosmo, hydro, kernels_bench, normalization
+    from . import cosmo, hydro, kernels_bench, lifted, normalization
 
     suites = [
         ("normalization", normalization.run),
         ("cosmo", cosmo.run),
         ("hydro", hydro.run),
         ("kernels", kernels_bench.run),
+        ("lifted", lifted.run),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")

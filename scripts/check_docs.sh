@@ -1,0 +1,73 @@
+#!/usr/bin/env bash
+# Documentation guardrails, run as part of the tier-1 flow (invoked by
+# tests/test_docs.py, which both the canonical tier-1 pytest command
+# and scripts/test_fast.sh execute):
+#
+#   1. every public (non-underscore) module-level function/class in
+#      repro.core.engine must carry a docstring — the engine is the
+#      public API surface documented in docs/BACKENDS.md;
+#   2. every ```python code block in docs/*.md must still parse, and
+#      its import statements must still resolve — so the docs cannot
+#      silently rot as modules move.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python - <<'PY'
+import ast
+import pathlib
+import sys
+
+failures: list[str] = []
+
+# ---- 1. public symbols in core/engine.py need docstrings ------------------
+engine = pathlib.Path("src/repro/core/engine.py")
+tree = ast.parse(engine.read_text())
+for node in tree.body:
+    if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+        continue
+    if node.name.startswith("_"):
+        continue
+    if ast.get_docstring(node) is None:
+        failures.append(f"{engine}:{node.lineno}: public symbol "
+                        f"{node.name!r} lacks a docstring")
+
+# ---- 2. python code blocks in docs/*.md must stay importable --------------
+def blocks(text: str):
+    lines = text.splitlines()
+    cur: list[str] | None = None
+    start = 0
+    for n, line in enumerate(lines, 1):
+        s = line.strip()
+        if cur is None and s.startswith("```python"):
+            cur, start = [], n + 1
+        elif cur is not None and s.startswith("```"):
+            yield start, "\n".join(cur)
+            cur = None
+        elif cur is not None:
+            cur.append(line)
+
+for doc in sorted(pathlib.Path("docs").glob("*.md")):
+    for lineno, code in blocks(doc.read_text()):
+        try:
+            block = ast.parse(code)
+        except SyntaxError as e:
+            failures.append(f"{doc}:{lineno}: code block does not parse: {e}")
+            continue
+        imports = [n for n in block.body
+                   if isinstance(n, (ast.Import, ast.ImportFrom))]
+        for imp in imports:
+            src = ast.unparse(imp)
+            try:
+                exec(compile(ast.Module([imp], []), str(doc), "exec"), {})
+            except Exception as e:
+                failures.append(
+                    f"{doc}:{lineno + imp.lineno - 1}: {src!r} failed: {e}")
+
+if failures:
+    print("check_docs: FAIL")
+    for f in failures:
+        print("  " + f)
+    sys.exit(1)
+print("check_docs: OK (engine docstrings + docs/*.md code blocks)")
+PY

@@ -1,7 +1,9 @@
 #!/usr/bin/env bash
 # Tier-1 fast wrapper: the full suite minus tests marked `slow`
-# (currently the ~160s dryrun subprocess compile).  The canonical
-# tier-1 command in ROADMAP.md runs everything.
+# (currently the ~160s dryrun subprocess compile).  The docs guardrails
+# (scripts/check_docs.sh) run inside the suite via tests/test_docs.py,
+# so both this wrapper and the canonical tier-1 command in ROADMAP.md
+# pick them up without a duplicate invocation.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -q -m "not slow" "$@"

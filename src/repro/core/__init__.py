@@ -2,7 +2,8 @@
 from .codegen_jax import Generated
 from .codegen_pallas import PallasGenerated, PallasUnsupported
 from .engine import (BACKENDS, clear_compile_cache, compile_cache_size,
-                     compile_program, explain, program_signature)
+                     compile_program, explain, pallas_auto_viable,
+                     program_signature, register_pallas_split_win)
 from .fusion import FusedSchedule, Unfusable, fuse_inest_dag
 from .infer import IDAG, InferenceError, infer
 from .dataflow import build_dataflow
@@ -13,7 +14,8 @@ from .terms import Term, parse_term, unify_term
 __all__ = [
     "BACKENDS", "Generated", "PallasGenerated", "PallasUnsupported",
     "clear_compile_cache", "compile_cache_size", "compile_program",
-    "program_signature", "explain", "FusedSchedule", "Unfusable",
+    "pallas_auto_viable", "program_signature", "register_pallas_split_win",
+    "explain", "FusedSchedule", "Unfusable",
     "fuse_inest_dag", "IDAG", "InferenceError", "infer", "build_dataflow",
     "analyze_storage", "reuse_graph", "reuse_order", "Extent", "KernelRule",
     "Program", "axiom", "goal", "kernel", "Term", "parse_term", "unify_term",

@@ -119,6 +119,12 @@ class Emitter:
         ext = self.group_ext(g, self.inner)
         return f"W{g.gid}"
 
+    def _is_reduction_result(self, vp: VarPlan) -> bool:
+        """A reduction result stored straight to a goal keeps its
+        accumulator storage (kind 'external_out', producer reducing)."""
+        return (vp.var.producer is not None
+                and vp.var.producer.is_reduction)
+
     def var_origin(self, vp: VarPlan, d: str) -> int:
         v = vp.var
         if vp.kind == "external_in":
@@ -162,6 +168,11 @@ class Emitter:
         for key, vp in sorted(self.plan.vars.items(), key=lambda kv: str(kv[0])):
             v = vp.var
             if vp.kind == "external_out":
+                if self._is_reduction_result(vp):
+                    # the goal is the reduction itself: its storage is the
+                    # accumulator, finalized in the return expression
+                    self._emit_acc_init(vp)
+                    continue
                 shape = ", ".join(
                     (v.extent[d].size if d in v.extent else f"N{d}") for d in v.dims
                 )
@@ -264,7 +275,12 @@ class Emitter:
                 if not odims:
                     return f"{arr}[{col0}:{col0} + {wexpr}]"
                 pos = [outer_pos(d, self.var_origin(vp, d)) for d in odims]
-                fn = "_row2" if len(odims) == 1 else "_row3"
+                if len(odims) > 3:
+                    raise CodegenError(
+                        f"read of {v.name}: arrays over more than 4 dims "
+                        f"are unsupported"
+                    )
+                fn = f"_row{len(odims) + 1}"
                 return f"{fn}({arr}, {', '.join(pos)}, {col0}, {wexpr})"
             if not odims:
                 return arr  # 0-dim external
@@ -392,7 +408,12 @@ class Emitter:
                         adj = lead - self.var_origin(vp, d)
                         base = bound[d]
                         pos.append(f"{base} + {adj}" if adj else base)
-                    fn = "_setrow2" if len(odims) == 1 else "_setrow3"
+                    if len(odims) > 3:
+                        raise CodegenError(
+                            f"write of {v.name}: arrays over more than "
+                            f"4 dims are unsupported"
+                        )
+                    fn = f"_setrow{len(odims) + 1}"
                     w.w(f"{arr} = {fn}({arr}, {', '.join(pos)}, {col0}, {tmp}, {valid})")
             elif not odims:
                 w.w(f"{arr} = {tmp}")
@@ -400,31 +421,6 @@ class Emitter:
                 raise CodegenError(f"unsupported write of {v.name}")
         else:
             raise CodegenError(f"cannot write {v.name} of kind {vp.kind}")
-
-    def _emit_store(self, g: Group, bound: dict[str, str]) -> None:
-        # store pseudo-kernel: copy its (single) input into the external out.
-        (pname, key, offs), = g.reads
-        expr = self.read_expr(g, key, offs, bound)
-        vp = self.vplan(key)
-        v = vp.var
-        out = _st("o", self._out_name(v))
-        odims = [d for d in v.dims if d != self.inner]
-        if not v.dims:
-            self.w.w(f"{out} = {expr}")
-            return
-        valid = self.valid_expr(g, bound)
-        if self.inner in v.dims and not odims:
-            ext = self.group_ext(g, self.inner)
-            col0 = ext.lo
-            self.w.w(f"{out} = {out}.at[{col0}:{col0} + {self.g_width(g)}].set({expr})")
-            return
-        col0 = self.g_ilo(g)
-        pos = []
-        for d in odims:
-            lead = self.lead(g.gid, d)
-            pos.append(f"{bound[d]} + {lead}" if lead else bound[d])
-        fn = "_setrow2" if len(odims) == 1 else "_setrow3"
-        self.w.w(f"{out} = {fn}({out}, {', '.join(pos)}, {col0}, {expr}, {valid})")
 
     # ---- nests ---------------------------------------------------------------
 
@@ -457,7 +453,8 @@ class Emitter:
         # acc resets: a reduction's identity initialization belongs to the
         # prologue of its outermost reduced loop (the paper's triple).
         for key, vp in self.plan.vars.items():
-            if vp.kind != "acc":
+            if vp.kind != "acc" and not (
+                    vp.kind == "external_out" and self._is_reduction_result(vp)):
                 continue
             g = vp.var.producer
             if g is None or g.gid not in node.groups():
@@ -500,7 +497,18 @@ class Emitter:
         for t, goal in self.idag.goal_of.items():
             v = self.dag.variables[t.base()]
             name = goal.store_as or v.name
-            outs.append(f"'{name}': {_st('o', name)}")
+            vp = self.vplan(t.base())
+            if vp.kind == "external_out" and self._is_reduction_result(vp):
+                g = v.producer
+                assert g is not None and g.rule is not None
+                if self.inner in g.reduced_dims:
+                    expr = (f"_lane_reduce(_fns['{g.rule.name}'], "
+                            f"{_st('a', v.name)}, {g.rule.init!r})")
+                else:
+                    expr = _st("a", v.name)
+                outs.append(f"'{name}': {expr}")
+            else:
+                outs.append(f"'{name}': {_st('o', name)}")
         self.w.w(f"return {{{', '.join(sorted(set(outs)))}}}")
         self.w.depth -= 1
         return self.w.source()

@@ -3,27 +3,43 @@
 A fused schedule is executed as a *sequence of stencil calls*, one per
 top-level iteration nest, glued together on the host:
 
-* every nest whose groups iterate the (j, i) plane becomes one
-  ``pallas_call`` (grid ``(j,)`` or ``(k, j)``) built by
-  :func:`repro.kernels.stencil2d.kernel.build_call`;
-* reductions (``acc``-kind variables) become carried VMEM accumulator
-  rows combined per grid step and lane-reduced on the host (the
-  vectorized-reduction triple of Section 3.5);
+* every nest whose groups iterate the row/vector ``(j, i)`` plane
+  becomes one ``pallas_call`` built by
+  :func:`repro.kernels.stencil2d.kernel.build_call`; the nest's outer
+  loop identifiers — any number of them — are flattened one-to-one onto
+  leading Pallas grid dimensions by :func:`_extract_nest` (the grid
+  mapper), so ``(j, i)`` runs on a 1-D grid, ``(k, j, i)`` on ``(k, j)``,
+  ``(l, k, j, i)`` on ``(l, k, j)``, and so on;
+* reductions (``acc``-kind variables) become VMEM accumulator rows
+  combined per grid step and lane-reduced on the host (the
+  vectorized-reduction triple of Section 3.5).  On outer grids the
+  accumulator is either *carried* across every outer tile (a k-tiled
+  global reduction — one running row for the whole grid) or *per-outer*
+  (the reduction output keeps the outer dims: the row re-initializes at
+  each tile and one combined row is emitted per tile);
 * 0-dim kernels (a reduction's finalize, broadcast factors) run on the
   host between calls, in the prologue/epilogue slots the fusion pass
   assigned them;
 * ``full``-kind variables crossing a split are materialized between
   calls and re-streamed as inputs of the consuming nest, with their
-  halo-trimmed origins tracked in :class:`InSpec`;
+  halo-trimmed origins tracked in :class:`InSpec`; when such a variable
+  is *also* consumed inside its producing nest at a row offset
+  (a cross-row read), the producer additionally writes a rolling VMEM
+  window sized by the consumer-position spread so in-nest readers see
+  earlier rows without a round-trip through HBM;
 * multiple terminal outputs map to multi-ref out specs.
 
-Remaining restrictions (checked here; the pure-JAX backend covers the
-rest): loop order (j, i) or (k, j, i) — ``n_outer > 1`` raises
-:class:`PallasUnsupported` explicitly, the flat output assembly would
-otherwise mis-index; stencil offsets only in the two innermost
-dimensions; reductions only on 2-D grids with at most the innermost
-dimension surviving; no cross-row reads of same-nest materialized
-variables.
+Remaining restrictions (checked here with messages naming the offending
+variable/dimension; the pure-JAX backend covers them except where
+docs/BACKENDS.md notes otherwise): loop orders
+with fewer than two identifiers; stencil offsets in dims other than the
+innermost two; contraction (rolling buffers) over a dim other than the
+row dim; reduction outputs keeping the row dim or a strict subset of the
+outer dims; streamed inputs whose dims are not a suffix of the loop
+order (or 1-D row variables crossing a stencil-call boundary); non-zero
+extents in outer dims; cross-call reads of vector accumulators; negative
+innermost origins on materialized/terminal outputs.
+`docs/BACKENDS.md` keeps the user-facing table of these cases.
 """
 from __future__ import annotations
 
@@ -39,14 +55,20 @@ from .dataflow import Group, build_dataflow
 from .fusion import fuse_inest_dag
 from .infer import IDAG, infer
 from .inest import walk_bodies
-from .reuse import StoragePlan, VarPlan, analyze_storage
+from .reuse import (StoragePlan, VarPlan, analyze_storage,
+                    consumer_positions, window_stages)
 from .rules import Program
 from .runtime import lane_reduce
 from .terms import Term
 
 
 class PallasUnsupported(Exception):
-    pass
+    """A program shape the stencil executor does not cover.
+
+    ``backend="auto"`` treats this as a routing signal and falls back to
+    the JAX backend; ``backend="pallas"`` propagates it.  Messages name
+    the specific restriction and the offending variable or dimension —
+    the live restriction table is docs/BACKENDS.md."""
 
 
 @dataclass(frozen=True)
@@ -71,6 +93,7 @@ class OutBind:
     i_hi: int = 0
     reduce_fn: Optional[Callable] = None  # lane reduction for scalar accs
     reduce_init: float = 0.0
+    per_outer: bool = False  # acc emitted once per outer tile
 
 
 @dataclass
@@ -101,20 +124,31 @@ def _host_step(plan: StoragePlan, g: Group) -> HostStep:
     reads = []
     for _, key, offs in g.reads:
         if any(o != 0 for o in offs.values()):
-            raise PallasUnsupported(f"offset read in 0-dim group {g}")
+            raise PallasUnsupported(
+                f"group {g} reads {plan.vars[key].name} at a non-zero "
+                f"offset: 0-dim host kernels cannot read offsets"
+            )
         reads.append(_env_name(plan.vars[key]))
     writes = [_env_name(plan.vars[key]) for _, key in g.writes]
     return HostStep(g.rule.fn, tuple(reads), tuple(writes))
 
 
-def _extract_nest(plan: StoragePlan, idag: IDAG, nest_idx: int,
-                  nest_of_gid: dict[int, int]) -> NestExec:
+def _extract_nest(plan: StoragePlan, idag: IDAG, nest_idx: int) -> NestExec:
+    """The grid mapper: lower one top-level fused nest to a StencilSpec.
+
+    Outer loop identifiers are flattened onto leading Pallas grid dims;
+    the row identifier becomes the final (fastest) grid dim; the
+    innermost identifier is vectorized across lanes.  Raises
+    :class:`PallasUnsupported` (naming the restriction and the offending
+    variable/dim) for the shapes listed in docs/BACKENDS.md."""
     schedule = plan.schedule
     program = schedule.program
     dag = schedule.dag
     inner = program.loop_order[-1]
     jdim = program.loop_order[-2]
-    n_outer = len(program.loop_order) - 2
+    outer_dims = program.loop_order[:-2]
+    n_outer = len(outer_dims)
+    nest_of_gid = plan.nest_of_gid
     np_ = plan.nests[nest_idx]
     by_id = {g.gid: g for g in dag.groups}
     goal_of_base = {t.base(): goal for t, goal in idag.goal_of.items()}
@@ -146,7 +180,21 @@ def _extract_nest(plan: StoragePlan, idag: IDAG, nest_idx: int,
     def check_offsets(v, offs_by_dim):
         for d, o in offs_by_dim.items():
             if d not in (inner, jdim) and o != 0:
-                raise PallasUnsupported(f"offset in outer dim {d} on {v}")
+                raise PallasUnsupported(
+                    f"read of {v} at offset {o:+d} in outer dim {d!r}: "
+                    f"stencil offsets are only supported in the innermost "
+                    f"two dims ({jdim!r}, {inner!r})"
+                )
+
+    def check_outer_exact(name: str, exts, what: str) -> None:
+        for d in outer_dims:
+            e = exts.get(d)
+            if e is not None and (e.lo != 0 or e.hi != 0):
+                raise PallasUnsupported(
+                    f"{what} {name} has extent [{e.lo:+d}, {e.size}"
+                    f"{e.hi:+d}) in outer dim {d!r}: outer grid dims must "
+                    f"cover [0, {e.size}) exactly"
+                )
 
     # ---- streamed inputs --------------------------------------------------
     in_specs: list[InSpec] = []
@@ -164,31 +212,25 @@ def _extract_nest(plan: StoragePlan, idag: IDAG, nest_idx: int,
             in_env.append(name)
             input_src[key] = f"scalar:{name}"
             return
-        if jdim not in v.dims or inner not in v.dims:
+        rank = len(v.dims)
+        if rank < 2 or tuple(v.dims) != tuple(program.loop_order[-rank:]):
             raise PallasUnsupported(
-                f"input {name} over dims {v.dims}: only (j, i) arrays and "
-                f"scalars can cross a stencil-call boundary"
+                f"streamed input {name} spans dims {v.dims}: the executor "
+                f"streams arrays whose dims are a suffix of the loop order "
+                f"{program.loop_order} ending in ({jdim!r}, {inner!r}); "
+                f"1-D row variables cannot cross a stencil-call boundary"
             )
         exts = axiom_exts[v.key] if vp.kind == "external_in" else v.extent
+        check_outer_exact(name, exts, "streamed input")
         ej = exts.get(jdim)
         ei = exts.get(inner)
         j_lo, j_hi = (ej.lo, ej.hi) if ej is not None else (0, 0)
         i_lo, i_hi = (ei.lo, ei.hi) if ei is not None else (0, 0)
-        ji = v.dims.index(jdim)
-        newest = oldest = 0
-        seen = False
-        for use in v.consumers:
-            if use.group.gid not in grid_gids:
-                continue
-            c_lead = np_.lead(use.group.gid, jdim)
-            for offs in use.offsets:
-                pos = c_lead + offs[ji]
-                newest = pos if not seen else max(newest, pos)
-                oldest = pos if not seen else min(oldest, pos)
-                seen = True
-        lead = max(0, newest)
-        stages = lead - min(oldest, lead) + 1
-        in_specs.append(InSpec(name, stages, lead, j_lo, j_hi, i_lo, i_hi))
+        positions = consumer_positions(np_, v, jdim, within=grid_gids)
+        lead = max(0, max(positions)) if positions else 0
+        stages = window_stages(lead, positions)
+        in_specs.append(InSpec(name, stages, lead, j_lo, j_hi, i_lo, i_hi,
+                               n_outer=rank - 2))
         in_env.append(name)
         input_src[key] = f"in_{name}"
         ext = v.extent.get(jdim)
@@ -207,7 +249,7 @@ def _extract_nest(plan: StoragePlan, idag: IDAG, nest_idx: int,
                 p = vp.var.producer
                 assert p is not None
                 if p.gid in grid_gids:
-                    continue  # produced in-grid: same-step local (below)
+                    continue  # produced in-grid: local/buffered (below)
                 p_nest = nest_of_gid.get(p.gid)
                 if p_nest is not None and p_nest > nest_idx:
                     raise PallasUnsupported(
@@ -215,11 +257,13 @@ def _extract_nest(plan: StoragePlan, idag: IDAG, nest_idx: int,
                     )
                 if vp.kind == "acc" and vp.var.dims:
                     raise PallasUnsupported(
-                        f"cross-call read of vector accumulator {vp.name}"
+                        f"cross-call read of vector accumulator {vp.name} "
+                        f"(dims {vp.var.dims}): only fully-reduced scalars "
+                        f"stream between stencil calls"
                     )
                 add_input(key)
 
-    # ---- fused kernel steps ----------------------------------------------
+    # ---- rolling windows (contracted + cross-row materialized) ------------
     bufs: list[BufSpec] = []
     accs: list[AccSpec] = []
     steps: list[StepSpec] = []
@@ -231,17 +275,44 @@ def _extract_nest(plan: StoragePlan, idag: IDAG, nest_idx: int,
         if vp.kind == "rolling" and vp.var.producer is not None \
                 and vp.var.producer.gid in grid_gids:
             if vp.contraction_dim != jdim:
-                raise PallasUnsupported(f"contraction over {vp.contraction_dim}")
+                raise PallasUnsupported(
+                    f"rolling buffer {vp.name} contracts over dim "
+                    f"{vp.contraction_dim!r}: the executor only carries "
+                    f"windows across the row dim {jdim!r}"
+                )
             bufs.append(BufSpec(f"b_{vp.name}", vp.stages, vp.i_lo, vp.i_hi))
             seen_bufs.add(f"b_{vp.name}")
 
+    # A 'full' variable produced in this grid and read back at a row
+    # offset by the same grid needs its recent rows kept in VMEM: give it
+    # a rolling window sized by the consumer-position spread (the same
+    # rule the contraction pass applies to 'rolling' variables).
+    cross_row_buf: dict[Term, str] = {}
+    for key, vp in plan.vars.items():
+        if vp.kind != "full":
+            continue
+        p = vp.var.producer
+        if p is None or p.gid not in grid_gids:
+            continue
+        p_lead = np_.lead(p.gid, jdim)
+        positions = consumer_positions(np_, vp.var, jdim, within=grid_gids)
+        if positions and any(pos != p_lead for pos in positions):
+            name = f"b_{vp.name}"
+            bufs.append(BufSpec(name, window_stages(p_lead, positions),
+                                vp.i_lo, vp.i_hi))
+            cross_row_buf[key] = name
+
+    # ---- fused kernel steps ----------------------------------------------
     for g in grid:
         assert g.rule is not None and g.rule.fn is not None
-        if n_outer and program.loop_order[0] not in g.dims:
+        missing = [d for d in outer_dims if d not in g.dims]
+        if missing:
             raise PallasUnsupported(
-                f"group {g} lacks the outer grid dim "
-                f"{program.loop_order[0]}"
+                f"group {g} lacks outer grid dim(s) {missing}: every "
+                f"kernel fused into a {'/'.join(program.loop_order)} nest "
+                f"must iterate the full outer grid"
             )
+        check_outer_exact(str(g), g.extent, "group")
         lead = np_.lead(g.gid, jdim)
         ext_j = g.extent.get(jdim)
         if ext_j is not None:
@@ -264,38 +335,63 @@ def _extract_nest(plan: StoragePlan, idag: IDAG, nest_idx: int,
                     reads.append(ReadSpec(src, lead + oj, c_ilo + oi, c_w))
             elif vp.kind == "rolling":
                 reads.append(ReadSpec(f"b_{vp.name}", lead + oj, c_ilo + oi, c_w))
+            elif key in cross_row_buf:
+                # materialized in-nest AND read at a row offset: served
+                # from the rolling window planned above
+                reads.append(ReadSpec(cross_row_buf[key], lead + oj,
+                                      c_ilo + oi, c_w))
             elif vp.kind in ("row", "full", "scalar"):
                 # produced by this nest's grid: visible as a same-step row
                 p = vp.var.producer
                 assert p is not None
                 if vp.kind != "row" and lead + oj != np_.lead(p.gid, jdim):
                     raise PallasUnsupported(
-                        f"cross-row read of same-nest materialized {vp.name}"
+                        f"read of same-nest {vp.kind} variable {vp.name} at "
+                        f"row position {lead + oj} but produced at "
+                        f"{np_.lead(p.gid, jdim)}: scalars cannot be read "
+                        f"across rows"
                     )
                 p_ilo = p.extent[inner].lo if inner in p.extent else 0
                 reads.append(
                     ReadSpec(f"local:{vp.name}", 0, (c_ilo + oi) - p_ilo, c_w))
             else:
-                raise PallasUnsupported(f"read of {vp.name} kind {vp.kind}")
+                raise PallasUnsupported(
+                    f"read of {vp.name}: storage kind {vp.kind!r} is not "
+                    f"representable inside a stencil call"
+                )
 
         if g.is_reduction:
             (_, okey), = g.writes
             ovp = plan.vars[okey]
-            if ovp.kind not in ("acc",):
+            # 'acc': consumed downstream (streamed as a scalar input);
+            # 'external_out': the reduction result is itself a goal.
+            if ovp.kind not in ("acc", "external_out"):
                 raise PallasUnsupported(
-                    f"reduction result {ovp.name} of kind {ovp.kind}"
+                    f"reduction result {ovp.name} of storage kind "
+                    f"{ovp.kind!r}: only accumulator or terminal results "
+                    f"are supported"
                 )
-            if n_outer != 0:
-                raise PallasUnsupported("reductions require a 2-D (j, i) grid")
-            if set(ovp.var.dims) - {inner}:
+            kept = tuple(ovp.var.dims)
+            if jdim in kept:
                 raise PallasUnsupported(
-                    f"reduction output {ovp.name} keeps outer dims"
+                    f"reduction output {ovp.name} keeps the row dim "
+                    f"{jdim!r}: only outer dims and/or the vector dim "
+                    f"{inner!r} may survive a fused reduction"
+                )
+            kept_outer = tuple(d for d in kept if d != inner)
+            if kept_outer and kept_outer != tuple(outer_dims):
+                raise PallasUnsupported(
+                    f"reduction output {ovp.name} keeps outer dims "
+                    f"{kept_outer} but the grid iterates {outer_dims}: "
+                    f"per-tile reductions must keep every outer dim"
                 )
             if inner not in g.dims:
                 raise PallasUnsupported(
                     f"reduction {g} does not iterate the vector dim"
                 )
-            acc = AccSpec(f"a_{ovp.name}", c_w, ovp.acc_init)
+            per_outer = bool(kept_outer)
+            acc = AccSpec(f"a_{ovp.name}", c_w, ovp.acc_init,
+                          per_outer=per_outer)
             accs.append(acc)
             valid = (ext_j.lo, ext_j.hi) if ext_j is not None else (0, 0)
             steps.append(StepSpec(g.rule.fn, tuple(reads), (), lead, c_ilo,
@@ -304,7 +400,7 @@ def _extract_nest(plan: StoragePlan, idag: IDAG, nest_idx: int,
             out_binds.append(OutBind(
                 env=_env_name(ovp), kind="acc", lead=lead,
                 reduce_fn=g.rule.fn if inner in ovp.acc_reduced else None,
-                reduce_init=ovp.acc_init,
+                reduce_init=ovp.acc_init, per_outer=per_outer,
             ))
             continue
 
@@ -326,7 +422,9 @@ def _extract_nest(plan: StoragePlan, idag: IDAG, nest_idx: int,
                         f": outside the Ni-wide output row"
                     )
                 goal = goal_of_base.get(key)
-                gj = goal.extents.get(jdim) if goal is not None else None
+                gexts = goal.extents if goal is not None else {}
+                check_outer_exact(vp.name, gexts, "terminal output")
+                gj = gexts.get(jdim)
                 out_binds.append(OutBind(
                     env=_env_name(vp), kind="external", lead=lead,
                     j_lo=(gj.lo if gj is not None else 0),
@@ -351,6 +449,7 @@ def _extract_nest(plan: StoragePlan, idag: IDAG, nest_idx: int,
                         f"row of {vp.name} spans [{ei.lo}, Ni{ei.hi:+d}): "
                         f"outside the Ni-wide output row"
                     )
+                check_outer_exact(vp.name, v.extent, "materialized variable")
                 out_binds.append(OutBind(
                     env=_env_name(vp), kind="full", lead=lead,
                     j_lo=ej.lo, j_hi=ej.hi, i_lo=ei.lo, i_hi=ei.hi,
@@ -359,8 +458,14 @@ def _extract_nest(plan: StoragePlan, idag: IDAG, nest_idx: int,
                 outs.append(OutSpec(vp.name, lead))
                 # also visible to same-step consumers within this nest
                 targets.append(("local", vp.name))
+                if key in cross_row_buf:
+                    # ...and to earlier-row consumers via its window
+                    targets.append(("buf", cross_row_buf[key]))
             else:
-                raise PallasUnsupported(f"write of {vp.name} kind {vp.kind}")
+                raise PallasUnsupported(
+                    f"write of {vp.name}: storage kind {vp.kind!r} is not "
+                    f"representable inside a stencil call"
+                )
             writes.append(tuple(targets))
         steps.append(StepSpec(g.rule.fn, tuple(reads), tuple(writes),
                               lead, c_ilo))
@@ -383,21 +488,16 @@ def _extract_nest(plan: StoragePlan, idag: IDAG, nest_idx: int,
 
 
 def extract_nest_execs(plan: StoragePlan, idag: IDAG) -> list[NestExec]:
+    """Lower every top-level nest of a storage plan to a
+    :class:`NestExec` (the shape probe used by ``backend="auto"``)."""
     program = plan.schedule.program
     if len(program.loop_order) < 2:
-        raise PallasUnsupported("loop order must be (j,i) or (k,j,i)")
-    n_outer = len(program.loop_order) - 2
-    if n_outer > 1:
         raise PallasUnsupported(
-            f"n_outer = {n_outer} > 1: output assembly only supports grids "
-            f"(j,) and (k, j)"
+            f"loop order {program.loop_order} has "
+            f"{len(program.loop_order)} dim(s): the stencil executor "
+            f"needs at least a (row, vector) pair"
         )
-    nest_of_gid: dict[int, int] = {}
-    for k, np_ in enumerate(plan.nests):
-        for gid in np_.gids:
-            nest_of_gid[gid] = k
-    return [_extract_nest(plan, idag, k, nest_of_gid)
-            for k in range(len(plan.nests))]
+    return [_extract_nest(plan, idag, k) for k in range(len(plan.nests))]
 
 
 @dataclass
@@ -412,10 +512,12 @@ class PallasGenerated:
 
     @property
     def spec(self) -> StencilSpec:
+        """The first (often only) grid nest's spec."""
         return self.specs[0]
 
     @property
     def schedule(self):
+        """The fused schedule this execution realizes."""
         return self.plan.schedule
 
 
@@ -428,18 +530,21 @@ def _run_host(step: HostStep, env: dict) -> None:
 
 
 def generate_pallas(plan: StoragePlan, idag: IDAG, *, dtype=jnp.float32,
-                    interpret: bool = True) -> PallasGenerated:
+                    interpret: bool = True,
+                    double_buffer: bool = False) -> PallasGenerated:
     """Emit the Pallas execution of a storage plan.
 
     ``interpret=True`` runs the kernel bodies on CPU for validation; on
-    a TPU runtime pass False."""
+    a TPU runtime pass False.  ``double_buffer=True`` switches the
+    executor's input streaming from BlockSpec row fetches to the
+    explicit two-slot async-DMA pipeline (see
+    :func:`repro.kernels.stencil2d.kernel.build_call`)."""
     program = plan.schedule.program
     dag = plan.schedule.dag
     nest_execs = extract_nest_execs(plan, idag)
     inner = program.loop_order[-1]
     jdim = program.loop_order[-2]
-    n_outer = len(program.loop_order) - 2
-    kdim = program.loop_order[0] if n_outer else None
+    outer_dims = program.loop_order[:-2]
 
     # dimension -> runtime size symbol (resolved from axiom array shapes)
     dim_sym = {d: f"N{d}" for d in program.loop_order}
@@ -464,8 +569,8 @@ def generate_pallas(plan: StoragePlan, idag: IDAG, *, dtype=jnp.float32,
                     sizes[e.size] = arr.shape[axis] - (e.hi - e.lo)
         nj = sizes[dim_sym[jdim]]
         ni = sizes[dim_sym[inner]]
-        nk = sizes[dim_sym[kdim]] if kdim is not None else None
-        sz = (nj, ni) if n_outer == 0 else (nk, nj, ni)
+        n_outs = tuple(sizes[dim_sym[d]] for d in outer_dims)
+        sz = (*n_outs, nj, ni)
         env: dict[str, jnp.ndarray] = {
             name: arrays[name] for name in input_names
         }
@@ -473,19 +578,20 @@ def generate_pallas(plan: StoragePlan, idag: IDAG, *, dtype=jnp.float32,
             for hs in ne.host_pre:
                 _run_host(hs, env)
             if ne.spec is not None:
-                call, _ = build_call(ne.spec, sz, dtype, interpret=interpret)
+                call, _ = build_call(ne.spec, sz, dtype, interpret=interpret,
+                                     double_buffer=double_buffer)
                 args = []
                 for ispec, name in zip(ne.spec.inputs, ne.in_env):
                     v = jnp.asarray(env[name], dtype)
                     if ispec.scalar:
-                        v = v.reshape((1,) * (n_outer + 2))
+                        v = v.reshape((1, 1))
                     args.append(v)
                 padded = call(*args)
                 if not isinstance(padded, (list, tuple)):
                     padded = [padded]
                 for bind, pout in zip(ne.out_binds, padded):
                     env[bind.env] = _assemble(
-                        bind, pout, ne.spec, nj, ni, nk, dtype)
+                        bind, pout, ne.spec, nj, ni, n_outs, dtype)
             for hs in ne.host_post:
                 _run_host(hs, env)
         return {out_name: env[var_name] for out_name, var_name in goal_out}
@@ -495,8 +601,18 @@ def generate_pallas(plan: StoragePlan, idag: IDAG, *, dtype=jnp.float32,
 
 
 def _assemble(bind: OutBind, padded, spec: StencilSpec, nj: int, ni: int,
-              nk, dtype):
+              n_outs: tuple[int, ...], dtype):
+    """Map one padded executor output back to its environment array:
+    trim warm-up/drain rows, re-seat goal origins, lane-reduce
+    accumulators whose vector dim was folded."""
     if bind.kind == "acc":
+        if bind.per_outer:
+            # (*outer, width): one combined row per outer tile
+            if bind.reduce_fn is not None:
+                return lane_reduce(bind.reduce_fn,
+                                   jnp.moveaxis(padded, -1, 0),
+                                   bind.reduce_init)
+            return padded
         row = padded[0]
         if bind.reduce_fn is not None:
             return lane_reduce(bind.reduce_fn, row, bind.reduce_init)
@@ -505,19 +621,15 @@ def _assemble(bind: OutBind, padded, spec: StencilSpec, nj: int, ni: int,
     nrows = nj + bind.j_hi - bind.j_lo
     if bind.kind == "external":
         jlo, jhi = bind.j_lo, nj + bind.j_hi
-        if spec.n_outer == 0:
-            out = jnp.zeros((nj, ni), dtype)
-            return out.at[jlo:jhi, :].set(padded[t0:t0 + nrows, :])
-        out = jnp.zeros((nk, nj, ni), dtype)
-        return out.at[:, jlo:jhi, :].set(padded[:, t0:t0 + nrows, :])
+        out = jnp.zeros((*n_outs, nj, ni), dtype)
+        return out.at[..., jlo:jhi, :].set(padded[..., t0:t0 + nrows, :])
     w = ni + bind.i_hi - bind.i_lo
-    if spec.n_outer == 0:
-        return padded[t0:t0 + nrows, bind.i_lo:bind.i_lo + w]
-    return padded[:, t0:t0 + nrows, bind.i_lo:bind.i_lo + w]
+    return padded[..., t0:t0 + nrows, bind.i_lo:bind.i_lo + w]
 
 
 def compile_program_pallas(
-    program: Program, *, dtype=jnp.float32, interpret: bool = True
+    program: Program, *, dtype=jnp.float32, interpret: bool = True,
+    double_buffer: bool = False
 ) -> PallasGenerated:
     """Engine pipeline + Pallas emission (standalone entry point; prefer
     :func:`repro.core.engine.compile_program` with ``backend='pallas'``,
@@ -526,4 +638,5 @@ def compile_program_pallas(
     dag = build_dataflow(idag)
     schedule = fuse_inest_dag(dag)
     plan = analyze_storage(schedule)
-    return generate_pallas(plan, idag, dtype=dtype, interpret=interpret)
+    return generate_pallas(plan, idag, dtype=dtype, interpret=interpret,
+                           double_buffer=double_buffer)

@@ -285,7 +285,11 @@ def _compute_extents(idag: IDAG, dag: DataflowDAG) -> None:
                     ga[d] = isect(ga.get(d), Extent(e.size, e.lo - o, e.hi - o))
         avail[g.gid] = ga
         for _, base in g.writes:
-            var_avail[base] = dict(ga)
+            # a variable is only constrained in its *own* dims: a dim the
+            # producer folded away (a reduction) does not limit where the
+            # result may be consumed
+            vdims = dag.variables[base].dims
+            var_avail[base] = {d: e for d, e in ga.items() if d in vdims}
 
     # ---- backward demand ----------------------------------------------------
     for g in reversed(order):

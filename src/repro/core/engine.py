@@ -12,14 +12,22 @@ dispatches to a backend:
   :class:`PallasGenerated`; raises :class:`PallasUnsupported` for
   programs outside the stencil executor's shape;
 * ``backend="auto"`` (default) — probe Pallas applicability and fall
-  back to JAX.  The probe is conservative: only single-nest schedules
-  with no reductions or cross-nest materialized intermediates go to the
-  stencil executor (those are the shapes where the streamed pipeline is
-  an unambiguous win); everything else takes the JAX backend, whose XLA
-  fusion already covers split schedules well.
+  back to JAX.  Any single-nest schedule over a (row, vector) loop order
+  — including reductions, outer grids, and cross-row materialized reads,
+  now that the executor covers them — goes to the stencil executor;
+  split (multi-nest) schedules take the JAX backend unless the program
+  name has been registered as a measured Pallas win with
+  :func:`register_pallas_split_win` (benchmark legs feed this table from
+  real-TPU ``interpret=False`` timings).  The probe itself is safe:
+  shapes the executor still rejects raise :class:`PallasUnsupported`
+  during extraction and silently fall back to JAX.
+
+The full routing rules, the cache key, and the table of remaining
+``PallasUnsupported`` shapes live in docs/BACKENDS.md.
 
 Compiled results are cached on (program signature, backend, dtype,
-interpret) so repeated compilation in serving/benchmark loops is free.
+interpret, double_buffer) so repeated compilation in serving/benchmark
+loops is free.
 """
 from __future__ import annotations
 
@@ -38,6 +46,34 @@ from .rules import Program
 BACKENDS = ("auto", "jax", "pallas")
 
 _CACHE: dict = {}
+
+# Split (multi-nest) schedules that measured faster on the stencil
+# executor than on the JAX backend (real-TPU interpret=False runs).
+# ``backend="auto"`` routes these programs to Pallas by name; everything
+# else multi-nest keeps the JAX backend, whose XLA fusion already covers
+# split schedules well.
+PALLAS_SPLIT_WINS: set[str] = set()
+
+
+def register_pallas_split_win(name: str) -> None:
+    """Record that the named program's *split* schedule measured faster
+    on the stencil executor, so ``backend="auto"`` routes it to Pallas.
+
+    Call this from benchmark/deployment code after timing with
+    ``interpret=False`` on a TPU runtime.  The table is keyed by
+    program *name* (the operator's identity contract), so the default
+    name is rejected — it would reroute every anonymously-built
+    program.  Cached ``backend="auto"`` compilations of the program are
+    invalidated so the new routing takes effect on the next
+    :func:`compile_program` call."""
+    if name == "program":
+        raise ValueError(
+            "refusing to register the default program name 'program' as a "
+            "split win: give the program an explicit name"
+        )
+    PALLAS_SPLIT_WINS.add(name)
+    for key in [k for k in _CACHE if k[1] == "auto" and k[0][0] == name]:
+        del _CACHE[key]
 
 
 def program_signature(program: Program):
@@ -63,10 +99,12 @@ def program_signature(program: Program):
 
 
 def clear_compile_cache() -> None:
+    """Drop every memoized compilation (all backends)."""
     _CACHE.clear()
 
 
 def compile_cache_size() -> int:
+    """Number of live entries in the compile cache."""
     return len(_CACHE)
 
 
@@ -79,15 +117,21 @@ def _build_plan(program: Program):
 
 
 def pallas_auto_viable(plan: StoragePlan) -> bool:
-    """Whether ``backend="auto"`` should route this plan to the stencil
-    executor: a single fused nest over (j,i)/(k,j,i) with rolling/row
-    contraction only (the COSMO/Hydro2D shape of §5.3-5.4)."""
-    if len(plan.schedule.program.loop_order) not in (2, 3):
+    """Whether ``backend="auto"`` should offer this plan to the stencil
+    executor.
+
+    Single-nest schedules over a >= 2-dim loop order always qualify —
+    the executor now covers rolling/row contraction, reductions (carried
+    and per-outer-tile accumulators), outer grids, and cross-row
+    materialized reads, and shapes it still rejects fail the probe with
+    :class:`PallasUnsupported` and fall back to JAX.  Multi-nest (split)
+    schedules qualify only when the program is a registered measured win
+    (:func:`register_pallas_split_win`)."""
+    if len(plan.schedule.program.loop_order) < 2:
         return False
-    if len(plan.schedule.nests) != 1:
-        return False
-    return not any(vp.kind in ("acc", "full", "scalar")
-                   for vp in plan.vars.values())
+    if len(plan.schedule.nests) == 1:
+        return True
+    return plan.schedule.program.name in PALLAS_SPLIT_WINS
 
 
 def compile_program(
@@ -96,17 +140,22 @@ def compile_program(
     *,
     dtype=jnp.float32,
     interpret: bool = True,
+    double_buffer: bool = False,
     use_cache: bool = True,
 ) -> Union[Generated, PallasGenerated]:
     """Compile ``program`` through the HFAV pipeline onto a backend.
 
-    ``interpret`` only affects the Pallas backend (CPU validation vs TPU
-    execution).  Results are memoized; pass ``use_cache=False`` to force
-    a rebuild."""
+    ``interpret`` and ``double_buffer`` only affect the Pallas backend
+    (CPU validation vs TPU execution, and BlockSpec streaming vs the
+    explicit two-slot DMA pipeline).  Results are memoized; pass
+    ``use_cache=False`` to force a rebuild."""
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; expected {BACKENDS}")
+    # double_buffer is a Pallas streaming mode: normalize it out of the
+    # key for pure-JAX compilations so they aren't cached twice
     key = (program_signature(program), backend, jnp.dtype(dtype).name,
-           bool(interpret))
+           bool(interpret),
+           bool(double_buffer) and backend != "jax")
     if use_cache:
         hit = _CACHE.get(key)
         if hit is not None:
@@ -115,19 +164,25 @@ def compile_program(
     if backend == "jax":
         gen: Union[Generated, PallasGenerated] = generate(plan, idag)
     elif backend == "pallas":
-        gen = generate_pallas(plan, idag, dtype=dtype, interpret=interpret)
+        gen = generate_pallas(plan, idag, dtype=dtype, interpret=interpret,
+                              double_buffer=double_buffer)
     else:
         gen = None
         if pallas_auto_viable(plan):
             try:
                 gen = generate_pallas(plan, idag, dtype=dtype,
-                                      interpret=interpret)
+                                      interpret=interpret,
+                                      double_buffer=double_buffer)
             except PallasUnsupported:
                 gen = None
         if gen is None:
             gen = generate(plan, idag)
     if use_cache:
         _CACHE[key] = gen
+        if key[4] and isinstance(gen, Generated):
+            # double_buffer had no effect (auto fell back to JAX): alias
+            # the normalized key so neither flag value recompiles
+            _CACHE[key[:4] + (False,)] = gen
     return gen
 
 

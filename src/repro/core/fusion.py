@@ -25,7 +25,10 @@ from .rules import Program
 
 
 class Unfusable(Exception):
-    pass
+    """Two iteration nests cannot legally share a loop (rank mismatch,
+    unorderable phases, or a concave-dataflow reduction split): the
+    fusion driver treats this as a *cut* and bars the candidate's
+    reachable set into a later top-level nest."""
 
 
 def _le(dag: DataflowDAG, a: set[int], b: set[int]) -> bool:
@@ -180,10 +183,13 @@ class FusedSchedule:
     nests: list[Node] = field(default_factory=list)
 
     def pretty(self) -> str:
+        """Indented loop-nest rendering (used by ``explain``)."""
         by_id = {g.gid: g for g in self.dag.groups}
         return "\n".join(n.pretty(by_id) for n in self.nests)
 
     def n_toplevel(self) -> int:
+        """Number of top-level nests = grid sweeps over the data (the
+        paper's pass count, e.g. normalization's 'five to two')."""
         return len(self.nests)
 
 

@@ -15,6 +15,23 @@
   conserved system sweep: primitive conversion, EOS, slope limiting, trace,
   Riemann solve at interfaces, flux, conservative update.
 
+Executor coverage programs (one per lifted Pallas restriction — see
+docs/BACKENDS.md):
+
+* :func:`pyramid4d_program` — a two-stage blur/edge pipeline over a 4-D
+  ``(l, k, j, i)`` loop order: two outer identifiers flatten onto leading
+  Pallas grid dims, with the blur contracted to a 3-row rolling buffer.
+* :func:`energy3d_program` — a global L2 energy over ``(k, j, i)``: a
+  k-tiled reduction whose VMEM accumulator row is carried across every
+  outer tile of the 2-D ``(k, j)`` grid.
+* :func:`plane_sum_program` — per-plane sums ``colsum[k] = sum_{j,i}``:
+  a reduction keeping the outer dim, realized as a per-tile accumulator
+  re-initialized at each k.
+* :func:`smooth_norm_program` — a normalization variant whose roughness
+  kernel reads the flux at rows j and j-1 *inside the producing nest*
+  while the flux also crosses the reduction split: the cross-row read of
+  a same-nest materialized variable.
+
 Every kernel body is a pure elementwise jnp function over rows — the
 engine's unfused references (used by tests/benchmarks) call the same
 bodies, so fused-vs-unfused comparisons share arithmetic exactly.
@@ -98,6 +115,159 @@ def laplace_pair_program(name: str = "laplace_pair") -> Program:
             goal("blur(cell[j][i])", store_as="blur",
                  j=("Nj", 1, -1), i=("Ni", 1, -1)),
         ],
+        loop_order=("j", "i"),
+        name=name,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Executor coverage: outer grids, k-tiled reductions, cross-row reads
+# ---------------------------------------------------------------------------
+
+def _edge3(m, c, p):
+    return p + m - 2.0 * c
+
+
+def pyramid4d_program(name: str = "pyramid4d") -> Program:
+    """Blur -> vertical edge detect over a 4-D ``(l, k, j, i)`` space.
+
+    Two outer loop identifiers (``l``: pyramid level, ``k``: channel)
+    with no cross-dependencies — they flatten onto leading Pallas grid
+    dims — while the edge kernel's ``j +/- 1`` reads of the blur force a
+    3-row rolling buffer carried across the row grid dim."""
+    k_blur = kernel(
+        "blur5",
+        inputs=[
+            ("n", "u?[l?][k?][j?-1][i?]"),
+            ("e", "u?[l?][k?][j?][i?+1]"),
+            ("s", "u?[l?][k?][j?+1][i?]"),
+            ("w", "u?[l?][k?][j?][i?-1]"),
+            ("c", "u?[l?][k?][j?][i?]"),
+        ],
+        outputs=[("o", "blur(u?[l?][k?][j?][i?])")],
+        fn=_blur3,
+    )
+    k_edge = kernel(
+        "edge3",
+        inputs=[
+            ("m", "blur(u?[l?][k?][j?-1][i?])"),
+            ("c", "blur(u?[l?][k?][j?][i?])"),
+            ("p", "blur(u?[l?][k?][j?+1][i?])"),
+        ],
+        outputs=[("o", "edge(u?[l?][k?][j?][i?])")],
+        fn=_edge3,
+    )
+    return Program(
+        rules=[k_blur, k_edge],
+        axioms=[axiom("u[l?][k?][j?][i?]", l="Nl", k="Nk", j="Nj", i="Ni")],
+        goals=[goal("edge(u[l][k][j][i])", store_as="edge",
+                    l=("Nl", 0, 0), k=("Nk", 0, 0),
+                    j=("Nj", 2, -2), i=("Ni", 1, -1))],
+        loop_order=("l", "k", "j", "i"),
+        name=name,
+    )
+
+
+def _sq1(a):
+    return a * a
+
+
+def _sum2(acc, x):
+    return acc + x
+
+
+def energy3d_program(name: str = "energy3d") -> Program:
+    """Global L2 energy of a 3-D field: ``energy = sum_{k,j,i} u^2``.
+
+    A k-tiled reduction — the grid is ``(k, j)`` and the vector partial
+    accumulator is carried across *every* outer tile, then lane-reduced
+    on the host."""
+    k_sq = kernel("sq", [("a", "u?[k?][j?][i?]")],
+                  [("o", "sq(u?[k?][j?][i?])")], fn=_sq1)
+    k_sum = kernel("energy_sum", [("x", "sq(u[k][j][i])")],
+                   [("acc", "energy(u)")], fn=_sum2, kind="reduce", init=0.0)
+    return Program(
+        rules=[k_sq, k_sum],
+        axioms=[axiom("u[k?][j?][i?]", k="Nk", j="Nj", i="Ni")],
+        goals=[goal("energy(u)", store_as="energy")],
+        loop_order=("k", "j", "i"),
+        name=name,
+    )
+
+
+def plane_sum_program(name: str = "plane_sum") -> Program:
+    """Per-plane sums ``colsum[k] = sum_{j,i} u[k][j][i]^2``.
+
+    The reduction output keeps the outer dim: the executor re-initializes
+    the accumulator row at the first row of each k-tile and emits one
+    combined row per tile."""
+    k_sq = kernel("sq", [("a", "u?[k?][j?][i?]")],
+                  [("o", "sq(u?[k?][j?][i?])")], fn=_sq1)
+    k_sum = kernel("plane_sum", [("x", "sq(u[k?][j][i])")],
+                   [("acc", "colsum(u[k?])")], fn=_sum2, kind="reduce",
+                   init=0.0)
+    return Program(
+        rules=[k_sq, k_sum],
+        axioms=[axiom("u[k?][j?][i?]", k="Nk", j="Nj", i="Ni")],
+        goals=[goal("colsum(u[k])", store_as="colsum", k=("Nk", 0, 0))],
+        loop_order=("k", "j", "i"),
+        name=name,
+    )
+
+
+def _rough(f0, fm):
+    d = f0 - fm
+    return d * d
+
+
+def smooth_norm_program(name: str = "smooth_norm") -> Program:
+    """Normalize a flux by the L2 norm of its vertical *roughness*.
+
+    Like :func:`normalization_program`, fuses to two nests around the
+    reduction->broadcast split — but the roughness kernel reads the flux
+    at rows ``j`` and ``j-1`` inside the producing nest while the flux
+    also crosses the split to the normalize nest: a cross-row read of a
+    same-nest materialized variable, served from a rolling VMEM window
+    on the stencil executor."""
+    rules = [
+        kernel(
+            "flux",
+            inputs=[("a", "u?[j?][i?]"), ("b", "u?[j?][i?+1]")],
+            outputs=[("f", "flux(u?[j?][i?])")],
+            fn=_flux,
+        ),
+        kernel(
+            "rough",
+            inputs=[("f0", "flux(u?[j?][i?])"), ("fm", "flux(u?[j?-1][i?])")],
+            outputs=[("r", "rough(u?[j?][i?])")],
+            fn=_rough,
+        ),
+        kernel(
+            "rough_accum",
+            inputs=[("x", "rough(u[j][i])")],
+            outputs=[("acc", "nrm2(u)")],
+            fn=_accum,
+            kind="reduce",
+            init=0.0,
+        ),
+        kernel(
+            "norm_root",
+            inputs=[("n2", "nrm2(u?)")],
+            outputs=[("r", "invnorm(u?)")],
+            fn=_rsqrt_n,
+        ),
+        kernel(
+            "normalize",
+            inputs=[("f", "flux(u?[j?][i?])"), ("inv", "invnorm(u?)")],
+            outputs=[("o", "nflux(u?[j?][i?])")],
+            fn=_scale,
+        ),
+    ]
+    return Program(
+        rules=rules,
+        axioms=[axiom("u[j?][i?]", j="Nj", i="Ni")],
+        goals=[goal("nflux(u[j][i])", store_as="nflux",
+                    j=("Nj", 0, 0), i=("Ni", 0, -1))],
         loop_order=("j", "i"),
         name=name,
     )

@@ -108,6 +108,9 @@ class StoragePlan:
     schedule: FusedSchedule
     vars: dict[Term, VarPlan] = field(default_factory=dict)
     nests: list[NestPlan] = field(default_factory=list)
+    # gid -> index into ``nests`` (which top-level nest owns each group);
+    # the backends' grid mappers key scheduling decisions off this.
+    nest_of_gid: dict[int, int] = field(default_factory=dict)
 
     def plan_of(self, key: Term) -> VarPlan:
         return self.vars[key]
@@ -132,6 +135,38 @@ def _nest_of(schedule: FusedSchedule) -> list[NestPlan]:
 
 def _innermost(schedule: FusedSchedule) -> str:
     return schedule.program.loop_order[-1]
+
+
+def consumer_positions(np_: NestPlan, v: Var, dim: str,
+                       within: set[int] | None = None) -> list[int]:
+    """Positions (consumer lead + read offset) at which ``v`` is read
+    along ``dim``, relative to the canonical iteration point.
+
+    This is the schedule metadata the backends' grid mappers share with
+    the contraction pass: the spread of these positions against the
+    producer's lead determines rolling-window/streaming-window stage
+    counts.  ``within`` restricts to consumers among those gids (e.g.
+    only the groups mapped onto one stencil call's grid)."""
+    if dim not in v.dims:
+        return []
+    di = v.dims.index(dim)
+    out: list[int] = []
+    for use in v.consumers:
+        if within is not None and use.group.gid not in within:
+            continue
+        c_lead = np_.lead(use.group.gid, dim)
+        for offs in use.offsets:
+            out.append(c_lead + offs[di])
+    return out
+
+
+def window_stages(lead: int, positions: list[int]) -> int:
+    """Rows a rolling/streaming window must keep: the producer writes at
+    ``lead`` and the oldest consumer position (from
+    :func:`consumer_positions`) bounds the reuse distance (Fig. 9a/9b:
+    stages = reuse distance + 1)."""
+    oldest = min(positions) if positions else lead
+    return max(1, lead - min(oldest, lead) + 1)
 
 
 def _compute_leads(schedule: FusedSchedule, np_: NestPlan) -> None:
@@ -174,6 +209,7 @@ def analyze_storage(schedule: FusedSchedule) -> StoragePlan:
     for k, np_ in enumerate(plan.nests):
         for gid in np_.gids:
             nest_of_gid[gid] = k
+    plan.nest_of_gid = nest_of_gid
     body_of_gid: dict[int, int] = {}
     bid = 0
     for np_ in plan.nests:
@@ -236,9 +272,10 @@ def analyze_storage(schedule: FusedSchedule) -> StoragePlan:
             else:
                 kind, nest_index = "rolling", prod_nest
         vp = VarPlan(v, kind, nest_index, i_lo=i_lo, i_hi=i_hi, reuse_path=path)
-        if kind == "acc":
+        if v.producer is not None and v.producer.is_reduction:
+            # accumulator metadata travels with every reduction result —
+            # including one stored straight to a goal (kind external_out)
             g = v.producer
-            assert g is not None
             vp.acc_init = g.rule.init if g.rule is not None else 0.0
             vp.acc_reduced = g.reduced_dims
             if inner in g.extent:
@@ -246,17 +283,8 @@ def analyze_storage(schedule: FusedSchedule) -> StoragePlan:
                 vp.i_hi = g.extent[inner].hi
         if kind == "rolling":
             d0 = outer[-1]
-            di = v.dims.index(d0)
-            p_lead = p_leads[d0]
-            oldest = None
-            for use in v.consumers:
-                c_lead = np_.lead(use.group.gid, d0)
-                for offs in use.offsets:
-                    pos = c_lead + offs[di]
-                    oldest = pos if oldest is None else min(oldest, pos)
-            if oldest is None:
-                oldest = p_lead
             vp.contraction_dim = d0
-            vp.stages = max(1, p_lead - min(oldest, p_lead) + 1)
+            vp.stages = window_stages(p_leads[d0],
+                                      consumer_positions(np_, v, d0))
         plan.vars[key] = vp
     return plan

@@ -24,6 +24,10 @@ def row3(arr, p, r, col0: int, width: int):
     return lax.dynamic_slice(arr, (p, r, col0), (1, 1, width))[0, 0]
 
 
+def row4(arr, q, p, r, col0: int, width: int):
+    return lax.dynamic_slice(arr, (q, p, r, col0), (1, 1, 1, width))[0, 0, 0]
+
+
 def setrow2(arr, r, col0: int, row, valid):
     """Masked row write ``arr[r, col0:...] = where(valid, row, old)``."""
     old = lax.dynamic_slice(arr, (r, col0), (1, row.shape[0]))[0]
@@ -35,6 +39,14 @@ def setrow3(arr, p, r, col0: int, row, valid):
     old = lax.dynamic_slice(arr, (p, r, col0), (1, 1, row.shape[0]))[0, 0]
     new = jnp.where(valid, row, old)
     return lax.dynamic_update_slice(arr, new[None, None, :], (p, r, col0))
+
+
+def setrow4(arr, q, p, r, col0: int, row, valid):
+    old = lax.dynamic_slice(
+        arr, (q, p, r, col0), (1, 1, 1, row.shape[0]))[0, 0, 0]
+    new = jnp.where(valid, row, old)
+    return lax.dynamic_update_slice(
+        arr, new[None, None, None, :], (q, p, r, col0))
 
 
 def brow(buf, stage, col0: int, width: int):
@@ -51,14 +63,19 @@ def bset(buf, stage, row):
 
 def lane_reduce(fn, row, ident):
     """Associative lane reduction of a vector partial accumulator
-    (the vectorized-reduction epilogue of Section 3.5): log2 halving,
-    padding odd halves with the identity."""
+    (the vectorized-reduction epilogue of Section 3.5): log2 halving
+    along the leading axis, padding odd halves with the identity.
+
+    ``row`` may carry trailing batch axes (e.g. one partial-accumulator
+    row per outer tile, lanes moved to the front): the reduction folds
+    axis 0 and returns the remaining shape."""
     n = row.shape[0]
     while n > 1:
         half = (n + 1) // 2
         pad = half * 2 - n
         if pad:
-            row = jnp.concatenate([row, jnp.full((pad,), ident, row.dtype)])
+            row = jnp.concatenate(
+                [row, jnp.full((pad,) + row.shape[1:], ident, row.dtype)])
         row = fn(row[:half], row[half:])
         n = half
     return row[0]
@@ -70,8 +87,10 @@ NAMESPACE = {
     "lax": lax,
     "_row2": row2,
     "_row3": row3,
+    "_row4": row4,
     "_setrow2": setrow2,
     "_setrow3": setrow3,
+    "_setrow4": setrow4,
     "_brow": brow,
     "_bset": bset,
     "_lane_reduce": lane_reduce,

@@ -5,26 +5,44 @@ This is the TPU-native realization of the paper's generated code
 iteration nest's steady state becomes the Pallas grid, and *all* rolling
 buffers — including the optional input-row window the paper mentions for
 COSMO — live in VMEM scratch that persists across sequential grid steps.
-Each grid step:
+
+The grid is ``(*outer, steps_j)``: the loop nest's outer identifiers map
+one-to-one onto leading grid dimensions (``n_outer`` of them, any number
+including zero) and the row identifier ``j`` maps onto the last, so a
+``(j, i)`` nest runs on a 1-D grid, ``(k, j, i)`` on a 2-D grid,
+``(l, k, j, i)`` on a 3-D grid, and so on.  TPU grids execute
+sequentially with the last dimension fastest, which is exactly the
+fused nest's traversal order — VMEM scratch therefore carries state
+both across rows *and* across outer-tile boundaries.  Each grid step:
 
 1. streams exactly one new row per array input from HBM into that
-   input's VMEM window (the DMA is expressed through the BlockSpec
-   index map, running ``lead`` rows ahead of the canonical point);
+   input's VMEM window — either through the BlockSpec index map (the DMA
+   runs ``lead`` rows ahead of the canonical point), or, with
+   ``double_buffer=True``, through an explicitly double-buffered
+   ``make_async_copy`` pair that prefetches the next grid step's row
+   while the current one is being consumed;
 2. executes every fused kernel at its software-pipeline lead, reading
    neighbor rows from VMEM windows via mod-``stages`` index arithmetic
    (the functional form of the paper's pointer rotation, Fig. 9a/9b);
    reduction kernels combine into VMEM accumulator rows carried across
    grid steps (the vector partial accumulators of Section 3.5),
-   predicated on the canonical point being inside the reduced extent;
+   predicated on the canonical point being inside the reduced extent —
+   an accumulator is either *carried* across the whole grid (k-tiled
+   reduction: one running row survives every outer tile) or *per-outer*
+   (re-initialized at the first row of each outer tile, one result per
+   tile);
 3. writes one row per terminal output back to HBM; accumulator outputs
-   are dumped into a single revisited block whose final grid step holds
-   the fully-combined partial-accumulator row.
+   are dumped into a revisited block whose final grid step (per tile for
+   per-outer accumulators) holds the fully-combined partial-accumulator
+   row.
 
-Inputs may be full-size external arrays, halo-trimmed intermediates
-materialized by an earlier stencil call of the same schedule (their
-``j/i`` origins are carried in :class:`InSpec`), or 0-dim scalars
-(broadcast values such as a normalization factor) passed as ``(1, 1)``
-blocks.
+Inputs may be full-size external arrays over any *suffix* of the loop
+order ending in ``(j, i)`` (:attr:`InSpec.n_outer` counts the outer dims
+the array actually carries, so a 2-D coefficient field broadcasts over
+the outer grid), halo-trimmed intermediates materialized by an earlier
+stencil call of the same schedule (their ``j/i`` origins are carried in
+:class:`InSpec`), or 0-dim scalars (broadcast values such as a
+normalization factor) passed as ``(1, 1)`` blocks.
 
 Rolling windows are padded to the 128-wide TPU lane tile (the
 vector-length expansion of Fig. 9c).  Warm-up/drain grid steps compute
@@ -67,8 +85,12 @@ class InSpec:
     Array inputs cover positions ``[j_lo, Nj + j_hi) x [i_lo, Ni + i_hi)``
     of the iteration space (array index = position - origin) and stream
     one row per grid step into a ``stages``-row VMEM window at ``lead``
-    rows ahead of the canonical point.  Scalar inputs are 0-dim values
-    passed as a single ``(1, 1)`` block."""
+    rows ahead of the canonical point.  ``n_outer`` is the number of
+    *outer* grid dimensions the array itself carries (its dims are the
+    trailing ``n_outer`` outer identifiers of the nest, so an array with
+    ``n_outer`` smaller than the grid's broadcasts over the leading outer
+    dims).  Scalar inputs are 0-dim values passed as a single ``(1, 1)``
+    block."""
 
     name: str
     stages: int = 1
@@ -78,6 +100,7 @@ class InSpec:
     i_lo: int = 0
     i_hi: int = 0  # array cols = Ni + (i_hi - i_lo)
     scalar: bool = False
+    n_outer: int = 0  # outer grid dims carried by the array itself
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,12 +117,19 @@ class BufSpec:
 @dataclasses.dataclass(frozen=True)
 class AccSpec:
     """One carried accumulator row (vector partial accumulator of a
-    fused reduction): width Ni + w_off, initialized to ``init`` on the
-    first grid step."""
+    fused reduction): width Ni + w_off, initialized to ``init``.
+
+    ``per_outer=False`` carries one running row across the *entire* grid
+    (initialized on the very first grid step — the k-tiled reduction
+    form, where outer grid steps are tiles of one global reduction).
+    ``per_outer=True`` re-initializes at the first row of every outer
+    tile and produces one combined row per tile (a reduction whose
+    output keeps the outer dims)."""
 
     name: str
     w_off: int
     init: float
+    per_outer: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -117,7 +147,8 @@ class StepSpec:
     ``writes`` holds one tuple of targets per produced value; each
     target is ``('buf', name) | ('local', name) | ('out', index)`` — a
     value may go to several targets (e.g. a cross-call materialized
-    intermediate that is also consumed in the same grid step).
+    intermediate that is also consumed in the same grid step, or one
+    consumed at a row offset through a rolling buffer).
 
     Reduction steps set ``acc``: the current accumulator row is
     prepended to the kernel arguments and the combined result is stored
@@ -136,8 +167,10 @@ class StepSpec:
 @dataclasses.dataclass(frozen=True)
 class OutSpec:
     """One terminal output.  Row outputs get one padded row per grid
-    step; accumulator outputs (``acc`` set) are a single revisited
-    ``(1, Ni + w_off)`` block dumped from the named accumulator."""
+    step; accumulator outputs (``acc`` set) are a revisited block dumped
+    from the named accumulator — ``(1, Ni + w_off)`` for carried
+    accumulators, one ``(Ni + w_off)``-row per outer tile for per-outer
+    accumulators."""
 
     name: str
     lead: int = 0
@@ -147,10 +180,12 @@ class OutSpec:
 @dataclasses.dataclass(frozen=True)
 class StencilSpec:
     """A complete fused, contracted stencil pipeline (one iteration
-    nest of the engine's schedule)."""
+    nest of the engine's schedule).  ``n_outer`` is the number of grid
+    dimensions ahead of the row dimension — 0 for a ``(j,)`` grid, 1 for
+    ``(k, j)``, 2 for ``(l, k, j)``, and so on."""
 
     name: str
-    n_outer: int  # 0 -> grid (j,); 1 -> grid (k, j)
+    n_outer: int
     inputs: tuple[InSpec, ...]
     bufs: tuple[BufSpec, ...]
     accs: tuple[AccSpec, ...]
@@ -161,24 +196,32 @@ class StencilSpec:
 
 
 def build_call(spec: StencilSpec, sizes: tuple[int, ...], dtype,
-               interpret: bool = False):
+               interpret: bool = False, double_buffer: bool = False):
     """Concretize the spec for one problem size and build the pallas_call.
 
-    ``sizes`` is ``(Nj, Ni)`` for 2-D grids or ``(Nk, Nj, Ni)`` for 3-D.
-    Returns ``(call, steps_j)``; the call maps the input arrays to one
-    padded output per ``spec.outs`` entry (a list when there are
-    several).  Row-output row ``t`` holds iteration position
-    ``t + x_lo + out.lead``; accumulator outputs are ``(1, width)``."""
-    if spec.n_outer == 0:
-        nj, ni = sizes
-        nk = None
-    elif spec.n_outer == 1:
-        nk, nj, ni = sizes
-    else:
-        raise ValueError(f"unsupported n_outer={spec.n_outer}")
-    if spec.accs and spec.n_outer != 0:
-        raise ValueError("carried accumulators require a 2-D (j,) grid")
+    ``sizes`` is ``(*outer_sizes, Nj, Ni)`` with ``spec.n_outer`` leading
+    outer extents (``(Nj, Ni)`` for a plain 2-D nest).  Returns
+    ``(call, steps_j)``; the call maps the input arrays to one padded
+    output per ``spec.outs`` entry (a list when there are several).
+    Row-output row ``t`` holds iteration position ``t + x_lo + out.lead``;
+    carried-accumulator outputs are ``(1, width)`` and per-outer
+    accumulator outputs ``(*outer_sizes, width)``.
+
+    ``double_buffer=True`` replaces the BlockSpec row streaming with an
+    explicit two-slot async-DMA pipeline: array inputs stay in HBM
+    (``memory_space=ANY``) and each grid step waits on the row DMA
+    issued by the previous step while kicking off the copy for the next
+    one, so the input DMA overlaps the compute of the current row."""
+    n_out = spec.n_outer
+    if len(sizes) != n_out + 2:
+        raise ValueError(
+            f"spec {spec.name} has n_outer={n_out} but got sizes {sizes}"
+        )
+    *outer_sizes, nj, ni = sizes
     steps_j = (nj + spec.x_hi_off) - spec.x_lo
+    total_steps = steps_j
+    for s in outer_sizes:
+        total_steps *= s
 
     arr_ins = [i for i in spec.inputs if not i.scalar]
     win_bufs = [BufSpec(f"in_{i.name}", i.stages, i.i_lo, i.i_hi)
@@ -186,6 +229,14 @@ def build_call(spec: StencilSpec, sizes: tuple[int, ...], dtype,
     bwidth = {b.name: ni + (b.i_hi - b.i_lo) for b in win_bufs}
     acc_w = {a.name: ni + a.w_off for a in spec.accs}
     ref_idx = {ispec.name: k for k, ispec in enumerate(spec.inputs)}
+    in_h = {i.name: nj + (i.j_hi - i.j_lo) for i in arr_ins}
+    in_w = {i.name: ni + (i.i_hi - i.i_lo) for i in arr_ins}
+    n_scratch_bufs = len(win_bufs) + len(spec.accs)
+
+    def _row_pos(ispec: InSpec, x):
+        """Source row index of ``ispec`` for canonical position ``x``
+        (clamped: edge rows repeat during warm-up/drain)."""
+        return jnp.clip(x + ispec.lead - ispec.j_lo, 0, in_h[ispec.name] - 1)
 
     def kernel(*refs):
         nin = len(spec.inputs)
@@ -195,29 +246,108 @@ def build_call(spec: StencilSpec, sizes: tuple[int, ...], dtype,
         ref_of = {b.name: (r, b) for r, b in zip(scratch, win_bufs)}
         acc_of = {a.name: (r, a)
                   for r, a in zip(scratch[len(win_bufs):], spec.accs)}
+        dma_stage = {
+            i.name: r for i, r in zip(
+                arr_ins, scratch[n_scratch_bufs:n_scratch_bufs + len(arr_ins)])
+        } if double_buffer else {}
+        dma_sems = (scratch[n_scratch_bufs + len(arr_ins)]
+                    if double_buffer and arr_ins else None)
 
-        jid = pl.program_id(spec.n_outer)
+        outer_ids = [pl.program_id(d) for d in range(n_out)]
+        jid = pl.program_id(n_out)
         x = jid + spec.x_lo
 
-        # 0. identity-initialize accumulators on the first grid step
-        if spec.accs:
+        # 0. identity-initialize accumulators: carried accumulators once
+        # on the very first grid step, per-outer accumulators at the
+        # first row of every outer tile.
+        carried = [a for a in spec.accs if not a.per_outer]
+        tiled = [a for a in spec.accs if a.per_outer]
+        if carried:
+            first = jid == 0
+            for oid in outer_ids:
+                first &= oid == 0
+
+            @pl.when(first)
+            def _init_carried():
+                for a in carried:
+                    r, _ = acc_of[a.name]
+                    r[0, :] = jnp.full((r.shape[1],), a.init, dtype)
+        if tiled:
             @pl.when(jid == 0)
-            def _init_accs():
-                for r, a in acc_of.values():
+            def _init_tiled():
+                for a in tiled:
+                    r, _ = acc_of[a.name]
                     r[0, :] = jnp.full((r.shape[1],), a.init, dtype)
 
         # 1. stream one new row per array input into its VMEM window
-        for ispec in arr_ins:
-            ref, b = ref_of[f"in_{ispec.name}"]
-            w = bwidth[b.name]
-            src = in_refs[ref_idx[ispec.name]]
-            row = src[0, :] if spec.n_outer == 0 else src[0, 0, :]
-            pos = x + ispec.lead
-            pl.store(
-                ref,
-                (pl.dslice(_mod(pos, b.stages), 1), pl.dslice(0, w)),
-                row[None, :],
-            )
+        if double_buffer and arr_ins:
+            # Linear grid-step odometer: TPU grids run sequentially with
+            # the last dimension fastest, so `lin` enumerates steps in
+            # execution order and `lin + 1` is the next step to prefetch.
+            lin = jid
+            mult = steps_j
+            for d in reversed(range(n_out)):
+                lin = lin + outer_ids[d] * mult
+                mult *= outer_sizes[d]
+            nxt = lin + 1
+            nxt_j = jax.lax.rem(nxt, steps_j)
+            rest = jax.lax.div(nxt, steps_j)
+            nxt_outer = [None] * n_out
+            for d in reversed(range(n_out)):
+                nxt_outer[d] = jax.lax.rem(rest, outer_sizes[d])
+                rest = jax.lax.div(rest, outer_sizes[d])
+            slot = _mod(lin, 2)
+
+            def _copy(ai, ispec, ids, j_id, to_slot):
+                """The row DMA descriptor for one input at one grid step
+                (start and wait must agree on shape)."""
+                a_out = ispec.n_outer
+                pos = _row_pos(ispec, j_id + spec.x_lo)
+                src = in_refs[ref_idx[ispec.name]]
+                src_idx = tuple(pl.ds(ids[d], 1)
+                                for d in range(n_out - a_out, n_out))
+                src_idx += (pl.ds(pos, 1), slice(None))
+                return pltpu.make_async_copy(
+                    src.at[src_idx],
+                    dma_stage[ispec.name].at[pl.ds(to_slot, 1)],
+                    dma_sems.at[ai, to_slot],
+                )
+
+            @pl.when(lin == 0)
+            def _prime():
+                for ai, ispec in enumerate(arr_ins):
+                    _copy(ai, ispec, outer_ids, jid, slot).start()
+
+            for ai, ispec in enumerate(arr_ins):
+                a_out = ispec.n_outer
+                _copy(ai, ispec, outer_ids, jid, slot).wait()
+                row = dma_stage[ispec.name][
+                    (slot,) + (0,) * a_out + (slice(None),)]
+                ref, b = ref_of[f"in_{ispec.name}"]
+                pos = x + ispec.lead
+                pl.store(
+                    ref,
+                    (pl.dslice(_mod(pos, b.stages), 1),
+                     pl.dslice(0, bwidth[b.name])),
+                    row[None, :],
+                )
+
+            @pl.when(nxt < total_steps)
+            def _prefetch():
+                for ai, ispec in enumerate(arr_ins):
+                    _copy(ai, ispec, nxt_outer, nxt_j, 1 - slot).start()
+        else:
+            for ispec in arr_ins:
+                ref, b = ref_of[f"in_{ispec.name}"]
+                src = in_refs[ref_idx[ispec.name]]
+                row = src[(0,) * (ispec.n_outer + 1)]
+                pos = x + ispec.lead
+                pl.store(
+                    ref,
+                    (pl.dslice(_mod(pos, b.stages), 1),
+                     pl.dslice(0, bwidth[b.name])),
+                    row[None, :],
+                )
 
         # 2. fused kernels, in dataflow order, at their leads
         local: dict[str, jnp.ndarray] = {}
@@ -236,8 +366,7 @@ def build_call(spec: StencilSpec, sizes: tuple[int, ...], dtype,
                     ins.append(jax.lax.slice(lrow, (rd.col0,), (rd.col0 + w,)))
                 elif rd.src.startswith("scalar:"):
                     sref = in_refs[ref_idx[rd.src[7:]]]
-                    ins.append(sref[0, 0] if spec.n_outer == 0
-                               else sref[0, 0, 0])
+                    ins.append(sref[0, 0])
                 else:
                     ref, b = ref_of[rd.src]
                     stage = _mod(x + rd.j_off, b.stages)
@@ -277,61 +406,58 @@ def build_call(spec: StencilSpec, sizes: tuple[int, ...], dtype,
                             out_row, val, (step.out_col0,)
                         )
                         oref = o_refs[int(wtgt)]
-                        if spec.n_outer == 0:
-                            oref[0, :] = out_row
-                        else:
-                            oref[0, 0, :] = out_row
+                        oref[(0,) * (n_out + 1) + (slice(None),)] = out_row
 
-        # 3b. dump accumulators into their revisited output blocks
+        # 3b. dump accumulators into their revisited output blocks: the
+        # final grid step (per outer tile for per-outer accumulators)
+        # leaves the fully-combined row in place.
         for oi, out in enumerate(spec.outs):
             if out.acc is not None:
-                aref, _ = acc_of[out.acc]
+                aref, a = acc_of[out.acc]
                 wa = acc_w[out.acc]
-                o_refs[oi][0, :] = pl.load(
-                    aref, (pl.dslice(0, 1), pl.dslice(0, wa)))[0]
+                row = pl.load(aref, (pl.dslice(0, 1), pl.dslice(0, wa)))[0]
+                if a.per_outer:
+                    o_refs[oi][(0,) * n_out + (slice(None),)] = row
+                else:
+                    o_refs[oi][0, :] = row
 
+    grid = (*outer_sizes, steps_j)
     in_specs = []
     out_specs = []
     out_shape = []
-    if spec.n_outer == 0:
-        grid = (steps_j,)
-        for ispec in spec.inputs:
-            if ispec.scalar:
-                in_specs.append(pl.BlockSpec((1, 1), lambda j: (0, 0)))
-                continue
-            h = nj + (ispec.j_hi - ispec.j_lo)
-            w = ni + (ispec.i_hi - ispec.i_lo)
-            in_specs.append(pl.BlockSpec(
-                (1, w),
-                (lambda j, _l=ispec.lead, _o=ispec.j_lo, _h=h:
-                 (jnp.clip(j + spec.x_lo + _l - _o, 0, _h - 1), 0)),
-            ))
-        for out in spec.outs:
-            if out.acc is not None:
-                wa = acc_w[out.acc]
-                out_specs.append(pl.BlockSpec((1, wa), lambda j: (0, 0)))
-                out_shape.append(jax.ShapeDtypeStruct((1, wa), dtype))
+    for ispec in spec.inputs:
+        if ispec.scalar:
+            in_specs.append(pl.BlockSpec((1, 1), lambda *ids: (0, 0)))
+            continue
+        if double_buffer:
+            in_specs.append(pl.BlockSpec(memory_space=pltpu.ANY))
+            continue
+        a_out = ispec.n_outer
+        in_specs.append(pl.BlockSpec(
+            (1,) * (a_out + 1) + (in_w[ispec.name],),
+            (lambda *ids, _sp=ispec, _a=a_out:
+             tuple(ids[n_out - _a:n_out])
+             + (_row_pos(_sp, ids[n_out] + spec.x_lo), 0)),
+        ))
+    for out in spec.outs:
+        if out.acc is not None:
+            a = next(a for a in spec.accs if a.name == out.acc)
+            wa = acc_w[out.acc]
+            if a.per_outer:
+                out_specs.append(pl.BlockSpec(
+                    (1,) * n_out + (wa,),
+                    lambda *ids: tuple(ids[:n_out]) + (0,)))
+                out_shape.append(
+                    jax.ShapeDtypeStruct((*outer_sizes, wa), dtype))
             else:
-                out_specs.append(pl.BlockSpec((1, ni), lambda j: (j, 0)))
-                out_shape.append(jax.ShapeDtypeStruct((steps_j, ni), dtype))
-    else:
-        grid = (nk, steps_j)
-        for ispec in spec.inputs:
-            if ispec.scalar:
-                in_specs.append(
-                    pl.BlockSpec((1, 1, 1), lambda kk, j: (0, 0, 0)))
-                continue
-            h = nj + (ispec.j_hi - ispec.j_lo)
-            w = ni + (ispec.i_hi - ispec.i_lo)
-            in_specs.append(pl.BlockSpec(
-                (1, 1, w),
-                (lambda kk, j, _l=ispec.lead, _o=ispec.j_lo, _h=h:
-                 (kk, jnp.clip(j + spec.x_lo + _l - _o, 0, _h - 1), 0)),
-            ))
-        for out in spec.outs:
-            assert out.acc is None  # guarded above
-            out_specs.append(pl.BlockSpec((1, 1, ni), lambda kk, j: (kk, j, 0)))
-            out_shape.append(jax.ShapeDtypeStruct((nk, steps_j, ni), dtype))
+                out_specs.append(pl.BlockSpec((1, wa), lambda *ids: (0, 0)))
+                out_shape.append(jax.ShapeDtypeStruct((1, wa), dtype))
+        else:
+            out_specs.append(pl.BlockSpec(
+                (1,) * (n_out + 1) + (ni,),
+                lambda *ids: tuple(ids) + (0,)))
+            out_shape.append(
+                jax.ShapeDtypeStruct((*outer_sizes, steps_j, ni), dtype))
 
     scratch_shapes = [
         pltpu.VMEM((b.stages, _pad_to_lane(ni + (b.i_hi - b.i_lo))), dtype)
@@ -340,6 +466,12 @@ def build_call(spec: StencilSpec, sizes: tuple[int, ...], dtype,
         pltpu.VMEM((1, _pad_to_lane(ni + a.w_off)), dtype)
         for a in spec.accs
     ]
+    if double_buffer and arr_ins:
+        scratch_shapes += [
+            pltpu.VMEM((2,) + (1,) * i.n_outer + (in_w[i.name],), dtype)
+            for i in arr_ins
+        ]
+        scratch_shapes.append(pltpu.SemaphoreType.DMA((len(arr_ins), 2)))
     call = pl.pallas_call(
         kernel,
         grid=grid,

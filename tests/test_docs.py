@@ -1,0 +1,25 @@
+"""Docs guardrails in the tier-1 suite: scripts/check_docs.sh enforces
+engine docstrings and keeps docs/*.md code blocks importable."""
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def test_docs_exist_and_are_linked():
+    assert (ROOT / "docs" / "ARCHITECTURE.md").is_file()
+    assert (ROOT / "docs" / "BACKENDS.md").is_file()
+    roadmap = (ROOT / "ROADMAP.md").read_text()
+    assert "docs/BACKENDS.md" in roadmap
+    assert "docs/ARCHITECTURE.md" in roadmap
+
+
+def test_check_docs_script_passes():
+    out = subprocess.run(
+        ["bash", str(ROOT / "scripts" / "check_docs.sh")],
+        capture_output=True, text=True, cwd=str(ROOT),
+    )
+    sys.stdout.write(out.stdout)
+    sys.stderr.write(out.stderr)
+    assert out.returncode == 0, "scripts/check_docs.sh failed"

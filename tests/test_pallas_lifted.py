@@ -1,0 +1,243 @@
+"""Lifted Pallas-executor restrictions, each validated against the
+unfused oracle in interpret mode:
+
+* outer grids (``n_outer >= 1``, including the 4-D ``(l, k, j, i)``
+  pyramid with a rolling buffer carried on a 3-D grid);
+* k-tiled reductions (carried VMEM accumulator across outer tiles) and
+  per-outer-tile reductions (output keeps the outer dims);
+* cross-row (j-offset) reads of same-nest materialized variables;
+* double-buffered input DMA in the executor hot loop.
+
+Plus regression tests pinning the *remaining* restrictions to the
+improved ``PallasUnsupported`` messages (the table in docs/BACKENDS.md).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Generated, PallasGenerated, PallasUnsupported,
+                        Program, axiom, clear_compile_cache, compile_program,
+                        goal, kernel, register_pallas_split_win)
+from repro.core.engine import PALLAS_SPLIT_WINS
+from repro.core.programs import (cosmo_program, energy3d_program,
+                                 laplace5_program, plane_sum_program,
+                                 pyramid4d_program, smooth_norm_program)
+from repro.core.unfused import build_unfused
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    clear_compile_cache()
+    yield
+    clear_compile_cache()
+
+
+def _u(rng, shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+LIFTED = [
+    # (program builder, output name, input shape, restriction exercised)
+    (pyramid4d_program, "edge", (2, 3, 9, 40), "outer-grid n_outer=2"),
+    (cosmo_program, "unew", (3, 10, 70), "outer-grid n_outer=1"),
+    (energy3d_program, "energy", (3, 7, 33), "k-tiled carried reduction"),
+    (plane_sum_program, "colsum", (4, 6, 20), "per-outer-tile reduction"),
+    (smooth_norm_program, "nflux", (9, 30), "cross-row materialized read"),
+]
+
+
+@pytest.mark.parametrize("build,out,shape,_why", LIFTED,
+                         ids=[c[3] for c in LIFTED])
+@pytest.mark.parametrize("double_buffer", [False, True],
+                         ids=["blockspec", "double_buffer"])
+def test_lifted_restriction_matches_oracle(rng, build, out, shape, _why,
+                                           double_buffer):
+    prog = build()
+    gen = compile_program(prog, backend="pallas",
+                          double_buffer=double_buffer)
+    assert isinstance(gen, PallasGenerated)
+    u = _u(rng, shape)
+    got = gen.fn(u=u)[out]
+    want = build_unfused(prog).fn(u=u)[out]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=1e-4)
+
+
+def _broadcast_coeff_program():
+    """A 2-D coefficient field on a (k, j, i) grid: the streamed input
+    `c` carries only the (j, i) suffix (InSpec.n_outer=0 on an
+    n_outer=1 grid) and broadcasts over k."""
+    k_mul = kernel(
+        "damp",
+        inputs=[
+            ("a", "u?[k?][j?][i?]"),
+            ("b", "u?[k?][j?+1][i?]"),
+            ("c", "c[j?][i?]"),
+        ],
+        outputs=[("o", "damped(u?[k?][j?][i?])")],
+        fn=lambda a, b, c: (a + b) * c,
+    )
+    return Program(
+        rules=[k_mul],
+        axioms=[
+            axiom("u[k?][j?][i?]", k="Nk", j="Nj", i="Ni"),
+            axiom("c[j?][i?]", j="Nj", i="Ni"),
+        ],
+        goals=[goal("damped(u[k][j][i])", store_as="damped",
+                    k=("Nk", 0, 0), j=("Nj", 0, -1), i=("Ni", 0, 0))],
+        loop_order=("k", "j", "i"),
+    )
+
+
+@pytest.mark.parametrize("double_buffer", [False, True],
+                         ids=["blockspec", "double_buffer"])
+def test_broadcast_suffix_input_matches_oracle(rng, double_buffer):
+    """Streamed inputs over a dim *suffix* broadcast across the leading
+    outer grid dims in both streaming modes."""
+    prog = _broadcast_coeff_program()
+    gen = compile_program(prog, backend="pallas",
+                          double_buffer=double_buffer)
+    (ispec_u, ispec_c) = [i for i in gen.spec.inputs if not i.scalar]
+    assert {ispec_u.name: ispec_u.n_outer,
+            ispec_c.name: ispec_c.n_outer} == {"u": 1, "c": 0}
+    u, c = _u(rng, (3, 8, 33)), _u(rng, (8, 33))
+    got = gen.fn(u=u, c=c)["damped"]
+    want = build_unfused(prog).fn(u=u, c=c)["damped"]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_outer_grid_spec_shape():
+    """pyramid4d maps both outer identifiers onto leading grid dims and
+    carries the blur in a 3-row rolling window."""
+    gen = compile_program(pyramid4d_program(), backend="pallas")
+    assert gen.spec.n_outer == 2
+    assert [(b.name, b.stages) for b in gen.spec.bufs] == [("b_blur_u", 3)]
+
+
+def test_ktiled_reduction_spec():
+    """energy3d: one carried accumulator on a (k, j) grid."""
+    gen = compile_program(energy3d_program(), backend="pallas")
+    (acc,) = gen.spec.accs
+    assert gen.spec.n_outer == 1 and not acc.per_outer
+
+
+def test_per_outer_reduction_spec():
+    """plane_sum: the accumulator re-initializes per k-tile."""
+    gen = compile_program(plane_sum_program(), backend="pallas")
+    (acc,) = gen.spec.accs
+    assert acc.per_outer
+
+
+def test_cross_row_read_gets_rolling_window():
+    """smooth_norm: the materialized flux is ALSO served in-nest from a
+    2-stage rolling window (rows j and j-1)."""
+    gen = compile_program(smooth_norm_program(), backend="pallas")
+    assert len(gen.specs) == 2
+    assert [(b.name, b.stages) for b in gen.specs[0].bufs] == [("b_flux_u", 2)]
+
+
+def test_auto_routes_single_nest_reduction_to_pallas(rng):
+    """The auto routing table shrank: single-nest reductions now go to
+    the stencil executor."""
+    gen = compile_program(energy3d_program(), backend="auto")
+    assert isinstance(gen, PallasGenerated)
+
+
+def test_auto_split_schedule_routing():
+    """Split schedules default to JAX but route to Pallas once the
+    program is registered as a measured win."""
+    prog = smooth_norm_program()
+    assert isinstance(compile_program(prog, backend="auto"), Generated)
+    try:
+        register_pallas_split_win(prog.name)
+        # the stale cached auto->JAX entry must have been invalidated
+        gen = compile_program(prog, backend="auto")
+        assert isinstance(gen, PallasGenerated)
+    finally:
+        PALLAS_SPLIT_WINS.discard(prog.name)
+    # the default program name would reroute every anonymous program
+    with pytest.raises(ValueError, match="default program name"):
+        register_pallas_split_win("program")
+
+
+def test_double_buffer_distinct_cache_entry():
+    prog = laplace5_program()
+    g1 = compile_program(prog, backend="pallas")
+    g2 = compile_program(prog, backend="pallas", double_buffer=True)
+    assert g1 is not g2
+    assert compile_program(prog, backend="pallas", double_buffer=True) is g2
+
+
+# ---------------------------------------------------------------------------
+# Remaining restrictions: each must raise naming the offending
+# variable/dim (regression for the improved messages)
+# ---------------------------------------------------------------------------
+
+def test_loop_order_too_short_message():
+    k = kernel("id1", [("a", "u?[i?]")], [("o", "v(u?[i?])")], fn=lambda a: a)
+    prog = Program(
+        rules=[k],
+        axioms=[axiom("u[i?]", i="Ni")],
+        goals=[goal("v(u[i])", store_as="v", i=("Ni", 0, 0))],
+        loop_order=("i",),
+    )
+    with pytest.raises(PallasUnsupported, match=r"loop order .* \(row, vector\)"):
+        compile_program(prog, backend="pallas")
+
+
+def test_outer_dim_dependence_message():
+    """k-offset stencils (outer-dim dependence) stay unsupported: the
+    narrowed outer extent is rejected naming the group, dim and range."""
+    k = kernel(
+        "kshift",
+        [("a", "u?[k?-1][j?][i?]"), ("c", "u?[k?][j?][i?]")],
+        [("o", "v(u?[k?][j?][i?])")],
+        fn=lambda a, c: c - a,
+    )
+    prog = Program(
+        rules=[k],
+        axioms=[axiom("u[k?][j?][i?]", k="Nk", j="Nj", i="Ni")],
+        goals=[goal("v(u[k][j][i])", store_as="v",
+                    k=("Nk", 1, 0), j=("Nj", 0, 0), i=("Ni", 0, 0))],
+        loop_order=("k", "j", "i"),
+    )
+    with pytest.raises(PallasUnsupported,
+                       match=r"in outer dim 'k'.*cover \[0, Nk\) exactly"):
+        compile_program(prog, backend="pallas")
+    # auto degrades gracefully to the JAX backend
+    assert isinstance(compile_program(prog, backend="auto"), Generated)
+
+
+def test_reduction_keeping_row_dim_message():
+    """A reduction keeping the row dim (row sums) stays unsupported."""
+    k_sum = kernel("rowsum", [("x", "u[j?][i]")], [("acc", "rsum(u[j?])")],
+                   fn=lambda acc, x: acc + x, kind="reduce", init=0.0)
+    prog = Program(
+        rules=[k_sum],
+        axioms=[axiom("u[j?][i?]", j="Nj", i="Ni")],
+        goals=[goal("rsum(u[j])", store_as="rsum", j=("Nj", 0, 0))],
+        loop_order=("j", "i"),
+    )
+    with pytest.raises(PallasUnsupported, match=r"keeps the row dim 'j'"):
+        compile_program(prog, backend="pallas")
+
+
+def test_row_variable_crossing_split_message():
+    """1-D row variables still cannot cross a stencil-call boundary; the
+    message names the variable and the suffix rule."""
+    k_col = kernel("colmax", [("x", "u[j][i?]")], [("acc", "cmax(u[i?])")],
+                   fn=lambda acc, x: jnp.maximum(acc, x), kind="reduce",
+                   init=-1e30)
+    k_use = kernel("scale", [("a", "u?[j?][i?]"), ("m", "cmax(u?[i?])")],
+                   [("o", "scaled(u?[j?][i?])")], fn=lambda a, m: a / (m + 2e30))
+    prog = Program(
+        rules=[k_col, k_use],
+        axioms=[axiom("u[j?][i?]", j="Nj", i="Ni")],
+        goals=[goal("scaled(u[j][i])", store_as="scaled",
+                    j=("Nj", 0, 0), i=("Ni", 0, 0))],
+        loop_order=("j", "i"),
+    )
+    with pytest.raises(PallasUnsupported, match=r"cross-call read of vector "
+                                                r"accumulator cmax_u"):
+        compile_program(prog, backend="pallas")
