@@ -12,7 +12,15 @@ program as its in-row baseline:
 * ``smooth_norm`` — cross-row read of a same-nest materialized variable
   (served from a rolling VMEM window);
 * ``cosmo_dbuf`` — double-buffered input DMA (explicit two-slot
-  async-copy pipeline) vs the BlockSpec-streamed cosmo leg.
+  async-copy pipeline) vs the BlockSpec-streamed cosmo leg;
+* ``heat3d``     — outer-dim stencil halo (``u[k-1]``/``u[k+1]`` reads
+  served from a 3-plane VMEM window carried across the k grid);
+* ``heat3d_dbuf`` — the same plane window fed by the double-buffered
+  DMA pipeline;
+* ``row_sum``    — row-kept reduction (per-step partial-accumulator
+  rows, lane-reduced on the host);
+* ``subset_sum`` — reduction keeping a leading subset of outer dims
+  (accumulator re-initialized per kept-prefix tile).
 
 Off-TPU the legs run in interpret mode on bounded sizes (the grid
 unrolls at trace time); pass ``interpret=False`` on a TPU runtime for
@@ -28,8 +36,9 @@ import numpy as np
 from repro.core import compile_program
 from repro.core.codegen_jax import CodegenError
 from repro.core.programs import (cosmo_program, energy3d_program,
-                                 plane_sum_program, pyramid4d_program,
-                                 smooth_norm_program)
+                                 heat3d_program, plane_sum_program,
+                                 pyramid4d_program, row_sum_program,
+                                 smooth_norm_program, subset_sum_program)
 from repro.core.unfused import build_unfused
 
 from .common import mk, time_fn
@@ -41,6 +50,10 @@ CASES = [
     ("plane_sum", plane_sum_program, "colsum", (4, 32, 256), False),
     ("smooth_norm", smooth_norm_program, "nflux", (96, 256), False),
     ("cosmo_dbuf", cosmo_program, "unew", (4, 48, 256), True),
+    ("heat3d", heat3d_program, "heat", (6, 32, 256), False),
+    ("heat3d_dbuf", heat3d_program, "heat", (6, 32, 256), True),
+    ("row_sum", row_sum_program, "rsum", (96, 256), False),
+    ("subset_sum", subset_sum_program, "lsum", (3, 4, 24, 256), False),
 ]
 
 
@@ -65,7 +78,7 @@ def run(interpret: bool = True):
                                atol=1e-4, rtol=1e-4), name
             base = f"jax_us={t_j * 1e6:.0f};"
         except CodegenError:
-            base = "jax_us=n/a;"  # kept-outer-dim reductions are Pallas-only
+            base = "jax_us=n/a;"  # defensive: both backends cover every leg
         cells = int(np.prod(shape))
         rows.append({
             "name": f"lifted_{name}_{'x'.join(map(str, shape))}",

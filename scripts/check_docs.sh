@@ -9,6 +9,10 @@
 #   2. every ```python code block in docs/*.md must still parse, and
 #      its import statements must still resolve — so the docs cannot
 #      silently rot as modules move.
+#   3. every `raise PallasUnsupported` site in codegen_pallas.py must
+#      carry a `# doc-row: <key>` marker whose key appears in the
+#      docs/BACKENDS.md restriction table — the live table cannot drift
+#      from the executor's actual raise sites.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -64,10 +68,60 @@ for doc in sorted(pathlib.Path("docs").glob("*.md")):
                 failures.append(
                     f"{doc}:{lineno + imp.lineno - 1}: {src!r} failed: {e}")
 
+# ---- 3. PallasUnsupported raise sites must map to BACKENDS.md rows --------
+cp_path = pathlib.Path("src/repro/core/codegen_pallas.py")
+cp_src = cp_path.read_text()
+cp_lines = cp_src.splitlines()
+
+backends = pathlib.Path("docs/BACKENDS.md").read_text()
+start = backends.find("## Remaining `PallasUnsupported` cases")
+end = backends.find("Formerly restricted", start)
+table = backends[start:end if end != -1 else None].lower()
+if start == -1 or "| Restriction |" not in backends[start:]:
+    failures.append("docs/BACKENDS.md: restriction table section missing")
+    table = ""
+
+
+class _Raises(ast.NodeVisitor):
+    def __init__(self):
+        self.sites: list[int] = []
+
+    def visit_Raise(self, node):
+        exc = node.exc
+        name = ""
+        if isinstance(exc, ast.Call) and isinstance(exc.func, ast.Name):
+            name = exc.func.id
+        elif isinstance(exc, ast.Name):
+            name = exc.id
+        if name == "PallasUnsupported":
+            self.sites.append(node.lineno)
+        self.generic_visit(node)
+
+
+viz = _Raises()
+viz.visit(ast.parse(cp_src))
+for lineno in viz.sites:
+    key = None
+    # the marker sits on the raise line or the line directly above it
+    for cand in (cp_lines[lineno - 1], cp_lines[lineno - 2]):
+        if "# doc-row:" in cand:
+            key = cand.split("# doc-row:", 1)[1].strip()
+            break
+    if key is None:
+        failures.append(
+            f"{cp_path}:{lineno}: raise PallasUnsupported site lacks a "
+            f"'# doc-row: <key>' marker tying it to the docs/BACKENDS.md "
+            f"restriction table")
+    elif key.lower() not in table:
+        failures.append(
+            f"{cp_path}:{lineno}: doc-row key {key!r} has no matching row "
+            f"in the docs/BACKENDS.md restriction table")
+
 if failures:
     print("check_docs: FAIL")
     for f in failures:
         print("  " + f)
     sys.exit(1)
-print("check_docs: OK (engine docstrings + docs/*.md code blocks)")
+print("check_docs: OK (engine docstrings + docs/*.md code blocks + "
+      "PallasUnsupported restriction table)")
 PY

@@ -16,7 +16,12 @@ function.  Shape of the emitted code:
   whole rows, with static halo slices implementing i-offsets;
 * contracted intermediates live in ``(stages, width)`` rolling buffers
   rotated by index arithmetic; reductions use vector partial accumulators
-  with an associative lane-reduction epilogue (Fig. 9 family);
+  with an associative lane-reduction epilogue (Fig. 9 family).  A
+  reduction output that *keeps* dims (row sums ``rsum[j]``, subset-outer
+  sums ``out[l]``) gets one accumulator-array axis per kept dim:
+  combines read/modify/write a single cell in place (masked by the
+  extent predicate), cells initialize once in the preamble, and the
+  lane reduction folds the trailing vector axis on return;
 * phase structure (reduction init → prologue, combine → steady,
   finalize → epilogue) is emitted around the loops per the fused nest.
 """
@@ -225,21 +230,31 @@ class Emitter:
                 return goal.store_as or v.name
         return v.name
 
+    def _acc_kept(self, v) -> list[str]:
+        """Non-vector dims a reduction output keeps: each gets an
+        accumulator-array axis (one cell per kept position)."""
+        return [d for d in v.dims if d != self.inner]
+
     def _emit_acc_init(self, vp: VarPlan) -> None:
         v = vp.var
         g = v.producer
         assert g is not None and g.rule is not None
         ident = g.rule.init
-        out_dims = set(v.dims)
-        bad = out_dims - {self.inner}
-        if bad:
+        kept = self._acc_kept(v)
+        if len(kept) > 3:
             raise CodegenError(
-                f"reduction output {v.name} keeps outer dims {bad}: unsupported"
+                f"reduction output {v.name} keeps dims {kept}: arrays "
+                f"over more than 4 dims are unsupported"
             )
-        if self.inner in g.dims:  # vector partial accumulator
-            self.w.w(f"{_st('a', v.name)} = jnp.full((W{g.gid},), {ident!r}, _dt)")
-        else:
-            self.w.w(f"{_st('a', v.name)} = jnp.full((), {ident!r}, _dt)")
+        parts = []
+        for d in kept:
+            ext = v.extent.get(d)
+            parts.append(f"N{d}" if ext is None
+                         else f"{ext.size} + {ext.hi - ext.lo}")
+        if self.inner in g.dims:  # vector partial accumulator cells
+            parts.append(f"W{g.gid}")
+        shape = f"({', '.join(parts)},)" if parts else "()"
+        self.w.w(f"{_st('a', v.name)} = jnp.full({shape}, {ident!r}, _dt)")
 
     # ---- expressions --------------------------------------------------------
 
@@ -262,6 +277,10 @@ class Emitter:
             adj = lead + o - origin
             return f"{base} + {adj}" if adj else base
 
+        if vp.kind == "external_out" and self._is_reduction_result(vp):
+            # a goal that IS a reduction result has no 'o' array — its
+            # storage is the accumulator; downstream reads go there
+            return self._acc_read_expr(c, v, bound, offs)
         if vp.kind in ("external_in", "full", "external_out"):
             if vp.kind == "external_in":
                 arr = self.axioms[v.key][0]
@@ -309,15 +328,32 @@ class Emitter:
         if vp.kind == "scalar":
             return _st("s", v.name)
         if vp.kind == "acc":
-            g = v.producer
-            assert g is not None and g.rule is not None
-            if self.inner in g.reduced_dims:
-                return (
-                    f"_lane_reduce(_fns['{g.rule.name}'], {_st('a', v.name)},"
-                    f" {g.rule.init!r})"
-                )
-            return _st("a", v.name)
+            return self._acc_read_expr(c, v, bound, offs)
         raise CodegenError(f"cannot read variable {v.name} of kind {vp.kind}")
+
+    def _acc_read_expr(self, c: Group, v, bound: dict[str, str],
+                       offs: dict[str, int]) -> str:
+        """Read a reduction result from its accumulator storage: one
+        cell per kept position, lanes folded when the vector dim was
+        reduced."""
+        g = v.producer
+        assert g is not None and g.rule is not None
+        kept = self._acc_kept(v)
+        if kept:
+            pos = self._acc_pos(c, v, bound, offs)
+            if self.inner in g.dims:
+                cell = (f"_row{len(kept) + 1}({_st('a', v.name)}, "
+                        f"{', '.join(pos)}, 0, W{g.gid})")
+            else:
+                cell = f"{_st('a', v.name)}[{', '.join(pos)}]"
+        else:
+            cell = _st("a", v.name)
+        if self.inner in g.reduced_dims:
+            return (
+                f"_lane_reduce(_fns['{g.rule.name}'], {cell},"
+                f" {g.rule.init!r})"
+            )
+        return cell
 
     def valid_expr(self, g: Group, bound: dict[str, str]) -> str:
         terms = []
@@ -362,17 +398,50 @@ class Emitter:
         for (pname, key), tmp in zip(g.writes, outs):
             self._emit_write(g, key, tmp, bound)
 
+    def _acc_pos(self, g: Group, v, bound: dict[str, str],
+                 offs: dict[str, int] | None = None) -> list[str]:
+        """Index expressions locating a kept-dim accumulator cell."""
+        pos = []
+        for d in self._acc_kept(v):
+            base = bound.get(d)
+            if base is None:
+                raise CodegenError(
+                    f"accumulator {v.name} indexed over unbound dim {d}")
+            origin = v.extent[d].lo if d in v.extent else 0
+            adj = self.lead(g.gid, d) + (offs.get(d, 0) if offs else 0) - origin
+            pos.append(f"{base} + {adj}" if adj else base)
+        return pos
+
     def _emit_reduce(self, g: Group, bound: dict[str, str]) -> None:
         w = self.w
         ins = self._in_exprs(g, bound)
         (_, key), = g.writes
-        acc = _st("a", self.vplan(key).var.name)
+        v = self.vplan(key).var
+        acc = _st("a", v.name)
         valid = self.valid_expr(g, bound)
-        combined = f"_fns['{g.rule.name}']({acc}, {', '.join(ins)})"
-        if valid == "True":
-            w.w(f"{acc} = {combined}")
+        kept = self._acc_kept(v)
+        if not kept:
+            combined = f"_fns['{g.rule.name}']({acc}, {', '.join(ins)})"
+            if valid == "True":
+                w.w(f"{acc} = {combined}")
+            else:
+                w.w(f"{acc} = jnp.where({valid}, {combined}, {acc})")
+            return
+        # kept-dim reduction: combine one accumulator cell in place
+        pos = self._acc_pos(v.producer, v, bound)
+        cur = f"_ac{g.gid}"
+        if self.inner in g.dims:  # vector cells, masked row write-back
+            w.w(f"{cur} = _row{len(kept) + 1}"
+                f"({acc}, {', '.join(pos)}, 0, W{g.gid})")
+            comb = f"_fns['{g.rule.name}']({cur}, {', '.join(ins)})"
+            w.w(f"{acc} = _setrow{len(kept) + 1}"
+                f"({acc}, {', '.join(pos)}, 0, {comb}, {valid})")
         else:
-            w.w(f"{acc} = jnp.where({valid}, {combined}, {acc})")
+            w.w(f"{cur} = {acc}[{', '.join(pos)}]")
+            comb = f"_fns['{g.rule.name}']({cur}, {', '.join(ins)})"
+            new = comb if valid == "True" else \
+                f"jnp.where({valid}, {comb}, {cur})"
+            w.w(f"{acc} = {acc}.at[{', '.join(pos)}].set({new})")
 
     def _emit_write(self, g: Group, key: Term, tmp: str, bound: dict[str, str]) -> None:
         w = self.w
@@ -459,6 +528,11 @@ class Emitter:
             g = vp.var.producer
             if g is None or g.gid not in node.groups():
                 continue
+            if self._acc_kept(vp.var):
+                # kept-dim accumulators hold one cell per kept position:
+                # initialized once in the preamble, never reset (a reset
+                # here would wipe cells of earlier kept iterations)
+                continue
             red = list(g.reduced_dims)
             outermost = red[0] if red else None
             if outermost == node.ident:
@@ -489,6 +563,38 @@ class Emitter:
 
     # ---- driver ----------------------------------------------------------------
 
+    def _seat_goal(self, goal, v, kept: list[str], expr: str,
+                   tail_w: str | None = None) -> str:
+        """Re-seat a kept-dim accumulator (spanning ``v.extent``) at its
+        goal origin inside full-size output dims; identity when every
+        kept extent is already exact.  ``tail_w`` names the width of a
+        trailing vector axis (a reduction output keeping the innermost
+        dim), carried through unseated."""
+        from .rules import Extent
+
+        exact = True
+        for d in kept:
+            ve = v.extent.get(d, Extent(f"N{d}"))
+            ge = goal.extents.get(d, Extent(ve.size))
+            if ve.lo != 0 or ve.hi != 0 or ge.lo != 0 or ge.hi != 0:
+                exact = False
+        if exact:
+            return expr
+        shape, src, dst = [], [], []
+        for d in kept:
+            ve = v.extent.get(d, Extent(f"N{d}"))
+            ge = goal.extents.get(d, Extent(ve.size))
+            shape.append(ge.size)
+            span = f"{ge.size} + {ge.hi - ge.lo}"
+            src.append(f"{ge.lo - ve.lo}:{ge.lo - ve.lo} + {span}")
+            dst.append(f"{ge.lo}:{ge.size} + {ge.hi}")
+        if tail_w is not None:
+            shape.append(tail_w)
+            src.append(":")
+            dst.append(":")
+        return (f"jnp.zeros(({', '.join(shape)},), _dt)"
+                f".at[{', '.join(dst)}].set({expr}[{', '.join(src)}])")
+
     def emit(self) -> str:
         self.emit_preamble()
         for node in self.schedule.nests:
@@ -501,11 +607,19 @@ class Emitter:
             if vp.kind == "external_out" and self._is_reduction_result(vp):
                 g = v.producer
                 assert g is not None and g.rule is not None
+                kept = self._acc_kept(v)
+                acc = _st("a", v.name)
+                tail_w = None
                 if self.inner in g.reduced_dims:
+                    folded = acc if not kept else \
+                        f"jnp.moveaxis({acc}, -1, 0)"
                     expr = (f"_lane_reduce(_fns['{g.rule.name}'], "
-                            f"{_st('a', v.name)}, {g.rule.init!r})")
+                            f"{folded}, {g.rule.init!r})")
                 else:
-                    expr = _st("a", v.name)
+                    expr = acc
+                    if self.inner in g.dims:
+                        tail_w = f"W{g.gid}"
+                expr = self._seat_goal(goal, v, kept, expr, tail_w)
                 outs.append(f"'{name}': {expr}")
             else:
                 outs.append(f"'{name}': {_st('o', name)}")

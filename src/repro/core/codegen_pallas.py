@@ -9,14 +9,26 @@ top-level iteration nest, glued together on the host:
   loop identifiers — any number of them — are flattened one-to-one onto
   leading Pallas grid dimensions by :func:`_extract_nest` (the grid
   mapper), so ``(j, i)`` runs on a 1-D grid, ``(k, j, i)`` on ``(k, j)``,
-  ``(l, k, j, i)`` on ``(l, k, j)``, and so on;
+  ``(l, k, j, i)`` on ``(l, k, j)``, and so on; outer grid dims may
+  cover narrowed canonical ranges (halo'd goals) and carry warm-up
+  tiles for plane windows;
+* streamed inputs read at non-zero offsets in the *plane dim* (the
+  outer loop identifier adjacent to the row dim — ``u[k-1][j][i]``
+  reads) get a multi-plane VMEM window carried across the outer grid:
+  whole planes stay resident for ``p_stages`` tiles, rotated by the
+  same consumer-position-spread rule that sizes row windows
+  (:func:`repro.core.reuse.dim_window`), with the newest plane streamed
+  one row per grid step ``p_lead`` tiles ahead;
 * reductions (``acc``-kind variables) become VMEM accumulator rows
   combined per grid step and lane-reduced on the host (the
   vectorized-reduction triple of Section 3.5).  On outer grids the
   accumulator is either *carried* across every outer tile (a k-tiled
-  global reduction — one running row for the whole grid) or *per-outer*
-  (the reduction output keeps the outer dims: the row re-initializes at
-  each tile and one combined row is emitted per tile);
+  global reduction — one running row for the whole grid) or
+  re-initialized per tile of the *kept prefix* of outer dims (a
+  reduction whose output keeps all outer dims, or a leading subset of
+  them, e.g. ``(l, k, j, i) -> out[l]``); reductions keeping the row
+  dim (``rsum[j]``, reduced dims = the vector dim only) emit one
+  partial-accumulator row per grid step, lane-reduced on the host;
 * 0-dim kernels (a reduction's finalize, broadcast factors) run on the
   host between calls, in the prologue/epilogue slots the fusion pass
   assigned them;
@@ -30,16 +42,19 @@ top-level iteration nest, glued together on the host:
 * multiple terminal outputs map to multi-ref out specs.
 
 Remaining restrictions (checked here with messages naming the offending
-variable/dimension; the pure-JAX backend covers them except where
-docs/BACKENDS.md notes otherwise): loop orders
-with fewer than two identifiers; stencil offsets in dims other than the
-innermost two; contraction (rolling buffers) over a dim other than the
-row dim; reduction outputs keeping the row dim or a strict subset of the
-outer dims; streamed inputs whose dims are not a suffix of the loop
-order (or 1-D row variables crossing a stencil-call boundary); non-zero
-extents in outer dims; cross-call reads of vector accumulators; negative
-innermost origins on materialized/terminal outputs.
-`docs/BACKENDS.md` keeps the user-facing table of these cases.
+variable/dimension; the pure-JAX backend covers every one of them):
+loop orders with fewer than two identifiers; stencil offsets in outer
+dims other than the plane dim; outer-dim offset reads of variables
+produced in the same nest (only *streamed* inputs get plane windows);
+contraction (rolling buffers) over a dim other than the row dim;
+reductions keeping the row dim while also reducing an outer dim;
+reductions keeping a non-prefix subset of the outer dims; streamed
+inputs whose dims are not a suffix of the loop order (or 1-D row
+variables crossing a stencil-call boundary); cross-call reads of vector
+accumulators; negative innermost origins on materialized/terminal
+outputs.  `docs/BACKENDS.md` keeps the user-facing table of these cases
+(each ``raise`` site below is tied to its table row by a ``doc-row``
+marker checked by ``scripts/check_docs.sh``).
 """
 from __future__ import annotations
 
@@ -55,8 +70,8 @@ from .dataflow import Group, build_dataflow
 from .fusion import fuse_inest_dag
 from .infer import IDAG, infer
 from .inest import walk_bodies
-from .reuse import (StoragePlan, VarPlan, analyze_storage,
-                    consumer_positions, window_stages)
+from .reuse import (StoragePlan, VarPlan, analyze_storage, dim_window,
+                    window_stages)
 from .rules import Program
 from .runtime import lane_reduce
 from .terms import Term
@@ -82,18 +97,25 @@ class HostStep:
 
 @dataclass(frozen=True)
 class OutBind:
-    """How one stencil output maps back into the host environment."""
+    """How one stencil output maps back into the host environment.
+
+    ``outer_lo``/``outer_hi`` give the bound variable's canonical extent
+    ``[lo, N_d + hi)`` per outer grid dim (used to trim warm-up/drain
+    tiles and re-seat goal origins); ``n_kept`` is the kept-prefix
+    length for accumulator binds."""
 
     env: str
-    kind: str  # 'external' | 'full' | 'acc'
+    kind: str  # 'external' | 'full' | 'acc' | 'acc_rows'
     lead: int = 0
     j_lo: int = 0
     j_hi: int = 0
     i_lo: int = 0
     i_hi: int = 0
-    reduce_fn: Optional[Callable] = None  # lane reduction for scalar accs
+    outer_lo: tuple[int, ...] = ()
+    outer_hi: tuple[int, ...] = ()
+    reduce_fn: Optional[Callable] = None  # lane reduction for folded lanes
     reduce_init: float = 0.0
-    per_outer: bool = False  # acc emitted once per outer tile
+    n_kept: int = 0  # acc binds: kept-prefix outer dims
 
 
 @dataclass
@@ -116,6 +138,7 @@ def _env_name(vp: VarPlan) -> str:
 
 def _host_step(plan: StoragePlan, g: Group) -> HostStep:
     if g.dims:
+        # doc-row: host kernels between stencil calls
         raise PallasUnsupported(
             f"host-side group {g} iterates {g.dims}: only 0-dim kernels "
             f"can run between stencil calls"
@@ -124,6 +147,7 @@ def _host_step(plan: StoragePlan, g: Group) -> HostStep:
     reads = []
     for _, key, offs in g.reads:
         if any(o != 0 for o in offs.values()):
+            # doc-row: host kernels between stencil calls
             raise PallasUnsupported(
                 f"group {g} reads {plan.vars[key].name} at a non-zero "
                 f"offset: 0-dim host kernels cannot read offsets"
@@ -136,11 +160,13 @@ def _host_step(plan: StoragePlan, g: Group) -> HostStep:
 def _extract_nest(plan: StoragePlan, idag: IDAG, nest_idx: int) -> NestExec:
     """The grid mapper: lower one top-level fused nest to a StencilSpec.
 
-    Outer loop identifiers are flattened onto leading Pallas grid dims;
-    the row identifier becomes the final (fastest) grid dim; the
-    innermost identifier is vectorized across lanes.  Raises
-    :class:`PallasUnsupported` (naming the restriction and the offending
-    variable/dim) for the shapes listed in docs/BACKENDS.md."""
+    Outer loop identifiers are flattened onto leading Pallas grid dims
+    (each covering the union of canonical ranges its groups and plane
+    windows need — warm-up tiles included); the row identifier becomes
+    the final (fastest) grid dim; the innermost identifier is vectorized
+    across lanes.  Raises :class:`PallasUnsupported` (naming the
+    restriction and the offending variable/dim) for the shapes listed in
+    docs/BACKENDS.md."""
     schedule = plan.schedule
     program = schedule.program
     dag = schedule.dag
@@ -148,6 +174,9 @@ def _extract_nest(plan: StoragePlan, idag: IDAG, nest_idx: int) -> NestExec:
     jdim = program.loop_order[-2]
     outer_dims = program.loop_order[:-2]
     n_outer = len(outer_dims)
+    # the plane dim: the only outer dim in which streamed inputs may be
+    # read at non-zero (halo) offsets, via multi-plane VMEM windows
+    pdim = outer_dims[-1] if outer_dims else None
     nest_of_gid = plan.nest_of_gid
     np_ = plan.nests[nest_idx]
     by_id = {g.gid: g for g in dag.groups}
@@ -171,35 +200,44 @@ def _extract_nest(plan: StoragePlan, idag: IDAG, nest_idx: int) -> NestExec:
         elif dag.dataflow_le(grid_gids, {g.gid}):
             host_post.append(_host_step(plan, g))
         else:
+            # doc-row: host kernels between stencil calls
             raise PallasUnsupported(
                 f"group {g} cannot be ordered around the {jdim}-grid"
             )
     if not grid:
         return NestExec(None, (), (), tuple(host_pre), tuple(host_post))
 
-    def check_offsets(v, offs_by_dim):
+    def check_offsets(v, offs_by_dim, streamed: bool):
         for d, o in offs_by_dim.items():
-            if d not in (inner, jdim) and o != 0:
+            if d in (inner, jdim) or o == 0:
+                continue
+            if d == pdim:
+                if streamed:
+                    continue  # served from the input's plane window
+                # doc-row: outer-dim offset reads of same-nest variables
                 raise PallasUnsupported(
-                    f"read of {v} at offset {o:+d} in outer dim {d!r}: "
-                    f"stencil offsets are only supported in the innermost "
-                    f"two dims ({jdim!r}, {inner!r})"
+                    f"read of {v} at offset {o:+d} in plane dim {d!r}: "
+                    f"only streamed inputs get plane windows; variables "
+                    f"produced in the same nest cannot be read across "
+                    f"outer tiles"
                 )
+            # doc-row: stencil offsets beyond the plane dim
+            raise PallasUnsupported(
+                f"read of {v} at offset {o:+d} in outer dim {d!r}: "
+                f"stencil offsets are only supported in the innermost "
+                f"three dims ({pdim!r}, {jdim!r}, {inner!r})"
+            )
 
-    def check_outer_exact(name: str, exts, what: str) -> None:
-        for d in outer_dims:
-            e = exts.get(d)
-            if e is not None and (e.lo != 0 or e.hi != 0):
-                raise PallasUnsupported(
-                    f"{what} {name} has extent [{e.lo:+d}, {e.size}"
-                    f"{e.hi:+d}) in outer dim {d!r}: outer grid dims must "
-                    f"cover [0, {e.size}) exactly"
-                )
+    # per-outer-dim canonical grid ranges (the outer analogue of
+    # x_lo/x_hi_off): every group and plane window contributes
+    o_los: dict[str, list[int]] = {d: [] for d in outer_dims}
+    o_his: dict[str, list[int]] = {d: [] for d in outer_dims}
 
     # ---- streamed inputs --------------------------------------------------
     in_specs: list[InSpec] = []
     in_env: list[str] = []
     input_src: dict[Term, str] = {}
+    plane_inputs: set[Term] = set()
     x_los: list[int] = []
     x_his: list[int] = []
 
@@ -214,29 +252,52 @@ def _extract_nest(plan: StoragePlan, idag: IDAG, nest_idx: int) -> NestExec:
             return
         rank = len(v.dims)
         if rank < 2 or tuple(v.dims) != tuple(program.loop_order[-rank:]):
+            # doc-row: streamed input dims not a suffix of the loop order
             raise PallasUnsupported(
                 f"streamed input {name} spans dims {v.dims}: the executor "
                 f"streams arrays whose dims are a suffix of the loop order "
                 f"{program.loop_order} ending in ({jdim!r}, {inner!r}); "
                 f"1-D row variables cannot cross a stencil-call boundary"
             )
+        # the window shape *and* the grid ranges below both come from
+        # the same extents — the array's own origin frame (axiom extents
+        # for external inputs, the variable extent for materialized
+        # intermediates); mixing frames misaligns the fetched window
         exts = axiom_exts[v.key] if vp.kind == "external_in" else v.extent
-        check_outer_exact(name, exts, "streamed input")
         ej = exts.get(jdim)
         ei = exts.get(inner)
         j_lo, j_hi = (ej.lo, ej.hi) if ej is not None else (0, 0)
         i_lo, i_hi = (ei.lo, ei.hi) if ei is not None else (0, 0)
-        positions = consumer_positions(np_, v, jdim, within=grid_gids)
-        lead = max(0, max(positions)) if positions else 0
-        stages = window_stages(lead, positions)
+        lead, stages, _ = dim_window(np_, v, jdim, within=grid_gids)
+        p_lead, p_stages = 0, 1
+        if pdim is not None and pdim in v.dims:
+            p_lead, p_stages, p_positions = dim_window(
+                np_, v, pdim, within=grid_gids)
+            if not any(p != 0 for p in p_positions):
+                p_lead, p_stages = 0, 1  # no halo: plain row streaming
+        outer_los: list[int] = []
+        outer_his: list[int] = []
+        for d in v.dims[:-2]:
+            e = exts.get(d)
+            outer_los.append(e.lo if e is not None else 0)
+            outer_his.append(e.hi if e is not None else 0)
         in_specs.append(InSpec(name, stages, lead, j_lo, j_hi, i_lo, i_hi,
-                               n_outer=rank - 2))
+                               n_outer=rank - 2, p_stages=p_stages,
+                               p_lead=p_lead, outer_los=tuple(outer_los),
+                               outer_his=tuple(outer_his)))
         in_env.append(name)
         input_src[key] = f"in_{name}"
-        ext = v.extent.get(jdim)
-        if ext is not None:
-            x_los.append(ext.lo - lead)
-            x_his.append(ext.hi - lead)
+        if ej is not None:
+            x_los.append(ej.lo - lead)
+            x_his.append(ej.hi - lead)
+        if p_stages > 1:
+            plane_inputs.add(key)
+            # warm-up tiles: the plane window must have streamed every
+            # plane a tile reads before that tile computes
+            ep = exts.get(pdim)
+            p_lo, p_hi = (ep.lo, ep.hi) if ep is not None else (0, 0)
+            o_los[pdim].append(p_lo - p_lead)
+            o_his[pdim].append(p_hi - p_lead)
 
     for g in grid:
         for _, key, _offs in g.reads:
@@ -252,10 +313,12 @@ def _extract_nest(plan: StoragePlan, idag: IDAG, nest_idx: int) -> NestExec:
                     continue  # produced in-grid: local/buffered (below)
                 p_nest = nest_of_gid.get(p.gid)
                 if p_nest is not None and p_nest > nest_idx:
+                    # doc-row: streamed input dims not a suffix of the loop order
                     raise PallasUnsupported(
                         f"{vp.name} consumed before its producing nest"
                     )
                 if vp.kind == "acc" and vp.var.dims:
+                    # doc-row: cross-call read of a vector accumulator
                     raise PallasUnsupported(
                         f"cross-call read of vector accumulator {vp.name} "
                         f"(dims {vp.var.dims}): only fully-reduced scalars "
@@ -275,6 +338,7 @@ def _extract_nest(plan: StoragePlan, idag: IDAG, nest_idx: int) -> NestExec:
         if vp.kind == "rolling" and vp.var.producer is not None \
                 and vp.var.producer.gid in grid_gids:
             if vp.contraction_dim != jdim:
+                # doc-row: contraction over a non-row dim
                 raise PallasUnsupported(
                     f"rolling buffer {vp.name} contracts over dim "
                     f"{vp.contraction_dim!r}: the executor only carries "
@@ -295,24 +359,44 @@ def _extract_nest(plan: StoragePlan, idag: IDAG, nest_idx: int) -> NestExec:
         if p is None or p.gid not in grid_gids:
             continue
         p_lead = np_.lead(p.gid, jdim)
-        positions = consumer_positions(np_, vp.var, jdim, within=grid_gids)
+        _, _, positions = dim_window(np_, vp.var, jdim, within=grid_gids)
         if positions and any(pos != p_lead for pos in positions):
             name = f"b_{vp.name}"
             bufs.append(BufSpec(name, window_stages(p_lead, positions),
                                 vp.i_lo, vp.i_hi))
             cross_row_buf[key] = name
 
+    def outer_extents(exts) -> tuple[tuple[int, ...], tuple[int, ...]]:
+        los, his = [], []
+        for d in outer_dims:
+            e = exts.get(d)
+            los.append(e.lo if e is not None else 0)
+            his.append(e.hi if e is not None else 0)
+        return tuple(los), tuple(his)
+
     # ---- fused kernel steps ----------------------------------------------
     for g in grid:
         assert g.rule is not None and g.rule.fn is not None
         missing = [d for d in outer_dims if d not in g.dims]
         if missing:
+            # doc-row: kernels not iterating the full outer grid
             raise PallasUnsupported(
                 f"group {g} lacks outer grid dim(s) {missing}: every "
                 f"kernel fused into a {'/'.join(program.loop_order)} nest "
                 f"must iterate the full outer grid"
             )
-        check_outer_exact(str(g), g.extent, "group")
+        for d in outer_dims:
+            if np_.lead(g.gid, d):
+                # doc-row: outer-dim offset reads of same-nest variables
+                raise PallasUnsupported(
+                    f"group {g} runs {np_.lead(g.gid, d)} tile(s) ahead in "
+                    f"outer dim {d!r}: in-grid producers cannot run ahead "
+                    f"of the outer grid (only streamed inputs get plane "
+                    f"windows)"
+                )
+            e = g.extent.get(d)
+            o_los[d].append(e.lo if e is not None else 0)
+            o_his[d].append(e.hi if e is not None else 0)
         lead = np_.lead(g.gid, jdim)
         ext_j = g.extent.get(jdim)
         if ext_j is not None:
@@ -324,15 +408,23 @@ def _extract_nest(plan: StoragePlan, idag: IDAG, nest_idx: int) -> NestExec:
         reads = []
         for _, key, offs in g.reads:
             vp = plan.vars[key]
-            check_offsets(vp.name, offs)
+            src = input_src.get(key)
+            check_offsets(vp.name, offs, streamed=src is not None)
             oj = offs.get(jdim, 0)
             oi = offs.get(inner, 0)
-            src = input_src.get(key)
+            op = offs.get(pdim, 0) if pdim is not None else 0
             if src is not None:
                 if src.startswith("scalar:"):
                     reads.append(ReadSpec(src, 0, 0, 0))
                 else:
-                    reads.append(ReadSpec(src, lead + oj, c_ilo + oi, c_w))
+                    if op and key not in plane_inputs:
+                        # a plane offset on an input whose window was
+                        # planned rowwise cannot happen: dim_window saw
+                        # the same consumer offsets
+                        raise AssertionError(
+                            f"unplanned plane read of {vp.name}")
+                    reads.append(ReadSpec(src, lead + oj, c_ilo + oi, c_w,
+                                          p_off=op))
             elif vp.kind == "rolling":
                 reads.append(ReadSpec(f"b_{vp.name}", lead + oj, c_ilo + oi, c_w))
             elif key in cross_row_buf:
@@ -345,6 +437,7 @@ def _extract_nest(plan: StoragePlan, idag: IDAG, nest_idx: int) -> NestExec:
                 p = vp.var.producer
                 assert p is not None
                 if vp.kind != "row" and lead + oj != np_.lead(p.gid, jdim):
+                    # doc-row: outer-dim offset reads of same-nest variables
                     raise PallasUnsupported(
                         f"read of same-nest {vp.kind} variable {vp.name} at "
                         f"row position {lead + oj} but produced at "
@@ -355,6 +448,7 @@ def _extract_nest(plan: StoragePlan, idag: IDAG, nest_idx: int) -> NestExec:
                 reads.append(
                     ReadSpec(f"local:{vp.name}", 0, (c_ilo + oi) - p_ilo, c_w))
             else:
+                # doc-row: cross-call read of a vector accumulator
                 raise PallasUnsupported(
                     f"read of {vp.name}: storage kind {vp.kind!r} is not "
                     f"representable inside a stencil call"
@@ -366,41 +460,85 @@ def _extract_nest(plan: StoragePlan, idag: IDAG, nest_idx: int) -> NestExec:
             # 'acc': consumed downstream (streamed as a scalar input);
             # 'external_out': the reduction result is itself a goal.
             if ovp.kind not in ("acc", "external_out"):
+                # doc-row: cross-call read of a vector accumulator
                 raise PallasUnsupported(
                     f"reduction result {ovp.name} of storage kind "
                     f"{ovp.kind!r}: only accumulator or terminal results "
                     f"are supported"
                 )
-            kept = tuple(ovp.var.dims)
-            if jdim in kept:
-                raise PallasUnsupported(
-                    f"reduction output {ovp.name} keeps the row dim "
-                    f"{jdim!r}: only outer dims and/or the vector dim "
-                    f"{inner!r} may survive a fused reduction"
-                )
-            kept_outer = tuple(d for d in kept if d != inner)
-            if kept_outer and kept_outer != tuple(outer_dims):
-                raise PallasUnsupported(
-                    f"reduction output {ovp.name} keeps outer dims "
-                    f"{kept_outer} but the grid iterates {outer_dims}: "
-                    f"per-tile reductions must keep every outer dim"
-                )
             if inner not in g.dims:
+                # doc-row: reductions not iterating the vector dim
                 raise PallasUnsupported(
                     f"reduction {g} does not iterate the vector dim"
                 )
-            per_outer = bool(kept_outer)
-            acc = AccSpec(f"a_{ovp.name}", c_w, ovp.acc_init,
-                          per_outer=per_outer)
-            accs.append(acc)
+            kept = tuple(ovp.var.dims)
+            goal = goal_of_base.get(okey)
+            gexts = goal.extents if goal is not None else ovp.var.extent
             valid = (ext_j.lo, ext_j.hi) if ext_j is not None else (0, 0)
+            valid_outer = tuple(
+                ((g.extent[d].lo, g.extent[d].hi) if d in g.extent else (0, 0))
+                for d in outer_dims
+            )
+            if jdim in kept:
+                # row-kept reduction: each grid step's combine is final
+                # for its (outer..., j) point — emit one partial-
+                # accumulator row per step (identity-filled outside the
+                # computed span) and lane-reduce on the host.
+                if set(g.reduced_dims) != {inner}:
+                    # doc-row: row-kept reductions reducing an outer dim
+                    raise PallasUnsupported(
+                        f"reduction output {ovp.name} keeps the row dim "
+                        f"{jdim!r} while reducing {g.reduced_dims}: "
+                        f"row-kept reductions may only reduce the vector "
+                        f"dim {inner!r}"
+                    )
+                if c_ilo < 0 or c_ilo + c_w > 0:
+                    # doc-row: negative innermost origins on outputs
+                    raise PallasUnsupported(
+                        f"partial-accumulator row of {ovp.name} spans "
+                        f"[{c_ilo}, Ni{c_ilo + c_w:+d}): outside the "
+                        f"Ni-wide output row"
+                    )
+                init = ovp.acc_init
+
+                def fn_with_init(*ins, _f=g.rule.fn, _i=init):
+                    return _f(jnp.full_like(ins[0], _i), *ins)
+
+                glos, ghis = outer_extents(gexts)
+                gj = gexts.get(jdim)
+                out_binds.append(OutBind(
+                    env=_env_name(ovp), kind="acc_rows", lead=lead,
+                    j_lo=(gj.lo if gj is not None else 0),
+                    j_hi=(gj.hi if gj is not None else 0),
+                    outer_lo=glos, outer_hi=ghis,
+                    reduce_fn=g.rule.fn, reduce_init=init,
+                ))
+                steps.append(StepSpec(fn_with_init, tuple(reads),
+                                      ((("out", len(outs)),),), lead, c_ilo))
+                outs.append(OutSpec(ovp.name, lead, fill=init))
+                continue
+            kept_outer = tuple(d for d in kept if d != inner)
+            if kept_outer != tuple(outer_dims[:len(kept_outer)]):
+                # doc-row: reductions keeping a non-prefix outer subset
+                raise PallasUnsupported(
+                    f"reduction output {ovp.name} keeps outer dims "
+                    f"{kept_outer} of a {outer_dims} grid: kept outer "
+                    f"dims must form a leading prefix of the grid (the "
+                    f"accumulator re-initializes per kept tile)"
+                )
+            n_kept = len(kept_outer)
+            acc = AccSpec(f"a_{ovp.name}", c_w, ovp.acc_init, n_kept=n_kept)
+            accs.append(acc)
             steps.append(StepSpec(g.rule.fn, tuple(reads), (), lead, c_ilo,
-                                  acc=acc.name, valid=valid))
+                                  acc=acc.name, valid=valid,
+                                  valid_outer=valid_outer))
             outs.append(OutSpec(ovp.name, lead, acc=acc.name))
+            glos, ghis = outer_extents(gexts)
             out_binds.append(OutBind(
                 env=_env_name(ovp), kind="acc", lead=lead,
+                outer_lo=glos, outer_hi=ghis,
                 reduce_fn=g.rule.fn if inner in ovp.acc_reduced else None,
-                reduce_init=ovp.acc_init, per_outer=per_outer,
+                reduce_init=ovp.acc_init, n_kept=n_kept,
             ))
             continue
 
@@ -410,25 +548,27 @@ def _extract_nest(plan: StoragePlan, idag: IDAG, nest_idx: int) -> NestExec:
             v = vp.var
             targets: list[tuple[str, object]] = []
             if vp.kind == "rolling":
-                if f"b_{vp.name}" not in seen_bufs:
-                    raise PallasUnsupported(f"unplanned rolling buffer {vp.name}")
+                assert f"b_{vp.name}" in seen_bufs, \
+                    f"unplanned rolling buffer {vp.name}"
                 targets.append(("buf", f"b_{vp.name}"))
             elif vp.kind == "row":
                 targets.append(("local", vp.name))
             elif vp.kind == "external_out":
                 if c_ilo < 0 or c_ilo + c_w > 0:
+                    # doc-row: negative innermost origins on outputs
                     raise PallasUnsupported(
                         f"row of {vp.name} spans [{c_ilo}, Ni{c_ilo + c_w:+d})"
                         f": outside the Ni-wide output row"
                     )
                 goal = goal_of_base.get(key)
                 gexts = goal.extents if goal is not None else {}
-                check_outer_exact(vp.name, gexts, "terminal output")
+                glos, ghis = outer_extents(gexts)
                 gj = gexts.get(jdim)
                 out_binds.append(OutBind(
                     env=_env_name(vp), kind="external", lead=lead,
                     j_lo=(gj.lo if gj is not None else 0),
                     j_hi=(gj.hi if gj is not None else 0),
+                    outer_lo=glos, outer_hi=ghis,
                 ))
                 targets.append(("out", len(outs)))
                 outs.append(OutSpec(vp.name, lead))
@@ -436,23 +576,27 @@ def _extract_nest(plan: StoragePlan, idag: IDAG, nest_idx: int) -> NestExec:
                 ej = v.extent.get(jdim)
                 ei = v.extent.get(inner)
                 if ej is None or ei is None:
+                    # doc-row: streamed input dims not a suffix of the loop order
                     raise PallasUnsupported(f"materialized {vp.name} lacks "
                                             f"(j, i) extents")
                 if (inner in g.extent and g.extent[inner] != ei) or \
                         (jdim in g.extent and g.extent[jdim] != ej):
+                    # doc-row: negative innermost origins on outputs
                     raise PallasUnsupported(
                         f"{vp.name}: producer extent differs from variable "
                         f"extent; cannot materialize across calls"
                     )
                 if ei.lo < 0 or ei.hi > 0:
+                    # doc-row: negative innermost origins on outputs
                     raise PallasUnsupported(
                         f"row of {vp.name} spans [{ei.lo}, Ni{ei.hi:+d}): "
                         f"outside the Ni-wide output row"
                     )
-                check_outer_exact(vp.name, v.extent, "materialized variable")
+                vlos, vhis = outer_extents(v.extent)
                 out_binds.append(OutBind(
                     env=_env_name(vp), kind="full", lead=lead,
                     j_lo=ej.lo, j_hi=ej.hi, i_lo=ei.lo, i_hi=ei.hi,
+                    outer_lo=vlos, outer_hi=vhis,
                 ))
                 targets.append(("out", len(outs)))
                 outs.append(OutSpec(vp.name, lead))
@@ -462,6 +606,7 @@ def _extract_nest(plan: StoragePlan, idag: IDAG, nest_idx: int) -> NestExec:
                     # ...and to earlier-row consumers via its window
                     targets.append(("buf", cross_row_buf[key]))
             else:
+                # doc-row: cross-call read of a vector accumulator
                 raise PallasUnsupported(
                     f"write of {vp.name}: storage kind {vp.kind!r} is not "
                     f"representable inside a stencil call"
@@ -471,6 +616,7 @@ def _extract_nest(plan: StoragePlan, idag: IDAG, nest_idx: int) -> NestExec:
                               lead, c_ilo))
 
     if not outs:
+        # doc-row: host kernels between stencil calls
         raise PallasUnsupported(f"nest {nest_idx} produces no outputs")
     spec = StencilSpec(
         name=f"{program.name}_n{nest_idx}",
@@ -482,6 +628,9 @@ def _extract_nest(plan: StoragePlan, idag: IDAG, nest_idx: int) -> NestExec:
         outs=tuple(outs),
         x_lo=min(x_los) if x_los else 0,
         x_hi_off=max(x_his) if x_his else 0,
+        outer_lo=tuple(min(o_los[d]) if o_los[d] else 0 for d in outer_dims),
+        outer_hi_off=tuple(max(o_his[d]) if o_his[d] else 0
+                           for d in outer_dims),
     )
     return NestExec(spec, tuple(in_env), tuple(out_binds),
                     tuple(host_pre), tuple(host_post))
@@ -492,6 +641,7 @@ def extract_nest_execs(plan: StoragePlan, idag: IDAG) -> list[NestExec]:
     :class:`NestExec` (the shape probe used by ``backend="auto"``)."""
     program = plan.schedule.program
     if len(program.loop_order) < 2:
+        # doc-row: loop order shorter than
         raise PallasUnsupported(
             f"loop order {program.loop_order} has "
             f"{len(program.loop_order)} dim(s): the stencil executor "
@@ -600,31 +750,77 @@ def generate_pallas(plan: StoragePlan, idag: IDAG, *, dtype=jnp.float32,
     return PallasGenerated(specs, fn, plan, tuple(nest_execs))
 
 
+def _outer_trim(bind: OutBind, spec: StencilSpec, n_outs: tuple[int, ...],
+                n_dims: int) -> tuple[slice, ...]:
+    """Slices dropping warm-up/drain tiles of the first ``n_dims`` outer
+    grid dims, keeping the bind's canonical extent ``[lo, N_d + hi)``."""
+    o_lo = spec.outer_lo or (0,) * spec.n_outer
+    idx = []
+    for d in range(n_dims):
+        s0 = bind.outer_lo[d] - o_lo[d]
+        cnt = n_outs[d] + bind.outer_hi[d] - bind.outer_lo[d]
+        idx.append(slice(s0, s0 + cnt))
+    return tuple(idx)
+
+
+def _outer_seat(bind: OutBind, n_outs: tuple[int, ...],
+                n_dims: int) -> tuple[slice, ...]:
+    """Slices seating a trimmed value at its goal origin inside
+    full-size ``[0, N_d)`` outer dims."""
+    return tuple(
+        slice(bind.outer_lo[d], n_outs[d] + bind.outer_hi[d])
+        for d in range(n_dims)
+    )
+
+
 def _assemble(bind: OutBind, padded, spec: StencilSpec, nj: int, ni: int,
               n_outs: tuple[int, ...], dtype):
     """Map one padded executor output back to its environment array:
-    trim warm-up/drain rows, re-seat goal origins, lane-reduce
+    trim warm-up/drain rows and tiles, re-seat goal origins, lane-reduce
     accumulators whose vector dim was folded."""
+    n_out = spec.n_outer
     if bind.kind == "acc":
-        if bind.per_outer:
-            # (*outer, width): one combined row per outer tile
+        if bind.n_kept:
+            # (*kept grid tiles, width): one combined row per kept tile
+            part = padded[_outer_trim(bind, spec, n_outs, bind.n_kept)]
             if bind.reduce_fn is not None:
-                return lane_reduce(bind.reduce_fn,
-                                   jnp.moveaxis(padded, -1, 0),
+                part = lane_reduce(bind.reduce_fn,
+                                   jnp.moveaxis(part, -1, 0),
                                    bind.reduce_init)
-            return padded
+            kept_exact = all(
+                bind.outer_lo[d] == 0 and bind.outer_hi[d] == 0
+                for d in range(bind.n_kept))
+            if kept_exact:
+                return part
+            shape = tuple(n_outs[:bind.n_kept]) + part.shape[bind.n_kept:]
+            seat = _outer_seat(bind, n_outs, bind.n_kept) \
+                + (slice(None),) * (part.ndim - bind.n_kept)
+            return jnp.zeros(shape, dtype).at[seat].set(part)
         row = padded[0]
         if bind.reduce_fn is not None:
             return lane_reduce(bind.reduce_fn, row, bind.reduce_init)
         return row
     t0 = bind.j_lo - (spec.x_lo + bind.lead)
     nrows = nj + bind.j_hi - bind.j_lo
+    otrim = _outer_trim(bind, spec, n_outs, n_out)
+    if bind.kind == "acc_rows":
+        # one identity-padded partial-accumulator row per grid step:
+        # trim, fold the lanes, seat at the goal origin
+        part = padded[otrim + (slice(t0, t0 + nrows), slice(None))]
+        vals = lane_reduce(bind.reduce_fn, jnp.moveaxis(part, -1, 0),
+                           bind.reduce_init)
+        out = jnp.zeros((*n_outs, nj), dtype)
+        return out.at[_outer_seat(bind, n_outs, n_out)
+                      + (slice(bind.j_lo, nj + bind.j_hi),)].set(vals)
     if bind.kind == "external":
         jlo, jhi = bind.j_lo, nj + bind.j_hi
         out = jnp.zeros((*n_outs, nj, ni), dtype)
-        return out.at[..., jlo:jhi, :].set(padded[..., t0:t0 + nrows, :])
+        return out.at[_outer_seat(bind, n_outs, n_out)
+                      + (slice(jlo, jhi), slice(None))].set(
+            padded[otrim + (slice(t0, t0 + nrows), slice(None))])
     w = ni + bind.i_hi - bind.i_lo
-    return padded[..., t0:t0 + nrows, bind.i_lo:bind.i_lo + w]
+    return padded[otrim + (slice(t0, t0 + nrows),
+                           slice(bind.i_lo, bind.i_lo + w))]
 
 
 def compile_program_pallas(

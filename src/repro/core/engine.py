@@ -13,8 +13,10 @@ dispatches to a backend:
   programs outside the stencil executor's shape;
 * ``backend="auto"`` (default) — probe Pallas applicability and fall
   back to JAX.  Any single-nest schedule over a (row, vector) loop order
-  — including reductions, outer grids, and cross-row materialized reads,
-  now that the executor covers them — goes to the stencil executor;
+  — including reductions (carried, kept-prefix and row-kept), outer
+  grids, outer-dim stencil halos (plane windows), and cross-row
+  materialized reads, now that the executor covers them — goes to the
+  stencil executor;
   split (multi-nest) schedules take the JAX backend unless the program
   name has been registered as a measured Pallas win with
   :func:`register_pallas_split_win` (benchmark legs feed this table from
@@ -76,9 +78,41 @@ def register_pallas_split_win(name: str) -> None:
         del _CACHE[key]
 
 
+def _fn_key(fn):
+    """Structural identity for a kernel callable.
+
+    Keyed on ``(module, qualname, code object, closure cells, defaults)``
+    so structurally identical programs whose kernels are *rebuilt*
+    lambdas (fresh function objects compiled from the same source, e.g.
+    a program-builder called twice) still hit the compile cache.
+    Falls back to the function object itself when there is no code
+    object (builtins/partials) or the closure/defaults are unhashable —
+    identity is always correct, just cache-colder."""
+    if fn is None:
+        return None
+    code = getattr(fn, "__code__", None)
+    if code is None:
+        return fn
+    try:
+        cells = tuple(c.cell_contents for c in
+                      (getattr(fn, "__closure__", None) or ()))
+        # bound methods share module/qualname/code/closure across
+        # instances — the receiver must be part of the key, as must
+        # keyword-only defaults (they don't appear in __defaults__)
+        kwdefs = tuple(sorted((getattr(fn, "__kwdefaults__", None)
+                               or {}).items()))
+        extras = (getattr(fn, "__self__", None), cells,
+                  getattr(fn, "__defaults__", None) or (), kwdefs)
+        hash(extras)
+    except (TypeError, ValueError):
+        return fn
+    return (fn.__module__, fn.__qualname__, code, extras)
+
+
 def program_signature(program: Program):
     """A hashable identity for a program: two structurally identical
-    programs (same rules/axioms/goals/loop order, same kernel callables)
+    programs (same rules/axioms/goals/loop order, same kernel callables
+    — rebuilt lambdas compare by code object, see :func:`_fn_key`)
     share compiled artifacts."""
 
     def params(ps):
@@ -88,7 +122,8 @@ def program_signature(program: Program):
         return tuple(sorted((d, x.size, x.lo, x.hi) for d, x in e.items()))
 
     rules = tuple(
-        (r.name, params(r.inputs), params(r.outputs), r.kind, r.init, r.fn)
+        (r.name, params(r.inputs), params(r.outputs), r.kind, r.init,
+         _fn_key(r.fn))
         for r in program.rules
     )
     axioms = tuple((str(a.term), exts(a.extents)) for a in program.axioms)
@@ -121,9 +156,10 @@ def pallas_auto_viable(plan: StoragePlan) -> bool:
     executor.
 
     Single-nest schedules over a >= 2-dim loop order always qualify —
-    the executor now covers rolling/row contraction, reductions (carried
-    and per-outer-tile accumulators), outer grids, and cross-row
-    materialized reads, and shapes it still rejects fail the probe with
+    the executor now covers rolling/row contraction, reductions (carried,
+    kept-prefix and row-kept accumulators), outer grids, outer-dim halo
+    reads via plane windows, and cross-row materialized reads, and
+    shapes it still rejects fail the probe with
     :class:`PallasUnsupported` and fall back to JAX.  Multi-nest (split)
     schedules qualify only when the program is a registered measured win
     (:func:`register_pallas_split_win`)."""
@@ -132,6 +168,22 @@ def pallas_auto_viable(plan: StoragePlan) -> bool:
     if len(plan.schedule.nests) == 1:
         return True
     return plan.schedule.program.name in PALLAS_SPLIT_WINS
+
+
+def _pallas_auto_probe(plan, idag, *, dtype, interpret, double_buffer):
+    """The single auto-routing probe shared by :func:`compile_program`
+    and :func:`explain`: build the Pallas execution if the plan is
+    viable, return None (fall back to JAX) if it is not or extraction
+    raises :class:`PallasUnsupported`.  Keeping one probe guarantees
+    ``explain`` reports exactly the backend ``compile_program`` would
+    pick for the same flags."""
+    if not pallas_auto_viable(plan):
+        return None
+    try:
+        return generate_pallas(plan, idag, dtype=dtype, interpret=interpret,
+                               double_buffer=double_buffer)
+    except PallasUnsupported:
+        return None
 
 
 def compile_program(
@@ -167,14 +219,8 @@ def compile_program(
         gen = generate_pallas(plan, idag, dtype=dtype, interpret=interpret,
                               double_buffer=double_buffer)
     else:
-        gen = None
-        if pallas_auto_viable(plan):
-            try:
-                gen = generate_pallas(plan, idag, dtype=dtype,
-                                      interpret=interpret,
-                                      double_buffer=double_buffer)
-            except PallasUnsupported:
-                gen = None
+        gen = _pallas_auto_probe(plan, idag, dtype=dtype, interpret=interpret,
+                                 double_buffer=double_buffer)
         if gen is None:
             gen = generate(plan, idag)
     if use_cache:
@@ -186,22 +232,22 @@ def compile_program(
     return gen
 
 
-def explain(program: Program) -> str:
-    """Human-readable transformation report (the paper's debugging output)."""
-    from .codegen_pallas import extract_nest_execs
+def explain(program: Program, *, dtype=jnp.float32, interpret: bool = True,
+            double_buffer: bool = False) -> str:
+    """Human-readable transformation report (the paper's debugging output).
 
+    The keyword flags mirror :func:`compile_program` and feed the same
+    shared probe (:func:`_pallas_auto_probe`), so the reported
+    ``auto backend`` is exactly what ``backend="auto"`` would pick for a
+    compilation with those flags — including split-win routing and
+    non-default ``double_buffer``/``dtype``."""
     idag, plan = _build_plan(program)
     schedule = plan.schedule
     dag = schedule.dag
     backend = "jax"
-    if pallas_auto_viable(plan):
-        # mirror compile_program's auto path exactly: the probe may still
-        # hit a PallasUnsupported shape during extraction
-        try:
-            extract_nest_execs(plan, idag)
-            backend = "pallas"
-        except PallasUnsupported:
-            pass
+    if _pallas_auto_probe(plan, idag, dtype=dtype, interpret=interpret,
+                          double_buffer=double_buffer) is not None:
+        backend = "pallas"
     lines = [
         f"program: {program.name}",
         f"raps: {len(idag.raps)}  groups: {len(dag.groups)}  "

@@ -31,6 +31,19 @@ docs/BACKENDS.md):
   kernel reads the flux at rows j and j-1 *inside the producing nest*
   while the flux also crosses the reduction split: the cross-row read of
   a same-nest materialized variable.
+* :func:`heat3d_program` — the 7-point 3-D heat stencil: ``u[k-1]`` /
+  ``u[k+1]`` reads put a stencil offset in an *outer* dim, served by a
+  3-plane VMEM window carried across the k grid (with the non-exact
+  outer extents the halo induces).
+* :func:`advect4d_halo_program` — a k-upwind advection over a 4-D
+  ``(l, k, j, i)`` order: a plane window riding a grid with two outer
+  dims (``u[l][k+1][j][i]``-style reads).
+* :func:`row_sum_program` — row sums ``rsum[j] = sum_i``: a reduction
+  keeping the row dim (reduced dims = the vector dim only), emitted as
+  per-step partial-accumulator rows lane-reduced on the host.
+* :func:`subset_sum_program` — ``(l, k, j, i) -> lsum[l]``: a reduction
+  keeping a strict leading subset of the outer dims, with the VMEM
+  accumulator re-initialized per kept-prefix tile.
 
 Every kernel body is a pure elementwise jnp function over rows — the
 engine's unfused references (used by tests/benchmarks) call the same
@@ -211,6 +224,117 @@ def plane_sum_program(name: str = "plane_sum") -> Program:
         axioms=[axiom("u[k?][j?][i?]", k="Nk", j="Nj", i="Ni")],
         goals=[goal("colsum(u[k])", store_as="colsum", k=("Nk", 0, 0))],
         loop_order=("k", "j", "i"),
+        name=name,
+    )
+
+
+def _heat7(km, kp, n, s, w_, e, c):
+    return c + 0.1 * (km + kp + n + s + w_ + e - 6.0 * c)
+
+
+def heat3d_program(name: str = "heat3d") -> Program:
+    """The 7-point 3-D heat stencil over ``(k, j, i)``.
+
+    The ``u[k-1]``/``u[k+1]`` reads are stencil offsets in an *outer*
+    loop dim: on the stencil executor the input gets a 3-plane VMEM
+    window rotated across the k grid dim (planes stay resident instead
+    of being re-streamed), with one warm-up tile priming the window and
+    the k-halo'd goal extent trimmed on the host."""
+    k_heat = kernel(
+        "heat7",
+        inputs=[
+            ("km", "u?[k?-1][j?][i?]"),
+            ("kp", "u?[k?+1][j?][i?]"),
+            ("n", "u?[k?][j?-1][i?]"),
+            ("s", "u?[k?][j?+1][i?]"),
+            ("w", "u?[k?][j?][i?-1]"),
+            ("e", "u?[k?][j?][i?+1]"),
+            ("c", "u?[k?][j?][i?]"),
+        ],
+        outputs=[("o", "heat(u?[k?][j?][i?])")],
+        fn=_heat7,
+    )
+    return Program(
+        rules=[k_heat],
+        axioms=[axiom("u[k?][j?][i?]", k="Nk", j="Nj", i="Ni")],
+        goals=[goal("heat(u[k][j][i])", store_as="heat",
+                    k=("Nk", 1, -1), j=("Nj", 1, -1), i=("Ni", 1, -1))],
+        loop_order=("k", "j", "i"),
+        name=name,
+    )
+
+
+def _advect4(km, kp, c, w_):
+    return c - 0.25 * (kp - km) + 0.05 * (c - w_)
+
+
+def advect4d_halo_program(name: str = "advect4d_halo") -> Program:
+    """k-upwind advection over a 4-D ``(l, k, j, i)`` space.
+
+    The ``u[l][k-1]``/``u[l][k+1]`` reads exercise a plane window on a
+    grid with *two* outer dims: ``l`` flattens onto the leading grid dim
+    unchanged while ``k`` (the plane dim) carries the 3-plane window and
+    its warm-up tiles."""
+    k_adv = kernel(
+        "advect",
+        inputs=[
+            ("km", "u?[l?][k?-1][j?][i?]"),
+            ("kp", "u?[l?][k?+1][j?][i?]"),
+            ("c", "u?[l?][k?][j?][i?]"),
+            ("w", "u?[l?][k?][j?][i?-1]"),
+        ],
+        outputs=[("o", "adv(u?[l?][k?][j?][i?])")],
+        fn=_advect4,
+    )
+    return Program(
+        rules=[k_adv],
+        axioms=[axiom("u[l?][k?][j?][i?]", l="Nl", k="Nk", j="Nj", i="Ni")],
+        goals=[goal("adv(u[l][k][j][i])", store_as="adv",
+                    l=("Nl", 0, 0), k=("Nk", 1, -1),
+                    j=("Nj", 0, 0), i=("Ni", 1, 0))],
+        loop_order=("l", "k", "j", "i"),
+        name=name,
+    )
+
+
+def row_sum_program(name: str = "row_sum") -> Program:
+    """Row sums of squares ``rsum[j] = sum_i u[j][i]^2``.
+
+    The reduction output keeps the *row* dim: each grid step's combine
+    is final for its row, so the executor emits one identity-padded
+    partial-accumulator row per step and lane-reduces on the host; the
+    JAX backend keeps a per-row cell in the accumulator array."""
+    k_sq = kernel("sq", [("a", "u?[j?][i?]")],
+                  [("o", "sq(u?[j?][i?])")], fn=_sq1)
+    k_sum = kernel("row_sum", [("x", "sq(u[j?][i])")],
+                   [("acc", "rsum(u[j?])")], fn=_sum2, kind="reduce",
+                   init=0.0)
+    return Program(
+        rules=[k_sq, k_sum],
+        axioms=[axiom("u[j?][i?]", j="Nj", i="Ni")],
+        goals=[goal("rsum(u[j])", store_as="rsum", j=("Nj", 0, 0))],
+        loop_order=("j", "i"),
+        name=name,
+    )
+
+
+def subset_sum_program(name: str = "subset_sum") -> Program:
+    """Per-level sums ``lsum[l] = sum_{k,j,i} u[l][k][j][i]^2``.
+
+    The reduction output keeps a *strict leading subset* of the outer
+    dims (``l`` of ``(l, k)``): the executor re-initializes the VMEM
+    accumulator row at the first step of every l tile and emits one
+    combined row per tile."""
+    k_sq = kernel("sq", [("a", "u?[l?][k?][j?][i?]")],
+                  [("o", "sq(u?[l?][k?][j?][i?])")], fn=_sq1)
+    k_sum = kernel("subset_sum", [("x", "sq(u[l?][k][j][i])")],
+                   [("acc", "lsum(u[l?])")], fn=_sum2, kind="reduce",
+                   init=0.0)
+    return Program(
+        rules=[k_sq, k_sum],
+        axioms=[axiom("u[l?][k?][j?][i?]", l="Nl", k="Nk", j="Nj", i="Ni")],
+        goals=[goal("lsum(u[l])", store_as="lsum", l=("Nl", 0, 0))],
+        loop_order=("l", "k", "j", "i"),
         name=name,
     )
 

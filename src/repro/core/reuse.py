@@ -169,6 +169,22 @@ def window_stages(lead: int, positions: list[int]) -> int:
     return max(1, lead - min(oldest, lead) + 1)
 
 
+def dim_window(np_: NestPlan, v: Var, dim: str,
+               within: set[int] | None = None) -> tuple[int, int, list[int]]:
+    """``(lead, stages, positions)`` of the window ``v`` needs along
+    ``dim`` — the per-dimension form of the Fig. 9a/9b sizing rule.
+
+    ``lead`` is how far ahead of the canonical point the stream must run
+    so the newest consumer position is initialized (floored at 0: a
+    stream never runs behind), and ``stages`` spans back to the oldest
+    consumer position.  The same rule sizes row windows (``dim`` = the
+    row identifier) and the plane windows carried across the outer grid
+    for outer-dim stencil halos (``dim`` = an outer identifier)."""
+    positions = consumer_positions(np_, v, dim, within)
+    lead = max(0, max(positions)) if positions else 0
+    return lead, window_stages(lead, positions), positions
+
+
 def _compute_leads(schedule: FusedSchedule, np_: NestPlan) -> None:
     """lead_P(d) >= lead_C(d) + max read offset in d, minimized, floored at
     0 per nest (longest-path over the nest's internal dataflow edges)."""

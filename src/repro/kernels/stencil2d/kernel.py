@@ -10,39 +10,53 @@ The grid is ``(*outer, steps_j)``: the loop nest's outer identifiers map
 one-to-one onto leading grid dimensions (``n_outer`` of them, any number
 including zero) and the row identifier ``j`` maps onto the last, so a
 ``(j, i)`` nest runs on a 1-D grid, ``(k, j, i)`` on a 2-D grid,
-``(l, k, j, i)`` on a 3-D grid, and so on.  TPU grids execute
-sequentially with the last dimension fastest, which is exactly the
-fused nest's traversal order — VMEM scratch therefore carries state
-both across rows *and* across outer-tile boundaries.  Each grid step:
+``(l, k, j, i)`` on a 3-D grid, and so on.  Outer grid dims cover the
+*canonical range* ``[outer_lo[d], N_d + outer_hi_off[d])`` — narrowed
+by halo'd goals and extended downward by plane-window warm-up tiles.
+TPU grids execute sequentially with the last dimension fastest, which
+is exactly the fused nest's traversal order — VMEM scratch therefore
+carries state both across rows *and* across outer-tile boundaries.
+Each grid step:
 
 1. streams exactly one new row per array input from HBM into that
    input's VMEM window — either through the BlockSpec index map (the DMA
    runs ``lead`` rows ahead of the canonical point), or, with
    ``double_buffer=True``, through an explicitly double-buffered
    ``make_async_copy`` pair that prefetches the next grid step's row
-   while the current one is being consumed;
+   while the current one is being consumed.  Inputs read at non-zero
+   offsets in the *plane dim* (the outer identifier adjacent to ``j`` —
+   ``u[k-1][j][i]`` stencils) use a *multi-plane window* instead of a
+   rolling row window: ``(p_stages, rows, width)`` VMEM where whole
+   planes stay resident across outer tiles and the streamed row lands
+   in the newest plane, ``p_lead`` tiles ahead (Fig. 9a/9b applied one
+   loop level further out);
 2. executes every fused kernel at its software-pipeline lead, reading
    neighbor rows from VMEM windows via mod-``stages`` index arithmetic
-   (the functional form of the paper's pointer rotation, Fig. 9a/9b);
-   reduction kernels combine into VMEM accumulator rows carried across
-   grid steps (the vector partial accumulators of Section 3.5),
-   predicated on the canonical point being inside the reduced extent —
-   an accumulator is either *carried* across the whole grid (k-tiled
-   reduction: one running row survives every outer tile) or *per-outer*
-   (re-initialized at the first row of each outer tile, one result per
-   tile);
+   (the functional form of the paper's pointer rotation, Fig. 9a/9b) —
+   and neighbor *planes* via mod-``p_stages`` plane slots; reduction
+   kernels combine into VMEM accumulator rows carried across grid steps
+   (the vector partial accumulators of Section 3.5), predicated on the
+   canonical point being inside the reduced extent (rows *and* outer
+   tiles) — an accumulator is either *carried* across the whole grid
+   (k-tiled reduction: one running row survives every outer tile) or
+   re-initialized per tile of the *kept prefix* of outer dims
+   (:attr:`AccSpec.n_kept` — a reduction keeping all outer dims or a
+   leading subset of them); row-kept reductions carry nothing and emit
+   one identity-padded partial row per step instead;
 3. writes one row per terminal output back to HBM; accumulator outputs
-   are dumped into a revisited block whose final grid step (per tile for
-   per-outer accumulators) holds the fully-combined partial-accumulator
-   row.
+   are dumped into a revisited block whose final grid step (per kept
+   tile for kept-prefix accumulators) holds the fully-combined
+   partial-accumulator row.
 
 Inputs may be full-size external arrays over any *suffix* of the loop
 order ending in ``(j, i)`` (:attr:`InSpec.n_outer` counts the outer dims
 the array actually carries, so a 2-D coefficient field broadcasts over
-the outer grid), halo-trimmed intermediates materialized by an earlier
-stencil call of the same schedule (their ``j/i`` origins are carried in
-:class:`InSpec`), or 0-dim scalars (broadcast values such as a
-normalization factor) passed as ``(1, 1)`` blocks.
+the outer grid; per-outer-dim origins ride in
+:attr:`InSpec.outer_los`/``outer_his``), halo-trimmed intermediates
+materialized by an earlier stencil call of the same schedule (their
+``j/i`` origins are carried in :class:`InSpec`), or 0-dim scalars
+(broadcast values such as a normalization factor) passed as ``(1, 1)``
+blocks.
 
 Rolling windows are padded to the 128-wide TPU lane tile (the
 vector-length expansion of Fig. 9c).  Warm-up/drain grid steps compute
@@ -89,8 +103,18 @@ class InSpec:
     *outer* grid dimensions the array itself carries (its dims are the
     trailing ``n_outer`` outer identifiers of the nest, so an array with
     ``n_outer`` smaller than the grid's broadcasts over the leading outer
-    dims).  Scalar inputs are 0-dim values passed as a single ``(1, 1)``
-    block."""
+    dims); ``outer_los``/``outer_his`` are the array's per-outer-dim
+    origins (array planes in dim d = N_d + hi_d - lo_d), in the input's
+    own outer-dim order.  Scalar inputs are 0-dim values passed as a
+    single ``(1, 1)`` block.
+
+    ``p_stages > 1`` switches the input to *plane-window* mode (the
+    input is read at non-zero offsets in the plane dim — the grid's last
+    outer dim): instead of a rolling row window, VMEM holds a
+    ``(p_stages, rows, width)`` window of whole planes rotated across
+    outer tiles; each grid step streams one row of the *newest* plane
+    (``p_lead`` tiles ahead of the canonical tile) while older planes
+    stay resident for ``u[k-1]``-style reads."""
 
     name: str
     stages: int = 1
@@ -101,6 +125,15 @@ class InSpec:
     i_hi: int = 0  # array cols = Ni + (i_hi - i_lo)
     scalar: bool = False
     n_outer: int = 0  # outer grid dims carried by the array itself
+    p_stages: int = 1  # planes kept resident (>1: plane-window mode)
+    p_lead: int = 0  # plane-dim stream lead (tiles ahead)
+    outer_los: tuple[int, ...] = ()  # per-outer-dim array origins
+    outer_his: tuple[int, ...] = ()
+
+    @property
+    def plane(self) -> bool:
+        """Whether this input uses a multi-plane VMEM window."""
+        return self.p_stages > 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -119,17 +152,25 @@ class AccSpec:
     """One carried accumulator row (vector partial accumulator of a
     fused reduction): width Ni + w_off, initialized to ``init``.
 
-    ``per_outer=False`` carries one running row across the *entire* grid
-    (initialized on the very first grid step — the k-tiled reduction
-    form, where outer grid steps are tiles of one global reduction).
-    ``per_outer=True`` re-initializes at the first row of every outer
-    tile and produces one combined row per tile (a reduction whose
-    output keeps the outer dims)."""
+    ``n_kept`` is the number of *leading* outer grid dims the reduction
+    output keeps.  ``n_kept == 0`` carries one running row across the
+    entire grid (initialized on the very first grid step — the k-tiled
+    reduction form, where outer grid steps are tiles of one global
+    reduction).  ``n_kept >= 1`` re-initializes the row whenever every
+    grid dim *after* the kept prefix is at its first step and produces
+    one combined row per kept-prefix tile (a reduction whose output
+    keeps all outer dims — the per-outer form — or a strict leading
+    subset of them)."""
 
     name: str
     w_off: int
     init: float
-    per_outer: bool = False
+    n_kept: int = 0
+
+    @property
+    def per_outer(self) -> bool:
+        """Whether the row re-initializes per kept-prefix outer tile."""
+        return self.n_kept > 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -138,6 +179,7 @@ class ReadSpec:
     j_off: int  # total row offset (consumer lead + stencil offset)
     col0: int  # absolute column position of the first lane read
     w_off: int  # read width = Ni + w_off
+    p_off: int = 0  # plane-dim offset (plane-window inputs only)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -153,7 +195,10 @@ class StepSpec:
     Reduction steps set ``acc``: the current accumulator row is
     prepended to the kernel arguments and the combined result is stored
     back, predicated on the canonical j-position lying inside
-    ``valid`` = (lo, hi_off), i.e. ``lo <= x + lead < Nj + hi_off``."""
+    ``valid`` = (lo, hi_off), i.e. ``lo <= x + lead < Nj + hi_off``, and
+    on every outer-dim position lying inside the matching entry of
+    ``valid_outer`` (same (lo, hi_off) convention per outer grid dim —
+    warm-up/drain tiles of a halo'd grid must not pollute)."""
 
     fn: Callable
     reads: tuple[ReadSpec, ...]
@@ -162,19 +207,23 @@ class StepSpec:
     out_col0: int = 0  # absolute column of the produced row's first lane
     acc: Optional[str] = None
     valid: tuple[int, int] = (0, 0)
+    valid_outer: tuple[tuple[int, int], ...] = ()
 
 
 @dataclasses.dataclass(frozen=True)
 class OutSpec:
     """One terminal output.  Row outputs get one padded row per grid
-    step; accumulator outputs (``acc`` set) are a revisited block dumped
-    from the named accumulator — ``(1, Ni + w_off)`` for carried
-    accumulators, one ``(Ni + w_off)``-row per outer tile for per-outer
-    accumulators."""
+    step, filled with ``fill`` outside the computed span (non-zero for
+    row-kept reductions, whose rows are lane-reduced on the host and
+    must pad with the combine identity); accumulator outputs (``acc``
+    set) are a revisited block dumped from the named accumulator —
+    ``(1, Ni + w_off)`` for carried accumulators, one ``(Ni + w_off)``
+    row per kept-prefix outer tile otherwise."""
 
     name: str
     lead: int = 0
     acc: Optional[str] = None
+    fill: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -182,7 +231,11 @@ class StencilSpec:
     """A complete fused, contracted stencil pipeline (one iteration
     nest of the engine's schedule).  ``n_outer`` is the number of grid
     dimensions ahead of the row dimension — 0 for a ``(j,)`` grid, 1 for
-    ``(k, j)``, 2 for ``(l, k, j)``, and so on."""
+    ``(k, j)``, 2 for ``(l, k, j)``, and so on.  ``outer_lo`` /
+    ``outer_hi_off`` give each outer grid dim's canonical range
+    ``[lo, N_d + hi_off)`` — non-zero when goals/axioms narrow an outer
+    dim or a plane window needs warm-up tiles (the outer-dim analogue of
+    ``x_lo``/``x_hi_off``); empty tuples mean exact ``[0, N_d)``."""
 
     name: str
     n_outer: int
@@ -193,6 +246,8 @@ class StencilSpec:
     outs: tuple[OutSpec, ...]
     x_lo: int  # canonical loop start (negative = pipeline priming rows)
     x_hi_off: int  # loop end offset: x in [x_lo, Nj + x_hi_off)
+    outer_lo: tuple[int, ...] = ()
+    outer_hi_off: tuple[int, ...] = ()
 
 
 def build_call(spec: StencilSpec, sizes: tuple[int, ...], dtype,
@@ -218,25 +273,49 @@ def build_call(spec: StencilSpec, sizes: tuple[int, ...], dtype,
             f"spec {spec.name} has n_outer={n_out} but got sizes {sizes}"
         )
     *outer_sizes, nj, ni = sizes
+    o_lo = spec.outer_lo or (0,) * n_out
+    o_hi = spec.outer_hi_off or (0,) * n_out
+    gsz = [outer_sizes[d] + o_hi[d] - o_lo[d] for d in range(n_out)]
     steps_j = (nj + spec.x_hi_off) - spec.x_lo
     total_steps = steps_j
-    for s in outer_sizes:
+    for s in gsz:
         total_steps *= s
 
     arr_ins = [i for i in spec.inputs if not i.scalar]
+    row_ins = [i for i in arr_ins if not i.plane]
+    plane_ins = [i for i in arr_ins if i.plane]
     win_bufs = [BufSpec(f"in_{i.name}", i.stages, i.i_lo, i.i_hi)
-                for i in arr_ins] + list(spec.bufs)
+                for i in row_ins] + list(spec.bufs)
     bwidth = {b.name: ni + (b.i_hi - b.i_lo) for b in win_bufs}
     acc_w = {a.name: ni + a.w_off for a in spec.accs}
     ref_idx = {ispec.name: k for k, ispec in enumerate(spec.inputs)}
+    ispec_of = {i.name: i for i in arr_ins}
     in_h = {i.name: nj + (i.j_hi - i.j_lo) for i in arr_ins}
     in_w = {i.name: ni + (i.i_hi - i.i_lo) for i in arr_ins}
-    n_scratch_bufs = len(win_bufs) + len(spec.accs)
+    n_scratch_bufs = len(win_bufs) + len(plane_ins) + len(spec.accs)
 
     def _row_pos(ispec: InSpec, x):
         """Source row index of ``ispec`` for canonical position ``x``
         (clamped: edge rows repeat during warm-up/drain)."""
         return jnp.clip(x + ispec.lead - ispec.j_lo, 0, in_h[ispec.name] - 1)
+
+    def _outer_src(ispec: InSpec, pos):
+        """Source indices for the input's own outer dims at canonical
+        outer positions ``pos`` (one per grid outer dim).  The plane dim
+        (last outer dim) of a plane-window input runs ``p_lead`` tiles
+        ahead; all indices are clamped so warm-up/drain tiles fetch edge
+        planes instead of faulting."""
+        a_out = ispec.n_outer
+        ilos = ispec.outer_los or (0,) * a_out
+        ihis = ispec.outer_his or (0,) * a_out
+        idxs = []
+        for li, d in enumerate(range(n_out - a_out, n_out)):
+            n_planes = outer_sizes[d] + ihis[li] - ilos[li]
+            p = pos[d]
+            if ispec.plane and d == n_out - 1:
+                p = p + ispec.p_lead
+            idxs.append(jnp.clip(p - ilos[li], 0, n_planes - 1))
+        return idxs
 
     def kernel(*refs):
         nin = len(spec.inputs)
@@ -244,8 +323,10 @@ def build_call(spec: StencilSpec, sizes: tuple[int, ...], dtype,
         o_refs = refs[nin:nin + len(spec.outs)]
         scratch = refs[nin + len(spec.outs):]
         ref_of = {b.name: (r, b) for r, b in zip(scratch, win_bufs)}
-        acc_of = {a.name: (r, a)
-                  for r, a in zip(scratch[len(win_bufs):], spec.accs)}
+        plane_of = {i.name: r for i, r in
+                    zip(plane_ins, scratch[len(win_bufs):])}
+        acc_of = {a.name: (r, a) for r, a in zip(
+            scratch[len(win_bufs) + len(plane_ins):], spec.accs)}
         dma_stage = {
             i.name: r for i, r in zip(
                 arr_ins, scratch[n_scratch_bufs:n_scratch_bufs + len(arr_ins)])
@@ -254,30 +335,47 @@ def build_call(spec: StencilSpec, sizes: tuple[int, ...], dtype,
                     if double_buffer and arr_ins else None)
 
         outer_ids = [pl.program_id(d) for d in range(n_out)]
+        opos = [outer_ids[d] + o_lo[d] for d in range(n_out)]
         jid = pl.program_id(n_out)
         x = jid + spec.x_lo
 
-        # 0. identity-initialize accumulators: carried accumulators once
-        # on the very first grid step, per-outer accumulators at the
-        # first row of every outer tile.
-        carried = [a for a in spec.accs if not a.per_outer]
-        tiled = [a for a in spec.accs if a.per_outer]
-        if carried:
+        def _store_window(ispec: InSpec, row, pos_outer, xx):
+            """Seat one freshly-streamed row: rolling row windows rotate
+            by mod-``stages`` position arithmetic; plane windows place
+            the row at its absolute array index inside the newest plane
+            (``p_lead`` tiles ahead, mod-``p_stages`` plane slot)."""
+            if ispec.plane:
+                pref = plane_of[ispec.name]
+                slot = _mod(pos_outer[n_out - 1] + ispec.p_lead,
+                            ispec.p_stages)
+                r_idx = _row_pos(ispec, xx)
+                pl.store(
+                    pref,
+                    (pl.dslice(slot, 1), pl.dslice(r_idx, 1),
+                     pl.dslice(0, in_w[ispec.name])),
+                    row[None, None, :],
+                )
+            else:
+                ref, b = ref_of[f"in_{ispec.name}"]
+                pl.store(
+                    ref,
+                    (pl.dslice(_mod(xx + ispec.lead, b.stages), 1),
+                     pl.dslice(0, bwidth[b.name])),
+                    row[None, :],
+                )
+
+        # 0. identity-initialize accumulators: carried accumulators
+        # (n_kept == 0) once on the very first grid step, kept-prefix
+        # accumulators at the first step of every kept tile.
+        for a in spec.accs:
             first = jid == 0
-            for oid in outer_ids:
-                first &= oid == 0
+            for d in range(a.n_kept, n_out):
+                first &= outer_ids[d] == 0
 
             @pl.when(first)
-            def _init_carried():
-                for a in carried:
-                    r, _ = acc_of[a.name]
-                    r[0, :] = jnp.full((r.shape[1],), a.init, dtype)
-        if tiled:
-            @pl.when(jid == 0)
-            def _init_tiled():
-                for a in tiled:
-                    r, _ = acc_of[a.name]
-                    r[0, :] = jnp.full((r.shape[1],), a.init, dtype)
+            def _init_acc(_a=a):
+                r, _ = acc_of[_a.name]
+                r[0, :] = jnp.full((r.shape[1],), _a.init, dtype)
 
         # 1. stream one new row per array input into its VMEM window
         if double_buffer and arr_ins:
@@ -288,24 +386,24 @@ def build_call(spec: StencilSpec, sizes: tuple[int, ...], dtype,
             mult = steps_j
             for d in reversed(range(n_out)):
                 lin = lin + outer_ids[d] * mult
-                mult *= outer_sizes[d]
+                mult *= gsz[d]
             nxt = lin + 1
             nxt_j = jax.lax.rem(nxt, steps_j)
             rest = jax.lax.div(nxt, steps_j)
             nxt_outer = [None] * n_out
             for d in reversed(range(n_out)):
-                nxt_outer[d] = jax.lax.rem(rest, outer_sizes[d])
-                rest = jax.lax.div(rest, outer_sizes[d])
+                nxt_outer[d] = jax.lax.rem(rest, gsz[d])
+                rest = jax.lax.div(rest, gsz[d])
+            nxt_pos = [nxt_outer[d] + o_lo[d] for d in range(n_out)]
             slot = _mod(lin, 2)
 
-            def _copy(ai, ispec, ids, j_id, to_slot):
+            def _copy(ai, ispec, pos_outer, j_id, to_slot):
                 """The row DMA descriptor for one input at one grid step
                 (start and wait must agree on shape)."""
-                a_out = ispec.n_outer
                 pos = _row_pos(ispec, j_id + spec.x_lo)
                 src = in_refs[ref_idx[ispec.name]]
-                src_idx = tuple(pl.ds(ids[d], 1)
-                                for d in range(n_out - a_out, n_out))
+                src_idx = tuple(pl.ds(i, 1)
+                                for i in _outer_src(ispec, pos_outer))
                 src_idx += (pl.ds(pos, 1), slice(None))
                 return pltpu.make_async_copy(
                     src.at[src_idx],
@@ -316,38 +414,24 @@ def build_call(spec: StencilSpec, sizes: tuple[int, ...], dtype,
             @pl.when(lin == 0)
             def _prime():
                 for ai, ispec in enumerate(arr_ins):
-                    _copy(ai, ispec, outer_ids, jid, slot).start()
+                    _copy(ai, ispec, opos, jid, slot).start()
 
             for ai, ispec in enumerate(arr_ins):
                 a_out = ispec.n_outer
-                _copy(ai, ispec, outer_ids, jid, slot).wait()
+                _copy(ai, ispec, opos, jid, slot).wait()
                 row = dma_stage[ispec.name][
                     (slot,) + (0,) * a_out + (slice(None),)]
-                ref, b = ref_of[f"in_{ispec.name}"]
-                pos = x + ispec.lead
-                pl.store(
-                    ref,
-                    (pl.dslice(_mod(pos, b.stages), 1),
-                     pl.dslice(0, bwidth[b.name])),
-                    row[None, :],
-                )
+                _store_window(ispec, row, opos, x)
 
             @pl.when(nxt < total_steps)
             def _prefetch():
                 for ai, ispec in enumerate(arr_ins):
-                    _copy(ai, ispec, nxt_outer, nxt_j, 1 - slot).start()
+                    _copy(ai, ispec, nxt_pos, nxt_j, 1 - slot).start()
         else:
             for ispec in arr_ins:
-                ref, b = ref_of[f"in_{ispec.name}"]
                 src = in_refs[ref_idx[ispec.name]]
                 row = src[(0,) * (ispec.n_outer + 1)]
-                pos = x + ispec.lead
-                pl.store(
-                    ref,
-                    (pl.dslice(_mod(pos, b.stages), 1),
-                     pl.dslice(0, bwidth[b.name])),
-                    row[None, :],
-                )
+                _store_window(ispec, row, opos, x)
 
         # 2. fused kernels, in dataflow order, at their leads
         local: dict[str, jnp.ndarray] = {}
@@ -367,6 +451,22 @@ def build_call(spec: StencilSpec, sizes: tuple[int, ...], dtype,
                 elif rd.src.startswith("scalar:"):
                     sref = in_refs[ref_idx[rd.src[7:]]]
                     ins.append(sref[0, 0])
+                elif rd.src.startswith("in_") and \
+                        ispec_of.get(rd.src[3:]) is not None and \
+                        ispec_of[rd.src[3:]].plane:
+                    # plane-window read: plane slot by mod-stage rotation
+                    # in the plane dim, absolute row index within it
+                    ispec = ispec_of[rd.src[3:]]
+                    pref = plane_of[ispec.name]
+                    slot = _mod(opos[n_out - 1] + rd.p_off, ispec.p_stages)
+                    r_idx = jnp.clip(x + rd.j_off - ispec.j_lo, 0,
+                                     in_h[ispec.name] - 1)
+                    ins.append(
+                        pl.load(pref, (pl.dslice(slot, 1),
+                                       pl.dslice(r_idx, 1),
+                                       pl.dslice(rd.col0 - ispec.i_lo, w))
+                                )[0, 0]
+                    )
                 else:
                     ref, b = ref_of[rd.src]
                     stage = _mod(x + rd.j_off, b.stages)
@@ -376,10 +476,13 @@ def build_call(spec: StencilSpec, sizes: tuple[int, ...], dtype,
                     )
             vals = step.fn(*ins)
             if step.acc is not None:
-                # predicated combine: warm-up/drain rows must not pollute
+                # predicated combine: warm-up/drain rows *and* tiles
+                # must not pollute
                 lo, hi = step.valid
                 pos = x + step.lead
                 ok = (pos >= lo) & (pos < nj + hi)
+                for d, (vlo, vhi) in enumerate(step.valid_outer):
+                    ok &= (opos[d] >= vlo) & (opos[d] < outer_sizes[d] + vhi)
                 new = jnp.where(ok, vals, cur)
                 aref, _ = acc_of[step.acc]
                 pl.store(aref, (pl.dslice(0, 1), pl.dslice(0, acc_w[step.acc])),
@@ -401,7 +504,8 @@ def build_call(spec: StencilSpec, sizes: tuple[int, ...], dtype,
                             val[None, :],
                         )
                     else:  # 3. one output row for this grid step
-                        out_row = jnp.zeros((ni,), val.dtype)
+                        out_row = jnp.full(
+                            (ni,), spec.outs[int(wtgt)].fill, val.dtype)
                         out_row = jax.lax.dynamic_update_slice(
                             out_row, val, (step.out_col0,)
                         )
@@ -409,19 +513,19 @@ def build_call(spec: StencilSpec, sizes: tuple[int, ...], dtype,
                         oref[(0,) * (n_out + 1) + (slice(None),)] = out_row
 
         # 3b. dump accumulators into their revisited output blocks: the
-        # final grid step (per outer tile for per-outer accumulators)
+        # final grid step (per kept tile for kept-prefix accumulators)
         # leaves the fully-combined row in place.
         for oi, out in enumerate(spec.outs):
             if out.acc is not None:
                 aref, a = acc_of[out.acc]
                 wa = acc_w[out.acc]
                 row = pl.load(aref, (pl.dslice(0, 1), pl.dslice(0, wa)))[0]
-                if a.per_outer:
-                    o_refs[oi][(0,) * n_out + (slice(None),)] = row
+                if a.n_kept:
+                    o_refs[oi][(0,) * a.n_kept + (slice(None),)] = row
                 else:
                     o_refs[oi][0, :] = row
 
-    grid = (*outer_sizes, steps_j)
+    grid = (*gsz, steps_j)
     in_specs = []
     out_specs = []
     out_shape = []
@@ -432,23 +536,22 @@ def build_call(spec: StencilSpec, sizes: tuple[int, ...], dtype,
         if double_buffer:
             in_specs.append(pl.BlockSpec(memory_space=pltpu.ANY))
             continue
-        a_out = ispec.n_outer
         in_specs.append(pl.BlockSpec(
-            (1,) * (a_out + 1) + (in_w[ispec.name],),
-            (lambda *ids, _sp=ispec, _a=a_out:
-             tuple(ids[n_out - _a:n_out])
+            (1,) * (ispec.n_outer + 1) + (in_w[ispec.name],),
+            (lambda *ids, _sp=ispec:
+             tuple(_outer_src(_sp, [ids[d] + o_lo[d] for d in range(n_out)]))
              + (_row_pos(_sp, ids[n_out] + spec.x_lo), 0)),
         ))
     for out in spec.outs:
         if out.acc is not None:
             a = next(a for a in spec.accs if a.name == out.acc)
             wa = acc_w[out.acc]
-            if a.per_outer:
+            if a.n_kept:
                 out_specs.append(pl.BlockSpec(
-                    (1,) * n_out + (wa,),
-                    lambda *ids: tuple(ids[:n_out]) + (0,)))
+                    (1,) * a.n_kept + (wa,),
+                    lambda *ids, _k=a.n_kept: tuple(ids[:_k]) + (0,)))
                 out_shape.append(
-                    jax.ShapeDtypeStruct((*outer_sizes, wa), dtype))
+                    jax.ShapeDtypeStruct((*gsz[:a.n_kept], wa), dtype))
             else:
                 out_specs.append(pl.BlockSpec((1, wa), lambda *ids: (0, 0)))
                 out_shape.append(jax.ShapeDtypeStruct((1, wa), dtype))
@@ -457,11 +560,15 @@ def build_call(spec: StencilSpec, sizes: tuple[int, ...], dtype,
                 (1,) * (n_out + 1) + (ni,),
                 lambda *ids: tuple(ids) + (0,)))
             out_shape.append(
-                jax.ShapeDtypeStruct((*outer_sizes, steps_j, ni), dtype))
+                jax.ShapeDtypeStruct((*gsz, steps_j, ni), dtype))
 
     scratch_shapes = [
         pltpu.VMEM((b.stages, _pad_to_lane(ni + (b.i_hi - b.i_lo))), dtype)
         for b in win_bufs
+    ] + [
+        pltpu.VMEM((i.p_stages, in_h[i.name], _pad_to_lane(in_w[i.name])),
+                   dtype)
+        for i in plane_ins
     ] + [
         pltpu.VMEM((1, _pad_to_lane(ni + a.w_off)), dtype)
         for a in spec.accs

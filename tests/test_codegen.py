@@ -39,3 +39,97 @@ def test_fused_matches_unfused(name, scale, rng):
         np.testing.assert_allclose(
             np.asarray(got[key]), np.asarray(want[key]), atol=2e-5, rtol=1e-4
         )
+
+
+def test_kept_acc_consumed_downstream(rng):
+    """A row-kept reduction consumed by a later kernel: the emitted code
+    indexes one accumulator cell per row position (the unfused oracle
+    cannot express this shape — kernel bodies are per-row — so the
+    reference is written by hand)."""
+    from repro.core import Program, axiom, goal, kernel
+
+    rules = [
+        kernel("rs", [("x", "u[j?][i]")], [("acc", "rsum(u[j?])")],
+               fn=lambda acc, x: acc + x, kind="reduce", init=0.0),
+        kernel("nm", [("a", "u?[j?][i?]"), ("s", "rsum(u?[j?])")],
+               [("o", "nm(u?[j?][i?])")], fn=lambda a, s: a / (s + 10.0)),
+    ]
+    prog = Program(
+        rules=rules,
+        axioms=[axiom("u[j?][i?]", j="Nj", i="Ni")],
+        goals=[goal("nm(u[j][i])", store_as="nm",
+                    j=("Nj", 0, 0), i=("Ni", 0, 0))],
+        loop_order=("j", "i"),
+        name="rownorm",
+    )
+    u = rng.standard_normal((6, 9)).astype(np.float32)
+    want = u / (u.sum(axis=1, keepdims=True) + 10.0)
+    gen = compile_program(prog, backend="jax", use_cache=False)
+    got = gen.fn(jnp.asarray(u))["nm"]
+    np.testing.assert_allclose(np.asarray(got), want, atol=2e-4, rtol=1e-4)
+
+
+def test_reduction_goal_also_consumed_downstream(rng):
+    """A reduction result that is BOTH a goal and a downstream input:
+    reads must come from the accumulator storage (there is no 'o'
+    array for reduction-result goals)."""
+    from repro.core import Program, axiom, goal, kernel
+
+    rules = [
+        kernel("rs", [("x", "u[j?][i]")], [("acc", "rsum(u[j?])")],
+               fn=lambda acc, x: acc + x, kind="reduce", init=0.0),
+        kernel("nm", [("a", "u?[j?][i?]"), ("s", "rsum(u?[j?])")],
+               [("o", "nm(u?[j?][i?])")], fn=lambda a, s: a / (s + 10.0)),
+    ]
+    prog = Program(
+        rules=rules,
+        axioms=[axiom("u[j?][i?]", j="Nj", i="Ni")],
+        goals=[goal("nm(u[j][i])", store_as="nm",
+                    j=("Nj", 0, 0), i=("Ni", 0, 0)),
+               goal("rsum(u[j])", store_as="rsum", j=("Nj", 0, 0))],
+        loop_order=("j", "i"),
+        name="rownorm2",
+    )
+    u = rng.standard_normal((6, 9)).astype(np.float32)
+    out = compile_program(prog, backend="auto", use_cache=False).fn(
+        jnp.asarray(u))
+    np.testing.assert_allclose(np.asarray(out["rsum"]), u.sum(1),
+                               atol=2e-4, rtol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(out["nm"]), u / (u.sum(1, keepdims=True) + 10.0),
+        atol=2e-4, rtol=1e-4)
+
+
+def test_kept_acc_widened_above_goal_is_reseated(rng):
+    """A j+1 read of a row-kept reduction widens its extent above the
+    goal: the returned goal array must be trimmed back to [0, Nj) (the
+    seating check must consider the extent's high offset too)."""
+    from repro.core import Program, axiom, goal, kernel
+
+    rules = [
+        kernel("rs", [("x", "u[j?][i]")], [("acc", "rsum(u[j?])")],
+               fn=lambda acc, x: acc + x, kind="reduce", init=0.0),
+        kernel("df", [("a", "u?[j?][i?]"), ("s0", "rsum(u?[j?])"),
+                      ("s1", "rsum(u?[j?+1])")],
+               [("o", "df(u?[j?][i?])")],
+               fn=lambda a, s0, s1: a * (s1 - s0)),
+    ]
+    prog = Program(
+        rules=rules,
+        axioms=[axiom("u[j?][i?]", j=("Nj", 0, 1), i="Ni")],
+        goals=[goal("df(u[j][i])", store_as="df",
+                    j=("Nj", 0, 0), i=("Ni", 0, 0)),
+               goal("rsum(u[j])", store_as="rsum", j=("Nj", 0, 0))],
+        loop_order=("j", "i"),
+        name="rowdiff",
+    )
+    u = rng.standard_normal((7, 9)).astype(np.float32)  # rows [0, Nj+1)
+    out = compile_program(prog, backend="jax", use_cache=False).fn(
+        jnp.asarray(u))
+    rs = u.sum(1)
+    assert out["rsum"].shape == (6,)
+    np.testing.assert_allclose(np.asarray(out["rsum"]), rs[:6],
+                               atol=2e-4, rtol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(out["df"]), u[:6] * (rs[1:7] - rs[:6])[:, None],
+        atol=2e-4, rtol=1e-4)

@@ -168,6 +168,143 @@ def test_direct_reduction_consumer_matches_unfused(rng):
                                atol=2e-5, rtol=1e-4)
 
 
+def test_compile_cache_hits_rebuilt_lambdas():
+    """Structurally identical programs whose kernels are *rebuilt*
+    lambdas (fresh function objects, same code) must share compiled
+    artifacts: the signature keys kernel callables on their code
+    object, not object identity."""
+    from repro.core import clear_compile_cache, compile_program
+    from repro.core.engine import compile_cache_size
+
+    def build():
+        k = kernel("sq2", [("a", "u?[j?][i?]")], [("o", "sq2(u?[j?][i?])")],
+                   fn=lambda a: a * a)
+        return Program(
+            rules=[k],
+            axioms=[axiom("u[j?][i?]", j="Nj", i="Ni")],
+            goals=[goal("sq2(u[j][i])", store_as="sq2",
+                        j=("Nj", 0, 0), i=("Ni", 0, 0))],
+            loop_order=("j", "i"),
+            name="sq2",
+        )
+
+    clear_compile_cache()
+    try:
+        g1 = compile_program(build(), backend="jax")
+        assert compile_program(build(), backend="jax") is g1
+        assert compile_cache_size() == 1
+    finally:
+        clear_compile_cache()
+
+
+def test_compile_cache_distinguishes_closures():
+    """Lambdas sharing a code object but closing over different values
+    behave differently and must NOT share a cache entry."""
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import clear_compile_cache, compile_program
+
+    def build(c):
+        k = kernel("scale_c", [("a", "u?[j?][i?]")],
+                   [("o", "sc(u?[j?][i?])")], fn=lambda a: a * c)
+        return Program(
+            rules=[k],
+            axioms=[axiom("u[j?][i?]", j="Nj", i="Ni")],
+            goals=[goal("sc(u[j][i])", store_as="sc",
+                        j=("Nj", 0, 0), i=("Ni", 0, 0))],
+            loop_order=("j", "i"),
+            name="sc",
+        )
+
+    def build_kw(c):
+        def scale(a, *, f=c):  # keyword-only default, not in __defaults__
+            return a * f
+
+        k = kernel("scale_kw", [("a", "u?[j?][i?]")],
+                   [("o", "sk(u?[j?][i?])")], fn=scale)
+        return Program(
+            rules=[k],
+            axioms=[axiom("u[j?][i?]", j="Nj", i="Ni")],
+            goals=[goal("sk(u[j][i])", store_as="sk",
+                        j=("Nj", 0, 0), i=("Ni", 0, 0))],
+            loop_order=("j", "i"),
+            name="sk",
+        )
+
+    clear_compile_cache()
+    try:
+        u = jnp.ones((3, 4), jnp.float32)
+        o2 = compile_program(build(2.0), backend="jax").fn(u)["sc"]
+        o3 = compile_program(build(3.0), backend="jax").fn(u)["sc"]
+        assert np.asarray(o2)[0, 0] == 2.0 and np.asarray(o3)[0, 0] == 3.0
+        k2 = compile_program(build_kw(2.0), backend="jax").fn(u)["sk"]
+        k3 = compile_program(build_kw(3.0), backend="jax").fn(u)["sk"]
+        assert np.asarray(k2)[0, 0] == 2.0 and np.asarray(k3)[0, 0] == 3.0
+    finally:
+        clear_compile_cache()
+
+
+def test_compile_cache_distinguishes_bound_methods():
+    """Bound methods share module/qualname/code/closure across
+    instances: the receiver must be part of the signature or the cache
+    returns the wrong instance's kernel."""
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import clear_compile_cache, compile_program
+
+    class Scaler:
+        def __init__(self, c):
+            self.c = c
+
+        def apply(self, a):
+            return a * self.c
+
+    def build(scaler):
+        k = kernel("scale_m", [("a", "u?[j?][i?]")],
+                   [("o", "sm(u?[j?][i?])")], fn=scaler.apply)
+        return Program(
+            rules=[k],
+            axioms=[axiom("u[j?][i?]", j="Nj", i="Ni")],
+            goals=[goal("sm(u[j][i])", store_as="sm",
+                        j=("Nj", 0, 0), i=("Ni", 0, 0))],
+            loop_order=("j", "i"),
+            name="sm",
+        )
+
+    clear_compile_cache()
+    try:
+        u = jnp.ones((3, 4), jnp.float32)
+        o2 = compile_program(build(Scaler(2.0)), backend="jax").fn(u)["sm"]
+        o3 = compile_program(build(Scaler(3.0)), backend="jax").fn(u)["sm"]
+        assert np.asarray(o2)[0, 0] == 2.0 and np.asarray(o3)[0, 0] == 3.0
+    finally:
+        clear_compile_cache()
+
+
+def test_explain_matches_compile_program_routing():
+    """explain() routes through the same probe as compile_program —
+    including split-win registration and non-default flags."""
+    from repro.core import (Generated, PallasGenerated, compile_program,
+                            explain, register_pallas_split_win)
+    from repro.core.engine import PALLAS_SPLIT_WINS, clear_compile_cache
+    from repro.core.programs import smooth_norm_program
+
+    prog = smooth_norm_program()
+    clear_compile_cache()
+    try:
+        assert "auto backend: jax" in explain(prog)
+        assert isinstance(compile_program(prog, backend="auto"), Generated)
+        register_pallas_split_win(prog.name)
+        # both the report and the compilation flip together, for every
+        # flag combination
+        assert "auto backend: pallas" in explain(prog, double_buffer=True)
+        gen = compile_program(prog, backend="auto", double_buffer=True)
+        assert isinstance(gen, PallasGenerated)
+    finally:
+        PALLAS_SPLIT_WINS.discard(prog.name)
+        clear_compile_cache()
+
+
 def test_demand_exceeding_availability_raises():
     # goal wants the full range but the kernel needs i+1 halo from an
     # axiom that only covers [0, N)

@@ -5,11 +5,19 @@ unfused oracle in interpret mode:
   pyramid with a rolling buffer carried on a 3-D grid);
 * k-tiled reductions (carried VMEM accumulator across outer tiles) and
   per-outer-tile reductions (output keeps the outer dims);
+* outer-dim stencil halos (``u[k-1][j][i]`` reads) served by multi-plane
+  VMEM windows carried across the outer grid, including on grids with
+  two outer dims and with the non-exact outer extents halos induce;
+* reductions keeping the row dim (``rsum[j]``) and reductions keeping a
+  strict leading subset of the outer dims (``(l, k, j, i) -> out[l]``) —
+  on both backends;
 * cross-row (j-offset) reads of same-nest materialized variables;
 * double-buffered input DMA in the executor hot loop.
 
 Plus regression tests pinning the *remaining* restrictions to the
-improved ``PallasUnsupported`` messages (the table in docs/BACKENDS.md).
+improved ``PallasUnsupported`` messages (the table in docs/BACKENDS.md)
+and the streamed-input DMA origin fix (window shape and grid range must
+come from the same extent frame).
 """
 import jax.numpy as jnp
 import numpy as np
@@ -19,9 +27,11 @@ from repro.core import (Generated, PallasGenerated, PallasUnsupported,
                         Program, axiom, clear_compile_cache, compile_program,
                         goal, kernel, register_pallas_split_win)
 from repro.core.engine import PALLAS_SPLIT_WINS
-from repro.core.programs import (cosmo_program, energy3d_program,
+from repro.core.programs import (advect4d_halo_program, cosmo_program,
+                                 energy3d_program, heat3d_program,
                                  laplace5_program, plane_sum_program,
-                                 pyramid4d_program, smooth_norm_program)
+                                 pyramid4d_program, row_sum_program,
+                                 smooth_norm_program, subset_sum_program)
 from repro.core.unfused import build_unfused
 
 
@@ -43,6 +53,10 @@ LIFTED = [
     (energy3d_program, "energy", (3, 7, 33), "k-tiled carried reduction"),
     (plane_sum_program, "colsum", (4, 6, 20), "per-outer-tile reduction"),
     (smooth_norm_program, "nflux", (9, 30), "cross-row materialized read"),
+    (heat3d_program, "heat", (4, 7, 24), "k-halo plane window"),
+    (advect4d_halo_program, "adv", (2, 4, 6, 20), "plane window, 2 outer dims"),
+    (row_sum_program, "rsum", (7, 21), "row-kept reduction"),
+    (subset_sum_program, "lsum", (3, 4, 5, 16), "subset-outer reduction"),
 ]
 
 
@@ -137,6 +151,186 @@ def test_cross_row_read_gets_rolling_window():
     assert [(b.name, b.stages) for b in gen.specs[0].bufs] == [("b_flux_u", 2)]
 
 
+def test_heat3d_plane_window_spec():
+    """heat3d: the k +/- 1 reads give the streamed input a 3-plane VMEM
+    window with a one-tile plane lead, and the k grid dim gains one
+    warm-up tile (outer_lo = -1) to prime it."""
+    gen = compile_program(heat3d_program(), backend="pallas")
+    spec = gen.spec
+    (ispec,) = spec.inputs
+    assert (ispec.p_stages, ispec.p_lead) == (3, 1) and ispec.plane
+    assert spec.n_outer == 1
+    assert spec.outer_lo == (-1,) and spec.outer_hi_off == (-1,)
+
+
+def test_advect4d_plane_window_on_two_outer_dims():
+    """advect4d_halo: the plane window rides the *last* outer grid dim
+    (k) while l stays an exact leading grid dim."""
+    gen = compile_program(advect4d_halo_program(), backend="pallas")
+    spec = gen.spec
+    (ispec,) = spec.inputs
+    assert spec.n_outer == 2
+    assert (ispec.p_stages, ispec.p_lead) == (3, 1)
+    assert spec.outer_lo == (0, -1) and spec.outer_hi_off == (0, -1)
+
+
+def test_subset_outer_reduction_spec():
+    """subset_sum: the accumulator keeps the leading-prefix outer dim l
+    (n_kept=1 of a 2-outer grid) and re-initializes per l tile."""
+    gen = compile_program(subset_sum_program(), backend="pallas")
+    (acc,) = gen.spec.accs
+    assert gen.spec.n_outer == 2
+    assert acc.n_kept == 1 and acc.per_outer
+
+
+def test_row_kept_reduction_spec():
+    """row_sum: no carried accumulator at all — each grid step emits one
+    identity-padded partial row, lane-reduced on the host."""
+    gen = compile_program(row_sum_program(), backend="pallas")
+    assert not gen.spec.accs
+    (out,) = gen.spec.outs
+    assert out.acc is None and out.fill == 0.0
+    (bind,) = gen.nest_execs[0].out_binds
+    assert bind.kind == "acc_rows" and bind.reduce_fn is not None
+
+
+REDUCTION_SHAPES = [
+    (plane_sum_program, "colsum", (4, 6, 20)),
+    (row_sum_program, "rsum", (7, 21)),
+    (subset_sum_program, "lsum", (3, 4, 5, 16)),
+]
+
+
+@pytest.mark.parametrize("build,out,shape", REDUCTION_SHAPES,
+                         ids=[c[0].__name__ for c in REDUCTION_SHAPES])
+def test_kept_dim_reductions_on_jax_backend(rng, build, out, shape):
+    """The JAX emitter now covers every kept-dim reduction shape (no
+    more 'neither backend' rows): per-cell accumulator arrays, masked
+    in-place combines, lane-reduced returns."""
+    prog = build()
+    gen = compile_program(prog, backend="jax")
+    assert isinstance(gen, Generated)
+    u = _u(rng, shape)
+    got = gen.fn(u)[out]
+    want = build_unfused(prog).fn(u=u)[out]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-4, rtol=1e-4)
+
+
+def test_row_kept_reduction_with_outer_dims(rng):
+    """A (k, j)-keeping i-reduction on a 3-D grid: acc_rows output with
+    outer trimming, in both streaming modes and on the JAX backend."""
+    k_sum = kernel("psum", [("x", "u[k?][j?][i]")],
+                   [("acc", "psum(u[k?][j?])")],
+                   fn=lambda acc, x: acc + x, kind="reduce", init=0.0)
+    prog = Program(
+        rules=[k_sum],
+        axioms=[axiom("u[k?][j?][i?]", k="Nk", j="Nj", i="Ni")],
+        goals=[goal("psum(u[k][j])", store_as="psum",
+                    k=("Nk", 0, 0), j=("Nj", 0, 0))],
+        loop_order=("k", "j", "i"),
+        name="psum_rows",
+    )
+    u = _u(rng, (3, 6, 17))
+    want = build_unfused(prog).fn(u=u)["psum"]
+    for dbuf in (False, True):
+        gen = compile_program(prog, backend="pallas", double_buffer=dbuf)
+        got = gen.fn(u=u)["psum"]
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-4, rtol=1e-4)
+    got_j = compile_program(prog, backend="jax").fn(u)["psum"]
+    np.testing.assert_allclose(np.asarray(got_j), np.asarray(want),
+                               atol=2e-4, rtol=1e-4)
+
+
+def _cross_call_halo_program():
+    """A materialized intermediate consumed at k +/- 1 in a *later*
+    nest: the cross-call streamed input gets the plane window (its
+    origins come from the variable extent, not axiom extents)."""
+    rules = [
+        kernel("fx", [("a", "u?[k?][j?][i?]"), ("b", "u?[k?][j?][i?+1]")],
+               [("f", "fx(u?[k?][j?][i?])")], fn=lambda a, b: b - a),
+        kernel("nrm", [("x", "fx(u[k][j][i])")], [("acc", "n2(u)")],
+               fn=lambda acc, x: acc + x * x, kind="reduce", init=0.0),
+        kernel("inv", [("n", "n2(u?)")], [("r", "inv(u?)")],
+               fn=lambda n: 1.0 / jnp.sqrt(n + 1e-30)),
+        kernel("sm", [("m", "fx(u?[k?-1][j?][i?])"),
+                      ("p", "fx(u?[k?+1][j?][i?])"),
+                      ("c", "fx(u?[k?][j?][i?])"), ("s", "inv(u?)")],
+               [("o", "sm(u?[k?][j?][i?])")],
+               fn=lambda m, p, c, s: (m + p + c) * s),
+    ]
+    return Program(
+        rules=rules,
+        axioms=[axiom("u[k?][j?][i?]", k="Nk", j="Nj", i="Ni")],
+        goals=[goal("sm(u[k][j][i])", store_as="sm",
+                    k=("Nk", 1, -1), j=("Nj", 0, 0), i=("Ni", 0, -1))],
+        loop_order=("k", "j", "i"),
+        name="cross_call_halo",
+    )
+
+
+@pytest.mark.parametrize("double_buffer", [False, True],
+                         ids=["blockspec", "double_buffer"])
+def test_cross_call_materialized_plane_window(rng, double_buffer):
+    """Plane windows also serve cross-call *materialized* inputs: fx is
+    produced by nest 0 (which the reduction splits off), then streamed
+    into nest 1 with a 3-plane window and one k warm-up tile."""
+    prog = _cross_call_halo_program()
+    gen = compile_program(prog, backend="pallas", double_buffer=double_buffer)
+    assert len(gen.specs) == 2
+    (fx_in,) = [i for i in gen.specs[1].inputs if not i.scalar]
+    assert fx_in.name == "fx_u" and (fx_in.p_stages, fx_in.p_lead) == (3, 1)
+    assert gen.specs[1].outer_lo == (-1,)
+    u = _u(rng, (5, 6, 16))
+    got = gen.fn(u=u)["sm"]
+    want = build_unfused(prog).fn(u=u)["sm"]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-4, rtol=1e-4)
+
+
+def _narrowed_axiom_program():
+    """The DMA-origin regression shape: the axiom's row extent is
+    *narrowed* (array rows cover [1, Nj-1) of the iteration space), and
+    a j+1 read forces a streaming lead — the fetched window and the grid
+    range must agree on the array's origin frame."""
+    k = kernel(
+        "ridge",
+        inputs=[("a", "u?[j?][i?]"), ("b", "u?[j?+1][i?]")],
+        outputs=[("o", "ridge(u?[j?][i?])")],
+        fn=lambda a, b: b - 2.0 * a,
+    )
+    return Program(
+        rules=[k],
+        axioms=[axiom("u[j?][i?]", j=("Nj", 1, -1), i="Ni")],
+        goals=[goal("ridge(u[j][i])", store_as="ridge",
+                    j=("Nj", 1, -2), i=("Ni", 0, 0))],
+        loop_order=("j", "i"),
+        name="ridge",
+    )
+
+
+@pytest.mark.parametrize("double_buffer", [False, True],
+                         ids=["blockspec", "double_buffer"])
+def test_narrowed_axiom_stream_origin(rng, double_buffer):
+    """Regression: ``add_input`` used to size the fetched window from
+    the axiom extents but the grid range from the variable extent —
+    a narrowed axiom row extent misaligned the stream.  Both now come
+    from the same frame."""
+    prog = _narrowed_axiom_program()
+    gen = compile_program(prog, backend="pallas", double_buffer=double_buffer)
+    (ispec,) = gen.spec.inputs
+    assert (ispec.j_lo, ispec.j_hi) == (1, -1)
+    # grid start = array origin minus the streaming lead: rows stream
+    # from the first array row, not from before it
+    assert gen.spec.x_lo == ispec.j_lo - ispec.lead
+    u = _u(rng, (9, 16))  # Nj=11 positions, rows cover [1, 10)
+    got = gen.fn(u=u)["ridge"]
+    want = build_unfused(prog).fn(u=u)["ridge"]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=1e-4)
+
+
 def test_auto_routes_single_nest_reduction_to_pallas(rng):
     """The auto routing table shrank: single-nest reductions now go to
     the stencil executor."""
@@ -186,41 +380,135 @@ def test_loop_order_too_short_message():
         compile_program(prog, backend="pallas")
 
 
-def test_outer_dim_dependence_message():
-    """k-offset stencils (outer-dim dependence) stay unsupported: the
-    narrowed outer extent is rejected naming the group, dim and range."""
+def test_offset_beyond_plane_dim_message():
+    """Stencil offsets in an outer dim *other than* the plane dim stay
+    unsupported: only the outer identifier adjacent to the row dim gets
+    a plane window."""
     k = kernel(
-        "kshift",
-        [("a", "u?[k?-1][j?][i?]"), ("c", "u?[k?][j?][i?]")],
-        [("o", "v(u?[k?][j?][i?])")],
+        "lshift",
+        [("a", "u?[l?-1][k?][j?][i?]"), ("c", "u?[l?][k?][j?][i?]")],
+        [("o", "v(u?[l?][k?][j?][i?])")],
         fn=lambda a, c: c - a,
     )
     prog = Program(
         rules=[k],
-        axioms=[axiom("u[k?][j?][i?]", k="Nk", j="Nj", i="Ni")],
-        goals=[goal("v(u[k][j][i])", store_as="v",
-                    k=("Nk", 1, 0), j=("Nj", 0, 0), i=("Ni", 0, 0))],
-        loop_order=("k", "j", "i"),
+        axioms=[axiom("u[l?][k?][j?][i?]", l="Nl", k="Nk", j="Nj", i="Ni")],
+        goals=[goal("v(u[l][k][j][i])", store_as="v",
+                    l=("Nl", 1, 0), k=("Nk", 0, 0), j=("Nj", 0, 0),
+                    i=("Ni", 0, 0))],
+        loop_order=("l", "k", "j", "i"),
     )
     with pytest.raises(PallasUnsupported,
-                       match=r"in outer dim 'k'.*cover \[0, Nk\) exactly"):
+                       match=r"outer dim 'l'.*innermost three dims"):
         compile_program(prog, backend="pallas")
     # auto degrades gracefully to the JAX backend
     assert isinstance(compile_program(prog, backend="auto"), Generated)
 
 
-def test_reduction_keeping_row_dim_message():
-    """A reduction keeping the row dim (row sums) stays unsupported."""
-    k_sum = kernel("rowsum", [("x", "u[j?][i]")], [("acc", "rsum(u[j?])")],
+def test_same_nest_plane_offset_message(rng):
+    """Only *streamed* inputs get plane windows: a variable produced in
+    the same nest cannot be read at a k offset (the producer would have
+    to run a whole plane ahead)."""
+    k_a = kernel("stage", [("a", "u?[k?][j?][i?]")],
+                 [("o", "st(u?[k?][j?][i?])")], fn=lambda a: 2.0 * a)
+    k_b = kernel("diff", [("m", "st(u?[k?-1][j?][i?])"),
+                          ("c", "st(u?[k?][j?][i?])")],
+                 [("o", "d(u?[k?][j?][i?])")], fn=lambda m, c: c - m)
+    prog = Program(
+        rules=[k_a, k_b],
+        axioms=[axiom("u[k?][j?][i?]", k="Nk", j="Nj", i="Ni")],
+        goals=[goal("d(u[k][j][i])", store_as="d",
+                    k=("Nk", 1, 0), j=("Nj", 0, 0), i=("Ni", 0, 0))],
+        loop_order=("k", "j", "i"),
+        name="same_nest_koff",
+    )
+    with pytest.raises(PallasUnsupported,
+                       match=r"plane dim 'k'.*produced in the same nest"):
+        compile_program(prog, backend="pallas")
+    # auto degrades gracefully AND the JAX compilation is correct
+    gen = compile_program(prog, backend="auto")
+    assert isinstance(gen, Generated)
+    u = _u(rng, (4, 5, 12))
+    got = gen.fn(u)["d"]
+    want = build_unfused(prog).fn(u=u)["d"]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_row_kept_reduction_reducing_outer_dim_message(rng):
+    """A row-kept reduction that also folds an outer dim would need a
+    per-row accumulator carried across tiles — unsupported on the
+    executor, covered by the JAX backend."""
+    k_sum = kernel("colsum", [("x", "u[k][j?][i]")],
+                   [("acc", "rsum(u[j?])")],
                    fn=lambda acc, x: acc + x, kind="reduce", init=0.0)
     prog = Program(
         rules=[k_sum],
-        axioms=[axiom("u[j?][i?]", j="Nj", i="Ni")],
+        axioms=[axiom("u[k?][j?][i?]", k="Nk", j="Nj", i="Ni")],
         goals=[goal("rsum(u[j])", store_as="rsum", j=("Nj", 0, 0))],
-        loop_order=("j", "i"),
+        loop_order=("k", "j", "i"),
+        name="rowsum_over_k",
     )
-    with pytest.raises(PallasUnsupported, match=r"keeps the row dim 'j'"):
+    with pytest.raises(PallasUnsupported,
+                       match=r"keeps the row dim 'j' while reducing"):
         compile_program(prog, backend="pallas")
+    gen = compile_program(prog, backend="auto")
+    assert isinstance(gen, Generated)
+    u = _u(rng, (3, 6, 14))
+    got = gen.fn(u)["rsum"]
+    want = build_unfused(prog).fn(u=u)["rsum"]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-4, rtol=1e-4)
+
+
+def test_row_kept_reduction_negative_row_origin_message(rng):
+    """A row-kept reduction whose reduced i extent starts below 0 cannot
+    seat its partial row in the Ni-wide output: the spec extraction must
+    raise (so auto degrades to JAX) instead of crashing at call time."""
+    k_sum = kernel("nsum", [("x", "u[j?][i]")], [("acc", "nsum(u[j?])")],
+                   fn=lambda acc, x: acc + x, kind="reduce", init=0.0)
+    prog = Program(
+        rules=[k_sum],
+        axioms=[axiom("u[j?][i?]", j="Nj", i=("Ni", -1, 0))],
+        goals=[goal("nsum(u[j])", store_as="nsum", j=("Nj", 0, 0))],
+        loop_order=("j", "i"),
+        name="nsum_neg",
+    )
+    with pytest.raises(PallasUnsupported,
+                       match=r"partial-accumulator row .* outside"):
+        compile_program(prog, backend="pallas")
+    gen = compile_program(prog, backend="auto")
+    assert isinstance(gen, Generated)
+    u = _u(rng, (5, 12))  # rows cover i in [-1, 11)
+    got = gen.fn(u)["nsum"]
+    want = np.asarray(u).sum(axis=1)
+    np.testing.assert_allclose(np.asarray(got), want, atol=2e-4, rtol=1e-4)
+
+
+def test_non_prefix_kept_outer_subset_message(rng):
+    """A reduction keeping a non-*prefix* subset of outer dims (out[k]
+    on an (l, k) grid) would interleave accumulator lifetimes across
+    tiles — unsupported on the executor, covered by the JAX backend."""
+    k_sum = kernel("ksum", [("x", "u[l][k?][j][i]")],
+                   [("acc", "ksum(u[k?])")],
+                   fn=lambda acc, x: acc + x, kind="reduce", init=0.0)
+    prog = Program(
+        rules=[k_sum],
+        axioms=[axiom("u[l?][k?][j?][i?]", l="Nl", k="Nk", j="Nj", i="Ni")],
+        goals=[goal("ksum(u[k])", store_as="ksum", k=("Nk", 0, 0))],
+        loop_order=("l", "k", "j", "i"),
+        name="ksum_nonprefix",
+    )
+    with pytest.raises(PallasUnsupported,
+                       match=r"keeps outer dims \('k',\).*leading prefix"):
+        compile_program(prog, backend="pallas")
+    gen = compile_program(prog, backend="auto")
+    assert isinstance(gen, Generated)
+    u = _u(rng, (2, 3, 4, 10))
+    got = gen.fn(u)["ksum"]
+    want = build_unfused(prog).fn(u=u)["ksum"]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-4, rtol=1e-4)
 
 
 def test_row_variable_crossing_split_message():
