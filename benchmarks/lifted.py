@@ -17,6 +17,11 @@ program as its in-row baseline:
   served from a 3-plane VMEM window carried across the k grid);
 * ``heat3d_dbuf`` — the same plane window fed by the double-buffered
   DMA pipeline;
+* ``heat3d_stage`` — a *producer plane window*: the same-nest
+  pre-smooth stage runs one tile ahead, its planes resident in VMEM,
+  never materialized to HBM;
+* ``heat3d_residual_norm`` — a halo'd reduction: plane-window input
+  plus a carried accumulator fused in one nest;
 * ``row_sum``    — row-kept reduction (per-step partial-accumulator
   rows, lane-reduced on the host);
 * ``subset_sum`` — reduction keeping a leading subset of outer dims
@@ -27,8 +32,19 @@ unrolls at trace time); pass ``interpret=False`` on a TPU runtime for
 real timings, and feed measured split-schedule wins back into
 ``repro.core.engine.register_pallas_split_win`` so ``backend="auto"``
 routes them to the stencil executor.
+
+Run directly for the machine-readable trajectory record::
+
+    PYTHONPATH=src python -m benchmarks.lifted --json
+
+(`scripts/bench.sh` wraps this and writes ``BENCH_<pr>.json`` so every
+PR leaves a perf baseline the next one can regress against.)
 """
 from __future__ import annotations
+
+import argparse
+import json
+import sys
 
 import jax
 import numpy as np
@@ -36,7 +52,9 @@ import numpy as np
 from repro.core import compile_program
 from repro.core.codegen_jax import CodegenError
 from repro.core.programs import (cosmo_program, energy3d_program,
-                                 heat3d_program, plane_sum_program,
+                                 heat3d_program,
+                                 heat3d_residual_norm_program,
+                                 heat3d_stage_program, plane_sum_program,
                                  pyramid4d_program, row_sum_program,
                                  smooth_norm_program, subset_sum_program)
 from repro.core.unfused import build_unfused
@@ -52,6 +70,9 @@ CASES = [
     ("cosmo_dbuf", cosmo_program, "unew", (4, 48, 256), True),
     ("heat3d", heat3d_program, "heat", (6, 32, 256), False),
     ("heat3d_dbuf", heat3d_program, "heat", (6, 32, 256), True),
+    ("heat3d_stage", heat3d_stage_program, "heat", (6, 32, 256), False),
+    ("heat3d_residual_norm", heat3d_residual_norm_program, "rnorm",
+     (6, 32, 256), False),
     ("row_sum", row_sum_program, "rsum", (96, 256), False),
     ("subset_sum", subset_sum_program, "lsum", (3, 4, 24, 256), False),
 ]
@@ -70,13 +91,15 @@ def run(interpret: bool = True):
         t_p, got = time_fn(pallas_fn, u)
         assert np.allclose(np.asarray(got), np.asarray(ref),
                            atol=1e-4, rtol=1e-4), name
+        jax_us = None
         try:
             gen_j = compile_program(prog, backend="jax")
             jax_fn = jax.jit(lambda u, _g=gen_j: _g.fn(u)[out])
             t_j, got_j = time_fn(jax_fn, u)
             assert np.allclose(np.asarray(got_j), np.asarray(ref),
                                atol=1e-4, rtol=1e-4), name
-            base = f"jax_us={t_j * 1e6:.0f};"
+            jax_us = t_j * 1e6
+            base = f"jax_us={jax_us:.0f};"
         except CodegenError:
             base = "jax_us=n/a;"  # defensive: both backends cover every leg
         cells = int(np.prod(shape))
@@ -88,5 +111,38 @@ def run(interpret: bool = True):
                 f"double_buffer={dbuf};{base}"
                 f"Mcells_s={cells / t_p / 1e6:.0f}"
             ),
+            # structured fields for the --json trajectory record
+            "backend": "pallas",
+            "interpret": interpret,
+            "double_buffer": dbuf,
+            "jax_us_per_call": jax_us,
+            "mcells_per_s": cells / t_p / 1e6,
         })
     return rows
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="Time one leg per lifted Pallas restriction.")
+    ap.add_argument("--json", action="store_true",
+                    help="emit a machine-readable record (per-leg wall "
+                         "time + backend) instead of the CSV rows")
+    ap.add_argument("--no-interpret", action="store_true",
+                    help="run with interpret=False (TPU runtimes only)")
+    args = ap.parse_args(argv)
+    rows = run(interpret=not args.no_interpret)
+    if args.json:
+        legs = [{k: r[k] for k in ("name", "us_per_call", "backend",
+                                   "interpret", "double_buffer",
+                                   "jax_us_per_call", "mcells_per_s")}
+                for r in rows]
+        json.dump({"suite": "lifted", "legs": legs}, sys.stdout, indent=1)
+        sys.stdout.write("\n")
+        return
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -14,12 +14,36 @@ from repro.core.programs import laplace5_program
 from repro.core.unfused import build_unfused
 
 
+def plan_dump(prog):
+    """The rendered KernelPlan ``backend="auto"`` would hand the Pallas
+    interpreter — `explain(prog, verbose=True)` appends it after the
+    schedule and storage plan.  Doctested so the plan rendering (grid
+    ranges, streaming windows, per-step reads at their leads, output
+    trim rules) cannot silently rot:
+
+    >>> from repro.core.programs import laplace5_program
+    >>> print(plan_dump(laplace5_program()))
+    kernel plan: laplace5
+      loop order: (j, i)
+      call laplace5_n0: grid j=[-1, Nj-1)
+        input cell: rows[0,+0] cols[0,+0] lead=1 stages=3
+        step laplace5 @lead 0: reads [in_cell[j-1], in_cell[j+0], \
+in_cell[j+1], in_cell[j+0], in_cell[j+0]] -> out:0
+        out laplace_cell: external lead=0 rows[1,-1]
+      goals: lap<-laplace_cell
+    """
+    report = explain(prog, verbose=True)
+    return report.split("--- kernel plan ---\n", 1)[1]
+
+
 def main():
     prog = laplace5_program()
 
-    # `explain` also reports which backend `backend="auto"` would pick.
+    # `explain` also reports which backend `backend="auto"` would pick;
+    # verbose=True appends the declarative KernelPlan the stencil
+    # interpreter will execute (see plan_dump above).
     print("=== transformation report (paper's debugging output) ===")
-    print(explain(prog))
+    print(explain(prog, verbose=True))
 
     # backend="jax": emit fused, vectorized JAX source (inspectable).
     gen = compile_program(prog, backend="jax")

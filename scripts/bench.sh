@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# Benchmark trajectory recorder: run the lifted-restriction suite and
+# write BENCH_<pr>.json (per-leg wall time + backend) at the repo root,
+# so every PR leaves a perf baseline the next one can regress against.
+#
+#   scripts/bench.sh [pr-number]
+#
+# Without an argument the PR number is inferred as one past the number
+# of PR entries already recorded in CHANGES.md (i.e. "this PR").
+# Off-TPU the legs run in interpret mode on bounded sizes; on a TPU
+# runtime export BENCH_NO_INTERPRET=1 for real timings.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+PR="${1:-$(($(grep -c '^- PR' CHANGES.md) + 1))}"
+FLAGS=(--json)
+if [[ "${BENCH_NO_INTERPRET:-0}" == "1" ]]; then
+    FLAGS+=(--no-interpret)
+fi
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m benchmarks.lifted "${FLAGS[@]}" > "BENCH_${PR}.json"
+echo "wrote BENCH_${PR}.json"

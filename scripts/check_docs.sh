@@ -9,10 +9,14 @@
 #   2. every ```python code block in docs/*.md must still parse, and
 #      its import statements must still resolve — so the docs cannot
 #      silently rot as modules move.
-#   3. every `raise PallasUnsupported` site in codegen_pallas.py must
-#      carry a `# doc-row: <key>` marker whose key appears in the
-#      docs/BACKENDS.md restriction table — the live table cannot drift
-#      from the executor's actual raise sites.
+#   3. every `raise PallasUnsupported` site in plan.py (the validate
+#      pass that owns them all) — and any stray site reintroduced into
+#      codegen_pallas.py — must carry a `# doc-row: <key>` marker whose
+#      key appears in the docs/BACKENDS.md restriction table — the live
+#      table cannot drift from the actual raise sites;
+#   4. every public (non-underscore) module-level dataclass and
+#      function in repro.core.plan must carry a docstring — the
+#      KernelPlan IR is the planner/interpreter contract.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -69,10 +73,6 @@ for doc in sorted(pathlib.Path("docs").glob("*.md")):
                     f"{doc}:{lineno + imp.lineno - 1}: {src!r} failed: {e}")
 
 # ---- 3. PallasUnsupported raise sites must map to BACKENDS.md rows --------
-cp_path = pathlib.Path("src/repro/core/codegen_pallas.py")
-cp_src = cp_path.read_text()
-cp_lines = cp_src.splitlines()
-
 backends = pathlib.Path("docs/BACKENDS.md").read_text()
 start = backends.find("## Remaining `PallasUnsupported` cases")
 end = backends.find("Formerly restricted", start)
@@ -98,24 +98,49 @@ class _Raises(ast.NodeVisitor):
         self.generic_visit(node)
 
 
-viz = _Raises()
-viz.visit(ast.parse(cp_src))
-for lineno in viz.sites:
-    key = None
-    # the marker sits on the raise line or the line directly above it
-    for cand in (cp_lines[lineno - 1], cp_lines[lineno - 2]):
-        if "# doc-row:" in cand:
-            key = cand.split("# doc-row:", 1)[1].strip()
-            break
-    if key is None:
-        failures.append(
-            f"{cp_path}:{lineno}: raise PallasUnsupported site lacks a "
-            f"'# doc-row: <key>' marker tying it to the docs/BACKENDS.md "
-            f"restriction table")
-    elif key.lower() not in table:
-        failures.append(
-            f"{cp_path}:{lineno}: doc-row key {key!r} has no matching row "
-            f"in the docs/BACKENDS.md restriction table")
+for mod in ("src/repro/core/plan.py", "src/repro/core/codegen_pallas.py"):
+    mod_path = pathlib.Path(mod)
+    mod_src = mod_path.read_text()
+    mod_lines = mod_src.splitlines()
+    viz = _Raises()
+    viz.visit(ast.parse(mod_src))
+    for lineno in viz.sites:
+        key = None
+        # the marker sits on the raise line or the line directly above it
+        for cand in (mod_lines[lineno - 1], mod_lines[lineno - 2]):
+            if "# doc-row:" in cand:
+                key = cand.split("# doc-row:", 1)[1].strip()
+                break
+        if key is None:
+            failures.append(
+                f"{mod_path}:{lineno}: raise PallasUnsupported site lacks a "
+                f"'# doc-row: <key>' marker tying it to the docs/BACKENDS.md "
+                f"restriction table")
+        elif key.lower() not in table:
+            failures.append(
+                f"{mod_path}:{lineno}: doc-row key {key!r} has no matching "
+                f"row in the docs/BACKENDS.md restriction table")
+
+# ---- 4. public plan.py dataclasses/functions need docstrings --------------
+plan_path = pathlib.Path("src/repro/core/plan.py")
+plan_tree = ast.parse(plan_path.read_text())
+for node in plan_tree.body:
+    if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+        continue
+    if node.name.startswith("_"):
+        continue
+    if ast.get_docstring(node) is None:
+        failures.append(f"{plan_path}:{node.lineno}: public plan-IR symbol "
+                        f"{node.name!r} lacks a docstring")
+    if isinstance(node, ast.ClassDef):
+        for sub in node.body:
+            if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and not sub.name.startswith("_") \
+                    and ast.get_docstring(sub) is None:
+                failures.append(
+                    f"{plan_path}:{sub.lineno}: public plan-IR method "
+                    f"{node.name}.{sub.name} lacks a docstring")
 
 if failures:
     print("check_docs: FAIL")
@@ -123,5 +148,5 @@ if failures:
         print("  " + f)
     sys.exit(1)
 print("check_docs: OK (engine docstrings + docs/*.md code blocks + "
-      "PallasUnsupported restriction table)")
+      "PallasUnsupported restriction table + plan-IR docstrings)")
 PY

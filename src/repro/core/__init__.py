@@ -1,20 +1,24 @@
 """HFAV core: the paper's fusion/vectorization engine as a JAX module."""
 from .codegen_jax import Generated
-from .codegen_pallas import PallasGenerated, PallasUnsupported
+from .codegen_pallas import PallasGenerated, generate_pallas, plan_pallas
 from .engine import (BACKENDS, clear_compile_cache, compile_cache_size,
                      compile_program, explain, pallas_auto_viable,
-                     program_signature, register_pallas_split_win)
+                     plan_cache_size, program_signature,
+                     register_pallas_split_win)
 from .fusion import FusedSchedule, Unfusable, fuse_inest_dag
 from .infer import IDAG, InferenceError, infer
 from .dataflow import build_dataflow
+from .plan import CallPlan, KernelPlan, PallasUnsupported, fn_key
 from .reuse import analyze_storage, reuse_graph, reuse_order
 from .rules import Extent, KernelRule, Program, axiom, goal, kernel
 from .terms import Term, parse_term, unify_term
 
 __all__ = [
-    "BACKENDS", "Generated", "PallasGenerated", "PallasUnsupported",
-    "clear_compile_cache", "compile_cache_size", "compile_program",
-    "pallas_auto_viable", "program_signature", "register_pallas_split_win",
+    "BACKENDS", "CallPlan", "Generated", "KernelPlan", "PallasGenerated",
+    "PallasUnsupported", "clear_compile_cache", "compile_cache_size",
+    "compile_program", "fn_key", "generate_pallas",
+    "pallas_auto_viable", "plan_cache_size", "plan_pallas",
+    "program_signature", "register_pallas_split_win",
     "explain", "FusedSchedule", "Unfusable",
     "fuse_inest_dag", "IDAG", "InferenceError", "infer", "build_dataflow",
     "analyze_storage", "reuse_graph", "reuse_order", "Extent", "KernelRule",

@@ -1,133 +1,84 @@
-"""Pallas backend: map an HFAV storage plan onto the TPU stencil executor.
+"""Pallas backend **planner**: lower an HFAV storage plan to the
+declarative :class:`~repro.core.plan.KernelPlan` IR.
 
-A fused schedule is executed as a *sequence of stencil calls*, one per
-top-level iteration nest, glued together on the host:
+This module is the analysis half of the Pallas backend.  It decides —
+but does not execute — how a fused schedule maps onto the TPU stencil
+interpreter (:mod:`repro.kernels.stencil2d.kernel`):
 
-* every nest whose groups iterate the row/vector ``(j, i)`` plane
-  becomes one ``pallas_call`` built by
-  :func:`repro.kernels.stencil2d.kernel.build_call`; the nest's outer
+* every top-level nest whose groups iterate the row/vector ``(j, i)``
+  plane becomes one :class:`~repro.core.plan.CallPlan`; the nest's outer
   loop identifiers — any number of them — are flattened one-to-one onto
-  leading Pallas grid dimensions by :func:`_extract_nest` (the grid
-  mapper), so ``(j, i)`` runs on a 1-D grid, ``(k, j, i)`` on ``(k, j)``,
-  ``(l, k, j, i)`` on ``(l, k, j)``, and so on; outer grid dims may
-  cover narrowed canonical ranges (halo'd goals) and carry warm-up
-  tiles for plane windows;
+  leading grid dims, each covering the union of canonical ranges its
+  groups and plane windows need (halo-narrowed goals/axioms, warm-up
+  tiles, and producer leads included);
 * streamed inputs read at non-zero offsets in the *plane dim* (the
   outer loop identifier adjacent to the row dim — ``u[k-1][j][i]``
-  reads) get a multi-plane VMEM window carried across the outer grid:
-  whole planes stay resident for ``p_stages`` tiles, rotated by the
-  same consumer-position-spread rule that sizes row windows
-  (:func:`repro.core.reuse.dim_window`), with the newest plane streamed
-  one row per grid step ``p_lead`` tiles ahead;
-* reductions (``acc``-kind variables) become VMEM accumulator rows
-  combined per grid step and lane-reduced on the host (the
-  vectorized-reduction triple of Section 3.5).  On outer grids the
-  accumulator is either *carried* across every outer tile (a k-tiled
-  global reduction — one running row for the whole grid) or
-  re-initialized per tile of the *kept prefix* of outer dims (a
-  reduction whose output keeps all outer dims, or a leading subset of
-  them, e.g. ``(l, k, j, i) -> out[l]``); reductions keeping the row
-  dim (``rsum[j]``, reduced dims = the vector dim only) emit one
-  partial-accumulator row per grid step, lane-reduced on the host;
-* 0-dim kernels (a reduction's finalize, broadcast factors) run on the
-  host between calls, in the prologue/epilogue slots the fusion pass
-  assigned them;
+  reads) get a multi-plane VMEM window plan, sized by the same
+  consumer-position-spread rule that sizes row windows
+  (:func:`repro.core.reuse.dim_window`);
+* variables *produced in the nest* and read back at plane offsets get a
+  **producer plane window** (:class:`~repro.core.plan.WindowPlan` in
+  plane mode): the producing group runs ``p_lead`` tiles ahead of the
+  outer grid (its software-pipeline lead in the plane dim, from
+  :func:`repro.core.reuse.produced_window`) and keeps ``p_stages`` whole
+  planes resident, so same-nest ``v[k-1][j][i]`` consumers — including
+  fused reductions — need no HBM round-trip; cross-row (j-offset) reads
+  of produced variables keep their rolling-window plans;
+* reductions (``acc``-kind variables) become accumulator plans combined
+  per grid step and lane-reduced on the host (the vectorized-reduction
+  triple of Section 3.5) — carried across the grid, re-initialized per
+  kept-prefix tile (:attr:`~repro.core.plan.AccPlan.n_kept`), or
+  row-kept (one identity-padded partial row per step);
+* 0-dim kernels (a reduction's finalize, broadcast factors) become host
+  step plans in the prologue/epilogue slots the fusion pass assigned;
 * ``full``-kind variables crossing a split are materialized between
   calls and re-streamed as inputs of the consuming nest, with their
-  halo-trimmed origins tracked in :class:`InSpec`; when such a variable
-  is *also* consumed inside its producing nest at a row offset
-  (a cross-row read), the producer additionally writes a rolling VMEM
-  window sized by the consumer-position spread so in-nest readers see
-  earlier rows without a round-trip through HBM;
-* multiple terminal outputs map to multi-ref out specs.
+  halo-trimmed origins tracked in the input plan; ``full`` variables
+  consumed only inside their producing nest skip materialization
+  entirely (their windows suffice);
+* multiple terminal outputs map to multiple output plans.
 
-Remaining restrictions (checked here with messages naming the offending
-variable/dimension; the pure-JAX backend covers every one of them):
-loop orders with fewer than two identifiers; stencil offsets in outer
-dims other than the plane dim; outer-dim offset reads of variables
-produced in the same nest (only *streamed* inputs get plane windows);
-contraction (rolling buffers) over a dim other than the row dim;
-reductions keeping the row dim while also reducing an outer dim;
-reductions keeping a non-prefix subset of the outer dims; streamed
-inputs whose dims are not a suffix of the loop order (or 1-D row
-variables crossing a stencil-call boundary); cross-call reads of vector
-accumulators; negative innermost origins on materialized/terminal
-outputs.  `docs/BACKENDS.md` keeps the user-facing table of these cases
-(each ``raise`` site below is tied to its table row by a ``doc-row``
-marker checked by ``scripts/check_docs.sh``).
+Every restriction check is delegated to the ``require_*`` validate pass
+in :mod:`repro.core.plan`, which owns all ``PallasUnsupported`` raise
+sites (the live table is docs/BACKENDS.md); the finished plan is
+re-checked by :meth:`KernelPlan.validate` before it leaves this module.
+
+:func:`generate_pallas` composes the planner with the interpreter for
+the engine's dispatch layer; :func:`plan_pallas` is the pure
+program-to-plan entry point used by tests and ``explain(verbose=True)``.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Optional
+from typing import Callable
 
 import jax.numpy as jnp
 
-from ..kernels.stencil2d.kernel import (AccSpec, BufSpec, InSpec, OutSpec,
-                                        ReadSpec, StencilSpec, StepSpec,
-                                        build_call)
 from .dataflow import Group, build_dataflow
 from .fusion import fuse_inest_dag
 from .infer import IDAG, infer
 from .inest import walk_bodies
+from .plan import (AccPlan, AxiomPlan, CallPlan, GridDim, HostStepPlan,
+                   InputPlan, KernelPlan, OutputPlan, PallasUnsupported,
+                   ReadPlan, StepPlan, WindowPlan, require_full_outer_iteration,
+                   require_host_group_0dim, require_host_orderable,
+                   require_host_read_no_offset, require_kept_prefix,
+                   require_loop_order, require_matching_producer_extent,
+                   require_materialized_extents, require_nest_order,
+                   require_nest_outputs, require_no_nonplane_lead,
+                   require_offset_in_window_dims, require_output_row_span,
+                   require_reduction_iterates_vector,
+                   require_reduction_result_kind, require_representable_read,
+                   require_representable_write, require_row_contraction,
+                   require_row_kept_vector_only, require_same_step_position,
+                   require_scalar_acc_stream, require_streamed_suffix)
 from .reuse import (StoragePlan, VarPlan, analyze_storage, dim_window,
-                    window_stages)
+                    produced_window)
 from .rules import Program
-from .runtime import lane_reduce
 from .terms import Term
 
-
-class PallasUnsupported(Exception):
-    """A program shape the stencil executor does not cover.
-
-    ``backend="auto"`` treats this as a routing signal and falls back to
-    the JAX backend; ``backend="pallas"`` propagates it.  Messages name
-    the specific restriction and the offending variable or dimension —
-    the live restriction table is docs/BACKENDS.md."""
-
-
-@dataclass(frozen=True)
-class HostStep:
-    """A 0-dim kernel executed on the host between stencil calls."""
-
-    fn: Callable
-    reads: tuple[str, ...]  # environment names
-    writes: tuple[str, ...]
-
-
-@dataclass(frozen=True)
-class OutBind:
-    """How one stencil output maps back into the host environment.
-
-    ``outer_lo``/``outer_hi`` give the bound variable's canonical extent
-    ``[lo, N_d + hi)`` per outer grid dim (used to trim warm-up/drain
-    tiles and re-seat goal origins); ``n_kept`` is the kept-prefix
-    length for accumulator binds."""
-
-    env: str
-    kind: str  # 'external' | 'full' | 'acc' | 'acc_rows'
-    lead: int = 0
-    j_lo: int = 0
-    j_hi: int = 0
-    i_lo: int = 0
-    i_hi: int = 0
-    outer_lo: tuple[int, ...] = ()
-    outer_hi: tuple[int, ...] = ()
-    reduce_fn: Optional[Callable] = None  # lane reduction for folded lanes
-    reduce_init: float = 0.0
-    n_kept: int = 0  # acc binds: kept-prefix outer dims
-
-
-@dataclass
-class NestExec:
-    """One top-level nest: host prologue steps, an optional stencil
-    call, output bindings, host epilogue steps."""
-
-    spec: Optional[StencilSpec]
-    in_env: tuple[str, ...]
-    out_binds: tuple[OutBind, ...]
-    host_pre: tuple[HostStep, ...]
-    host_post: tuple[HostStep, ...]
+__all__ = ["PallasGenerated", "PallasUnsupported", "plan_pallas",
+           "generate_pallas", "compile_program_pallas"]
 
 
 def _env_name(vp: VarPlan) -> str:
@@ -136,52 +87,61 @@ def _env_name(vp: VarPlan) -> str:
     return vp.name
 
 
-def _host_step(plan: StoragePlan, g: Group) -> HostStep:
-    if g.dims:
-        # doc-row: host kernels between stencil calls
-        raise PallasUnsupported(
-            f"host-side group {g} iterates {g.dims}: only 0-dim kernels "
-            f"can run between stencil calls"
-        )
+class _FnTable:
+    """Per-call kernel function table: steps reference callables by
+    index so the plan IR stays declarative (and comparable)."""
+
+    def __init__(self):
+        self.fns: list[Callable] = []
+        self._idx: dict[int, int] = {}
+
+    def add(self, fn: Callable) -> int:
+        k = id(fn)
+        if k not in self._idx:
+            self._idx[k] = len(self.fns)
+            self.fns.append(fn)
+        return self._idx[k]
+
+
+def _host_step(plan: StoragePlan, g: Group, fns: _FnTable) -> HostStepPlan:
+    require_host_group_0dim(str(g), g.dims)
     assert g.rule is not None and g.rule.fn is not None
     reads = []
     for _, key, offs in g.reads:
         if any(o != 0 for o in offs.values()):
-            # doc-row: host kernels between stencil calls
-            raise PallasUnsupported(
-                f"group {g} reads {plan.vars[key].name} at a non-zero "
-                f"offset: 0-dim host kernels cannot read offsets"
-            )
+            require_host_read_no_offset(str(g), plan.vars[key].name)
         reads.append(_env_name(plan.vars[key]))
     writes = [_env_name(plan.vars[key]) for _, key in g.writes]
-    return HostStep(g.rule.fn, tuple(reads), tuple(writes))
+    return HostStepPlan(g.name, fns.add(g.rule.fn), tuple(reads),
+                        tuple(writes))
 
 
-def _extract_nest(plan: StoragePlan, idag: IDAG, nest_idx: int) -> NestExec:
-    """The grid mapper: lower one top-level fused nest to a StencilSpec.
+def _plan_nest(plan: StoragePlan, idag: IDAG, nest_idx: int) -> CallPlan:
+    """The grid mapper: lower one top-level fused nest to a CallPlan.
 
-    Outer loop identifiers are flattened onto leading Pallas grid dims
-    (each covering the union of canonical ranges its groups and plane
-    windows need — warm-up tiles included); the row identifier becomes
-    the final (fastest) grid dim; the innermost identifier is vectorized
-    across lanes.  Raises :class:`PallasUnsupported` (naming the
-    restriction and the offending variable/dim) for the shapes listed in
-    docs/BACKENDS.md."""
+    Outer loop identifiers are flattened onto leading grid dims (each
+    covering the union of canonical ranges its groups and plane windows
+    need — warm-up tiles and producer plane leads included); the row
+    identifier becomes the final (fastest) grid dim; the innermost
+    identifier is vectorized across lanes.  Restriction checks are the
+    ``require_*`` sites of :mod:`repro.core.plan` (table in
+    docs/BACKENDS.md)."""
     schedule = plan.schedule
     program = schedule.program
     dag = schedule.dag
     inner = program.loop_order[-1]
     jdim = program.loop_order[-2]
     outer_dims = program.loop_order[:-2]
-    n_outer = len(outer_dims)
-    # the plane dim: the only outer dim in which streamed inputs may be
-    # read at non-zero (halo) offsets, via multi-plane VMEM windows
+    # the plane dim: the only outer dim in which variables may be read
+    # at non-zero (halo) offsets, via multi-plane VMEM windows
     pdim = outer_dims[-1] if outer_dims else None
     nest_of_gid = plan.nest_of_gid
     np_ = plan.nests[nest_idx]
     by_id = {g.gid: g for g in dag.groups}
     goal_of_base = {t.base(): goal for t, goal in idag.goal_of.items()}
     axiom_exts = {t.base(): ax.extents for t, ax in idag.axiom_of.items()}
+    name = f"{program.name}_n{nest_idx}"
+    fns = _FnTable()
 
     ordered: list[int] = []
     for body in walk_bodies(schedule.nests[nest_idx]):
@@ -190,43 +150,20 @@ def _extract_nest(plan: StoragePlan, idag: IDAG, nest_idx: int) -> NestExec:
     grid = [g for g in kernels if jdim in g.dims]
     grid_gids = {g.gid for g in grid}
 
-    host_pre: list[HostStep] = []
-    host_post: list[HostStep] = []
+    host_pre: list[HostStepPlan] = []
+    host_post: list[HostStepPlan] = []
     for g in kernels:
         if jdim in g.dims:
             continue
         if not grid or dag.dataflow_le({g.gid}, grid_gids):
-            host_pre.append(_host_step(plan, g))
+            host_pre.append(_host_step(plan, g, fns))
         elif dag.dataflow_le(grid_gids, {g.gid}):
-            host_post.append(_host_step(plan, g))
+            host_post.append(_host_step(plan, g, fns))
         else:
-            # doc-row: host kernels between stencil calls
-            raise PallasUnsupported(
-                f"group {g} cannot be ordered around the {jdim}-grid"
-            )
+            require_host_orderable(str(g), jdim)
     if not grid:
-        return NestExec(None, (), (), tuple(host_pre), tuple(host_post))
-
-    def check_offsets(v, offs_by_dim, streamed: bool):
-        for d, o in offs_by_dim.items():
-            if d in (inner, jdim) or o == 0:
-                continue
-            if d == pdim:
-                if streamed:
-                    continue  # served from the input's plane window
-                # doc-row: outer-dim offset reads of same-nest variables
-                raise PallasUnsupported(
-                    f"read of {v} at offset {o:+d} in plane dim {d!r}: "
-                    f"only streamed inputs get plane windows; variables "
-                    f"produced in the same nest cannot be read across "
-                    f"outer tiles"
-                )
-            # doc-row: stencil offsets beyond the plane dim
-            raise PallasUnsupported(
-                f"read of {v} at offset {o:+d} in outer dim {d!r}: "
-                f"stencil offsets are only supported in the innermost "
-                f"three dims ({pdim!r}, {jdim!r}, {inner!r})"
-            )
+        return CallPlan(name, (), inner, host_pre=tuple(host_pre),
+                        host_post=tuple(host_post), fns=tuple(fns.fns))
 
     # per-outer-dim canonical grid ranges (the outer analogue of
     # x_lo/x_hi_off): every group and plane window contributes
@@ -234,8 +171,7 @@ def _extract_nest(plan: StoragePlan, idag: IDAG, nest_idx: int) -> NestExec:
     o_his: dict[str, list[int]] = {d: [] for d in outer_dims}
 
     # ---- streamed inputs --------------------------------------------------
-    in_specs: list[InSpec] = []
-    in_env: list[str] = []
+    in_specs: list[InputPlan] = []
     input_src: dict[Term, str] = {}
     plane_inputs: set[Term] = set()
     x_los: list[int] = []
@@ -244,21 +180,14 @@ def _extract_nest(plan: StoragePlan, idag: IDAG, nest_idx: int) -> NestExec:
     def add_input(key: Term) -> None:
         vp = plan.vars[key]
         v = vp.var
-        name = _env_name(vp)
+        iname = _env_name(vp)
         if not v.dims:
-            in_specs.append(InSpec(name, scalar=True))
-            in_env.append(name)
-            input_src[key] = f"scalar:{name}"
+            in_specs.append(InputPlan(iname, scalar=True))
+            input_src[key] = f"scalar:{iname}"
             return
+        require_streamed_suffix(iname, tuple(v.dims),
+                                tuple(program.loop_order))
         rank = len(v.dims)
-        if rank < 2 or tuple(v.dims) != tuple(program.loop_order[-rank:]):
-            # doc-row: streamed input dims not a suffix of the loop order
-            raise PallasUnsupported(
-                f"streamed input {name} spans dims {v.dims}: the executor "
-                f"streams arrays whose dims are a suffix of the loop order "
-                f"{program.loop_order} ending in ({jdim!r}, {inner!r}); "
-                f"1-D row variables cannot cross a stencil-call boundary"
-            )
         # the window shape *and* the grid ranges below both come from
         # the same extents — the array's own origin frame (axiom extents
         # for external inputs, the variable extent for materialized
@@ -281,16 +210,15 @@ def _extract_nest(plan: StoragePlan, idag: IDAG, nest_idx: int) -> NestExec:
             e = exts.get(d)
             outer_los.append(e.lo if e is not None else 0)
             outer_his.append(e.hi if e is not None else 0)
-        in_specs.append(InSpec(name, stages, lead, j_lo, j_hi, i_lo, i_hi,
-                               n_outer=rank - 2, p_stages=p_stages,
-                               p_lead=p_lead, outer_los=tuple(outer_los),
-                               outer_his=tuple(outer_his)))
-        in_env.append(name)
-        input_src[key] = f"in_{name}"
+        in_specs.append(InputPlan(iname, stages, lead, j_lo, j_hi, i_lo, i_hi,
+                                  n_outer=rank - 2, p_stages=p_stages,
+                                  p_lead=p_lead, outer_los=tuple(outer_los),
+                                  outer_his=tuple(outer_his)))
+        input_src[key] = f"in_{iname}"
         if ej is not None:
             x_los.append(ej.lo - lead)
             x_his.append(ej.hi - lead)
-        if p_stages > 1:
+        if p_stages > 1 or p_lead:
             plane_inputs.add(key)
             # warm-up tiles: the plane window must have streamed every
             # plane a tile reads before that tile computes
@@ -310,61 +238,70 @@ def _extract_nest(plan: StoragePlan, idag: IDAG, nest_idx: int) -> NestExec:
                 p = vp.var.producer
                 assert p is not None
                 if p.gid in grid_gids:
-                    continue  # produced in-grid: local/buffered (below)
+                    continue  # produced in-grid: local/windowed (below)
                 p_nest = nest_of_gid.get(p.gid)
                 if p_nest is not None and p_nest > nest_idx:
-                    # doc-row: streamed input dims not a suffix of the loop order
-                    raise PallasUnsupported(
-                        f"{vp.name} consumed before its producing nest"
-                    )
+                    require_nest_order(vp.name)
                 if vp.kind == "acc" and vp.var.dims:
-                    # doc-row: cross-call read of a vector accumulator
-                    raise PallasUnsupported(
-                        f"cross-call read of vector accumulator {vp.name} "
-                        f"(dims {vp.var.dims}): only fully-reduced scalars "
-                        f"stream between stencil calls"
-                    )
+                    require_scalar_acc_stream(vp.name, tuple(vp.var.dims))
                 add_input(key)
 
-    # ---- rolling windows (contracted + cross-row materialized) ------------
-    bufs: list[BufSpec] = []
-    accs: list[AccSpec] = []
-    steps: list[StepSpec] = []
-    outs: list[OutSpec] = []
-    out_binds: list[OutBind] = []
+    # ---- VMEM windows for in-nest produced variables ----------------------
+    windows: list[WindowPlan] = []
+    accs: list[AccPlan] = []
+    steps: list[StepPlan] = []
+    outputs: list[OutputPlan] = []
     seen_bufs: set[str] = set()
 
     for key, vp in plan.vars.items():
         if vp.kind == "rolling" and vp.var.producer is not None \
                 and vp.var.producer.gid in grid_gids:
-            if vp.contraction_dim != jdim:
-                # doc-row: contraction over a non-row dim
-                raise PallasUnsupported(
-                    f"rolling buffer {vp.name} contracts over dim "
-                    f"{vp.contraction_dim!r}: the executor only carries "
-                    f"windows across the row dim {jdim!r}"
-                )
-            bufs.append(BufSpec(f"b_{vp.name}", vp.stages, vp.i_lo, vp.i_hi))
+            require_row_contraction(vp.name, vp.contraction_dim, jdim)
+            windows.append(WindowPlan(f"b_{vp.name}", vp.stages,
+                                      vp.i_lo, vp.i_hi))
             seen_bufs.add(f"b_{vp.name}")
 
-    # A 'full' variable produced in this grid and read back at a row
-    # offset by the same grid needs its recent rows kept in VMEM: give it
-    # a rolling window sized by the consumer-position spread (the same
-    # rule the contraction pass applies to 'rolling' variables).
+    # A variable produced in this grid and read back at a *plane* offset
+    # by the same grid gets a producer plane window: the producer runs
+    # its plane-dim lead ahead of the outer grid and whole planes stay
+    # resident (the outer-dim analogue of the rolling row window).  A
+    # variable read back at a *row* offset only keeps the rolling-window
+    # plan sized by the consumer-position spread.
     cross_row_buf: dict[Term, str] = {}
+    plane_buf: dict[Term, str] = {}
     for key, vp in plan.vars.items():
-        if vp.kind != "full":
+        if vp.kind not in ("full", "external_out"):
             continue
         p = vp.var.producer
-        if p is None or p.gid not in grid_gids:
+        if p is None or p.gid not in grid_gids or p.is_reduction:
             continue
-        p_lead = np_.lead(p.gid, jdim)
-        _, _, positions = dim_window(np_, vp.var, jdim, within=grid_gids)
-        if positions and any(pos != p_lead for pos in positions):
-            name = f"b_{vp.name}"
-            bufs.append(BufSpec(name, window_stages(p_lead, positions),
-                                vp.i_lo, vp.i_hi))
-            cross_row_buf[key] = name
+        wname = f"b_{vp.name}"
+        if pdim is not None and pdim in vp.var.dims:
+            p_lead_p, p_stages, p_positions = produced_window(
+                np_, vp.var, pdim, within=grid_gids)
+            if p_positions and any(pos != p_lead_p for pos in p_positions):
+                ej = vp.var.extent.get(jdim)
+                j_lo, j_hi = (ej.lo, ej.hi) if ej is not None else (0, 0)
+                windows.append(WindowPlan(
+                    wname, 1, vp.i_lo, vp.i_hi, p_stages=p_stages,
+                    p_lead=p_lead_p, j_lo=j_lo, j_hi=j_hi))
+                plane_buf[key] = wname
+                continue
+        p_lead_j, j_stages, positions = produced_window(
+            np_, vp.var, jdim, within=grid_gids)
+        if positions and any(pos != p_lead_j for pos in positions):
+            windows.append(WindowPlan(wname, j_stages, vp.i_lo, vp.i_hi))
+            cross_row_buf[key] = wname
+
+    def check_offsets(v: str, offs_by_dim, windowed: bool) -> None:
+        """Offsets live in the row/vector dims, or the plane dim when a
+        plane window (streamed or produced) serves them."""
+        for d, o in offs_by_dim.items():
+            if d in (inner, jdim) or o == 0:
+                continue
+            if d == pdim and windowed:
+                continue
+            require_offset_in_window_dims(v, d, o, pdim, jdim, inner)
 
     def outer_extents(exts) -> tuple[tuple[int, ...], tuple[int, ...]]:
         los, his = [], []
@@ -379,104 +316,87 @@ def _extract_nest(plan: StoragePlan, idag: IDAG, nest_idx: int) -> NestExec:
         assert g.rule is not None and g.rule.fn is not None
         missing = [d for d in outer_dims if d not in g.dims]
         if missing:
-            # doc-row: kernels not iterating the full outer grid
-            raise PallasUnsupported(
-                f"group {g} lacks outer grid dim(s) {missing}: every "
-                f"kernel fused into a {'/'.join(program.loop_order)} nest "
-                f"must iterate the full outer grid"
-            )
-        for d in outer_dims:
-            if np_.lead(g.gid, d):
-                # doc-row: outer-dim offset reads of same-nest variables
-                raise PallasUnsupported(
-                    f"group {g} runs {np_.lead(g.gid, d)} tile(s) ahead in "
-                    f"outer dim {d!r}: in-grid producers cannot run ahead "
-                    f"of the outer grid (only streamed inputs get plane "
-                    f"windows)"
-                )
+            require_full_outer_iteration(str(g), missing,
+                                         tuple(program.loop_order))
+        outer_leads = tuple(np_.lead(g.gid, d) for d in outer_dims)
+        for di, d in enumerate(outer_dims):
+            if outer_leads[di] and d != pdim:
+                require_no_nonplane_lead(str(g), d, outer_leads[di])
             e = g.extent.get(d)
-            o_los[d].append(e.lo if e is not None else 0)
-            o_his[d].append(e.hi if e is not None else 0)
+            o_los[d].append((e.lo if e is not None else 0) - outer_leads[di])
+            o_his[d].append((e.hi if e is not None else 0) - outer_leads[di])
         lead = np_.lead(g.gid, jdim)
+        p_pos0 = outer_leads[-1] if outer_dims else 0
         ext_j = g.extent.get(jdim)
         if ext_j is not None:
             x_los.append(ext_j.lo - lead)
             x_his.append(ext_j.hi - lead)
         c_ilo = g.extent[inner].lo if inner in g.extent else 0
-        c_w = (g.extent[inner].hi - g.extent[inner].lo) if inner in g.extent else 0
+        c_w = (g.extent[inner].hi - g.extent[inner].lo) \
+            if inner in g.extent else 0
 
         reads = []
         for _, key, offs in g.reads:
             vp = plan.vars[key]
             src = input_src.get(key)
-            check_offsets(vp.name, offs, streamed=src is not None)
+            check_offsets(vp.name, offs,
+                          windowed=src is not None or key in plane_buf)
             oj = offs.get(jdim, 0)
             oi = offs.get(inner, 0)
             op = offs.get(pdim, 0) if pdim is not None else 0
+            p_pos = p_pos0 + op  # total plane position of this read
             if src is not None:
                 if src.startswith("scalar:"):
-                    reads.append(ReadSpec(src, 0, 0, 0))
+                    reads.append(ReadPlan(src, 0, 0, 0))
                 else:
-                    if op and key not in plane_inputs:
-                        # a plane offset on an input whose window was
+                    if p_pos and key not in plane_inputs:
+                        # a plane read of an input whose window was
                         # planned rowwise cannot happen: dim_window saw
-                        # the same consumer offsets
+                        # the same consumer positions
                         raise AssertionError(
                             f"unplanned plane read of {vp.name}")
-                    reads.append(ReadSpec(src, lead + oj, c_ilo + oi, c_w,
-                                          p_off=op))
+                    reads.append(ReadPlan(src, lead + oj, c_ilo + oi, c_w,
+                                          p_off=p_pos))
+            elif key in plane_buf:
+                reads.append(ReadPlan(plane_buf[key], lead + oj, c_ilo + oi,
+                                      c_w, p_off=p_pos))
             elif vp.kind == "rolling":
-                reads.append(ReadSpec(f"b_{vp.name}", lead + oj, c_ilo + oi, c_w))
+                reads.append(ReadPlan(f"b_{vp.name}", lead + oj,
+                                      c_ilo + oi, c_w))
             elif key in cross_row_buf:
                 # materialized in-nest AND read at a row offset: served
                 # from the rolling window planned above
-                reads.append(ReadSpec(cross_row_buf[key], lead + oj,
+                reads.append(ReadPlan(cross_row_buf[key], lead + oj,
                                       c_ilo + oi, c_w))
-            elif vp.kind in ("row", "full", "scalar"):
+            elif vp.kind in ("row", "full", "scalar", "external_out"):
                 # produced by this nest's grid: visible as a same-step row
                 p = vp.var.producer
                 assert p is not None
-                if vp.kind != "row" and lead + oj != np_.lead(p.gid, jdim):
-                    # doc-row: outer-dim offset reads of same-nest variables
-                    raise PallasUnsupported(
-                        f"read of same-nest {vp.kind} variable {vp.name} at "
-                        f"row position {lead + oj} but produced at "
-                        f"{np_.lead(p.gid, jdim)}: scalars cannot be read "
-                        f"across rows"
-                    )
+                if vp.kind != "row":
+                    require_same_step_position(vp.name, vp.kind, lead + oj,
+                                               np_.lead(p.gid, jdim))
                 p_ilo = p.extent[inner].lo if inner in p.extent else 0
                 reads.append(
-                    ReadSpec(f"local:{vp.name}", 0, (c_ilo + oi) - p_ilo, c_w))
+                    ReadPlan(f"local:{vp.name}", 0, (c_ilo + oi) - p_ilo,
+                             c_w))
             else:
-                # doc-row: cross-call read of a vector accumulator
-                raise PallasUnsupported(
-                    f"read of {vp.name}: storage kind {vp.kind!r} is not "
-                    f"representable inside a stencil call"
-                )
+                require_representable_read(vp.name, vp.kind)
 
         if g.is_reduction:
             (_, okey), = g.writes
             ovp = plan.vars[okey]
             # 'acc': consumed downstream (streamed as a scalar input);
             # 'external_out': the reduction result is itself a goal.
-            if ovp.kind not in ("acc", "external_out"):
-                # doc-row: cross-call read of a vector accumulator
-                raise PallasUnsupported(
-                    f"reduction result {ovp.name} of storage kind "
-                    f"{ovp.kind!r}: only accumulator or terminal results "
-                    f"are supported"
-                )
+            require_reduction_result_kind(ovp.name, ovp.kind)
             if inner not in g.dims:
-                # doc-row: reductions not iterating the vector dim
-                raise PallasUnsupported(
-                    f"reduction {g} does not iterate the vector dim"
-                )
+                require_reduction_iterates_vector(str(g))
             kept = tuple(ovp.var.dims)
             goal = goal_of_base.get(okey)
             gexts = goal.extents if goal is not None else ovp.var.extent
             valid = (ext_j.lo, ext_j.hi) if ext_j is not None else (0, 0)
             valid_outer = tuple(
-                ((g.extent[d].lo, g.extent[d].hi) if d in g.extent else (0, 0))
+                ((g.extent[d].lo, g.extent[d].hi) if d in g.extent
+                 else (0, 0))
                 for d in outer_dims
             )
             if jdim in kept:
@@ -484,21 +404,10 @@ def _extract_nest(plan: StoragePlan, idag: IDAG, nest_idx: int) -> NestExec:
                 # for its (outer..., j) point — emit one partial-
                 # accumulator row per step (identity-filled outside the
                 # computed span) and lane-reduce on the host.
-                if set(g.reduced_dims) != {inner}:
-                    # doc-row: row-kept reductions reducing an outer dim
-                    raise PallasUnsupported(
-                        f"reduction output {ovp.name} keeps the row dim "
-                        f"{jdim!r} while reducing {g.reduced_dims}: "
-                        f"row-kept reductions may only reduce the vector "
-                        f"dim {inner!r}"
-                    )
-                if c_ilo < 0 or c_ilo + c_w > 0:
-                    # doc-row: negative innermost origins on outputs
-                    raise PallasUnsupported(
-                        f"partial-accumulator row of {ovp.name} spans "
-                        f"[{c_ilo}, Ni{c_ilo + c_w:+d}): outside the "
-                        f"Ni-wide output row"
-                    )
+                require_row_kept_vector_only(ovp.name, jdim,
+                                             tuple(g.reduced_dims), inner)
+                require_output_row_span(ovp.name, c_ilo, c_ilo + c_w,
+                                        what="partial-accumulator row")
                 init = ovp.acc_init
 
                 def fn_with_init(*ins, _f=g.rule.fn, _i=init):
@@ -506,39 +415,35 @@ def _extract_nest(plan: StoragePlan, idag: IDAG, nest_idx: int) -> NestExec:
 
                 glos, ghis = outer_extents(gexts)
                 gj = gexts.get(jdim)
-                out_binds.append(OutBind(
-                    env=_env_name(ovp), kind="acc_rows", lead=lead,
+                steps.append(StepPlan(g.name, fns.add(fn_with_init),
+                                      tuple(reads),
+                                      ((("out", len(outputs)),),),
+                                      lead, c_ilo, c_w))
+                outputs.append(OutputPlan(
+                    _env_name(ovp), kind="acc_rows", lead=lead,
                     j_lo=(gj.lo if gj is not None else 0),
                     j_hi=(gj.hi if gj is not None else 0),
-                    outer_lo=glos, outer_hi=ghis,
-                    reduce_fn=g.rule.fn, reduce_init=init,
+                    outer_lo=glos, outer_hi=ghis, outer_lead=outer_leads,
+                    fill=init, reduce_idx=fns.add(g.rule.fn),
+                    reduce_init=init,
                 ))
-                steps.append(StepSpec(fn_with_init, tuple(reads),
-                                      ((("out", len(outs)),),), lead, c_ilo))
-                outs.append(OutSpec(ovp.name, lead, fill=init))
                 continue
             kept_outer = tuple(d for d in kept if d != inner)
-            if kept_outer != tuple(outer_dims[:len(kept_outer)]):
-                # doc-row: reductions keeping a non-prefix outer subset
-                raise PallasUnsupported(
-                    f"reduction output {ovp.name} keeps outer dims "
-                    f"{kept_outer} of a {outer_dims} grid: kept outer "
-                    f"dims must form a leading prefix of the grid (the "
-                    f"accumulator re-initializes per kept tile)"
-                )
+            require_kept_prefix(ovp.name, kept_outer, tuple(outer_dims))
             n_kept = len(kept_outer)
-            acc = AccSpec(f"a_{ovp.name}", c_w, ovp.acc_init, n_kept=n_kept)
+            acc = AccPlan(f"a_{ovp.name}", c_w, ovp.acc_init, n_kept=n_kept)
             accs.append(acc)
-            steps.append(StepSpec(g.rule.fn, tuple(reads), (), lead, c_ilo,
-                                  acc=acc.name, valid=valid,
-                                  valid_outer=valid_outer))
-            outs.append(OutSpec(ovp.name, lead, acc=acc.name))
+            steps.append(StepPlan(g.name, fns.add(g.rule.fn), tuple(reads),
+                                  (), lead, c_ilo, c_w, acc=acc.name,
+                                  valid=valid, valid_outer=valid_outer))
             glos, ghis = outer_extents(gexts)
-            out_binds.append(OutBind(
-                env=_env_name(ovp), kind="acc", lead=lead,
-                outer_lo=glos, outer_hi=ghis,
-                reduce_fn=g.rule.fn if inner in ovp.acc_reduced else None,
-                reduce_init=ovp.acc_init, n_kept=n_kept,
+            outputs.append(OutputPlan(
+                _env_name(ovp), kind="acc", lead=lead,
+                outer_lo=glos, outer_hi=ghis, outer_lead=outer_leads,
+                acc=acc.name, n_kept=n_kept,
+                reduce_idx=(fns.add(g.rule.fn)
+                            if inner in ovp.acc_reduced else None),
+                reduce_init=ovp.acc_init,
             ))
             continue
 
@@ -546,6 +451,8 @@ def _extract_nest(plan: StoragePlan, idag: IDAG, nest_idx: int) -> NestExec:
         for _, key in g.writes:
             vp = plan.vars[key]
             v = vp.var
+            consumed_in_grid = any(
+                u.group.gid in grid_gids for u in v.consumers)
             targets: list[tuple[str, object]] = []
             if vp.kind == "rolling":
                 assert f"b_{vp.name}" in seen_bufs, \
@@ -553,117 +460,134 @@ def _extract_nest(plan: StoragePlan, idag: IDAG, nest_idx: int) -> NestExec:
                 targets.append(("buf", f"b_{vp.name}"))
             elif vp.kind == "row":
                 targets.append(("local", vp.name))
-            elif vp.kind == "external_out":
-                if c_ilo < 0 or c_ilo + c_w > 0:
-                    # doc-row: negative innermost origins on outputs
-                    raise PallasUnsupported(
-                        f"row of {vp.name} spans [{c_ilo}, Ni{c_ilo + c_w:+d})"
-                        f": outside the Ni-wide output row"
-                    )
-                goal = goal_of_base.get(key)
-                gexts = goal.extents if goal is not None else {}
-                glos, ghis = outer_extents(gexts)
-                gj = gexts.get(jdim)
-                out_binds.append(OutBind(
-                    env=_env_name(vp), kind="external", lead=lead,
-                    j_lo=(gj.lo if gj is not None else 0),
-                    j_hi=(gj.hi if gj is not None else 0),
-                    outer_lo=glos, outer_hi=ghis,
-                ))
-                targets.append(("out", len(outs)))
-                outs.append(OutSpec(vp.name, lead))
-            elif vp.kind == "full":
-                ej = v.extent.get(jdim)
-                ei = v.extent.get(inner)
-                if ej is None or ei is None:
-                    # doc-row: streamed input dims not a suffix of the loop order
-                    raise PallasUnsupported(f"materialized {vp.name} lacks "
-                                            f"(j, i) extents")
-                if (inner in g.extent and g.extent[inner] != ei) or \
-                        (jdim in g.extent and g.extent[jdim] != ej):
-                    # doc-row: negative innermost origins on outputs
-                    raise PallasUnsupported(
-                        f"{vp.name}: producer extent differs from variable "
-                        f"extent; cannot materialize across calls"
-                    )
-                if ei.lo < 0 or ei.hi > 0:
-                    # doc-row: negative innermost origins on outputs
-                    raise PallasUnsupported(
-                        f"row of {vp.name} spans [{ei.lo}, Ni{ei.hi:+d}): "
-                        f"outside the Ni-wide output row"
-                    )
-                vlos, vhis = outer_extents(v.extent)
-                out_binds.append(OutBind(
-                    env=_env_name(vp), kind="full", lead=lead,
-                    j_lo=ej.lo, j_hi=ej.hi, i_lo=ei.lo, i_hi=ei.hi,
-                    outer_lo=vlos, outer_hi=vhis,
-                ))
-                targets.append(("out", len(outs)))
-                outs.append(OutSpec(vp.name, lead))
-                # also visible to same-step consumers within this nest
-                targets.append(("local", vp.name))
-                if key in cross_row_buf:
-                    # ...and to earlier-row consumers via its window
+            elif vp.kind in ("external_out", "full"):
+                materialize = vp.kind == "external_out" or v.is_output \
+                    or any(u.group.gid not in grid_gids
+                           for u in v.consumers)
+                if materialize:
+                    if vp.kind == "external_out":
+                        require_output_row_span(vp.name, c_ilo, c_ilo + c_w)
+                        goal = goal_of_base.get(key)
+                        gexts = goal.extents if goal is not None else {}
+                        glos, ghis = outer_extents(gexts)
+                        gj = gexts.get(jdim)
+                        outputs.append(OutputPlan(
+                            _env_name(vp), kind="external", lead=lead,
+                            j_lo=(gj.lo if gj is not None else 0),
+                            j_hi=(gj.hi if gj is not None else 0),
+                            outer_lo=glos, outer_hi=ghis,
+                            outer_lead=outer_leads,
+                        ))
+                    else:
+                        ej = v.extent.get(jdim)
+                        ei = v.extent.get(inner)
+                        if ej is None or ei is None:
+                            require_materialized_extents(vp.name)
+                        if (inner in g.extent and g.extent[inner] != ei) or \
+                                (jdim in g.extent and g.extent[jdim] != ej):
+                            require_matching_producer_extent(vp.name)
+                        require_output_row_span(vp.name, ei.lo, ei.hi)
+                        vlos, vhis = outer_extents(v.extent)
+                        outputs.append(OutputPlan(
+                            _env_name(vp), kind="full", lead=lead,
+                            j_lo=ej.lo, j_hi=ej.hi, i_lo=ei.lo, i_hi=ei.hi,
+                            outer_lo=vlos, outer_hi=vhis,
+                            outer_lead=outer_leads,
+                        ))
+                    targets.append(("out", len(outputs) - 1))
+                if key in plane_buf:
+                    # in-nest plane-offset consumers read resident planes
+                    targets.append(("buf", plane_buf[key]))
+                elif key in cross_row_buf:
+                    # ...and earlier-row consumers the rolling window
                     targets.append(("buf", cross_row_buf[key]))
+                elif consumed_in_grid:
+                    # same-step consumers within this nest
+                    targets.append(("local", vp.name))
             else:
-                # doc-row: cross-call read of a vector accumulator
-                raise PallasUnsupported(
-                    f"write of {vp.name}: storage kind {vp.kind!r} is not "
-                    f"representable inside a stencil call"
-                )
+                require_representable_write(vp.name, vp.kind)
             writes.append(tuple(targets))
-        steps.append(StepSpec(g.rule.fn, tuple(reads), tuple(writes),
-                              lead, c_ilo))
+        steps.append(StepPlan(g.name, fns.add(g.rule.fn), tuple(reads),
+                              tuple(writes), lead, c_ilo, c_w))
 
-    if not outs:
-        # doc-row: host kernels between stencil calls
-        raise PallasUnsupported(f"nest {nest_idx} produces no outputs")
-    spec = StencilSpec(
-        name=f"{program.name}_n{nest_idx}",
-        n_outer=n_outer,
+    if not outputs:
+        require_nest_outputs(nest_idx)
+    grid_dims = tuple(
+        GridDim(d, min(o_los[d]) if o_los[d] else 0,
+                max(o_his[d]) if o_his[d] else 0)
+        for d in outer_dims
+    ) + (GridDim(jdim, min(x_los) if x_los else 0,
+                 max(x_his) if x_his else 0),)
+    return CallPlan(
+        name=name,
+        grid=grid_dims,
+        vec_dim=inner,
         inputs=tuple(in_specs),
-        bufs=tuple(bufs),
+        windows=tuple(windows),
         accs=tuple(accs),
         steps=tuple(steps),
-        outs=tuple(outs),
-        x_lo=min(x_los) if x_los else 0,
-        x_hi_off=max(x_his) if x_his else 0,
-        outer_lo=tuple(min(o_los[d]) if o_los[d] else 0 for d in outer_dims),
-        outer_hi_off=tuple(max(o_his[d]) if o_his[d] else 0
-                           for d in outer_dims),
+        outputs=tuple(outputs),
+        host_pre=tuple(host_pre),
+        host_post=tuple(host_post),
+        fns=tuple(fns.fns),
     )
-    return NestExec(spec, tuple(in_env), tuple(out_binds),
-                    tuple(host_pre), tuple(host_post))
 
 
-def extract_nest_execs(plan: StoragePlan, idag: IDAG) -> list[NestExec]:
-    """Lower every top-level nest of a storage plan to a
-    :class:`NestExec` (the shape probe used by ``backend="auto"``)."""
+def plan_pallas(plan: StoragePlan, idag: IDAG) -> KernelPlan:
+    """Lower a storage plan to a validated :class:`KernelPlan` — the
+    pure planner half of the Pallas backend (program + schedule + reuse
+    metadata in, declarative IR out; no JAX tracing, no execution).
+    Raises :class:`PallasUnsupported` for schedules outside the
+    interpreter's shape."""
     program = plan.schedule.program
-    if len(program.loop_order) < 2:
-        # doc-row: loop order shorter than
-        raise PallasUnsupported(
-            f"loop order {program.loop_order} has "
-            f"{len(program.loop_order)} dim(s): the stencil executor "
-            f"needs at least a (row, vector) pair"
-        )
-    return [_extract_nest(plan, idag, k) for k in range(len(plan.nests))]
+    dag = plan.schedule.dag
+    require_loop_order(tuple(program.loop_order))
+    dim_sym = {d: f"N{d}" for d in program.loop_order}
+    axiom_ext = {t.base(): ax.extents for t, ax in idag.axiom_of.items()}
+    for exts in axiom_ext.values():
+        for d, e in exts.items():
+            dim_sym[d] = e.size
+    axioms = tuple(sorted(
+        (AxiomPlan(key.ref.name, tuple(key.dims),
+                   tuple((d, exts[d].size, exts[d].lo, exts[d].hi)
+                         for d in key.dims if d in exts))
+         for key, exts in axiom_ext.items()),
+        key=lambda a: (a.array, a.dims)))
+    goal_outputs = tuple(
+        (goal.store_as or dag.variables[t.base()].name,
+         dag.variables[t.base()].name)
+        for t, goal in idag.goal_of.items()
+    )
+    calls = tuple(_plan_nest(plan, idag, k) for k in range(len(plan.nests)))
+    kplan = KernelPlan(
+        program=program.name,
+        loop_order=tuple(program.loop_order),
+        dim_sizes=tuple(sorted(dim_sym.items())),
+        axioms=axioms,
+        goal_outputs=goal_outputs,
+        calls=calls,
+    )
+    return kplan.validate()
 
 
 @dataclass
 class PallasGenerated:
-    """The Pallas backend's end product: one stencil spec per grid nest
-    plus a callable executing the full schedule."""
+    """The Pallas backend's end product: the declarative
+    :class:`KernelPlan` plus the interpreter callable executing it."""
 
-    specs: tuple[StencilSpec, ...]
+    kernel_plan: KernelPlan
     fn: Callable
     plan: StoragePlan
-    nest_execs: tuple[NestExec, ...] = ()
 
     @property
-    def spec(self) -> StencilSpec:
-        """The first (often only) grid nest's spec."""
-        return self.specs[0]
+    def calls(self) -> tuple[CallPlan, ...]:
+        """The plan's stencil calls (host-only nests excluded)."""
+        return tuple(c for c in self.kernel_plan.calls if c.has_grid)
+
+    @property
+    def call(self) -> CallPlan:
+        """The first (often only) stencil call's plan."""
+        return self.calls[0]
 
     @property
     def schedule(self):
@@ -671,156 +595,23 @@ class PallasGenerated:
         return self.plan.schedule
 
 
-def _run_host(step: HostStep, env: dict) -> None:
-    vals = step.fn(*[env[n] for n in step.reads])
-    if len(step.writes) == 1:
-        vals = (vals,)
-    for name, val in zip(step.writes, vals):
-        env[name] = val
-
-
 def generate_pallas(plan: StoragePlan, idag: IDAG, *, dtype=jnp.float32,
                     interpret: bool = True,
                     double_buffer: bool = False) -> PallasGenerated:
-    """Emit the Pallas execution of a storage plan.
+    """Plan + interpret: emit the Pallas execution of a storage plan.
 
     ``interpret=True`` runs the kernel bodies on CPU for validation; on
     a TPU runtime pass False.  ``double_buffer=True`` switches the
-    executor's input streaming from BlockSpec row fetches to the
+    interpreter's input streaming from BlockSpec row fetches to the
     explicit two-slot async-DMA pipeline (see
     :func:`repro.kernels.stencil2d.kernel.build_call`)."""
-    program = plan.schedule.program
-    dag = plan.schedule.dag
-    nest_execs = extract_nest_execs(plan, idag)
-    inner = program.loop_order[-1]
-    jdim = program.loop_order[-2]
-    outer_dims = program.loop_order[:-2]
-
-    # dimension -> runtime size symbol (resolved from axiom array shapes)
-    dim_sym = {d: f"N{d}" for d in program.loop_order}
-    axiom_ext = {t.base(): ax.extents for t, ax in idag.axiom_of.items()}
-    for exts in axiom_ext.values():
-        for d, e in exts.items():
-            dim_sym[d] = e.size
-    input_names = sorted({key.ref.name for key in axiom_ext})
-    goal_out = [
-        (goal.store_as or dag.variables[t.base()].name,
-         dag.variables[t.base()].name)
-        for t, goal in idag.goal_of.items()
-    ]
-
-    def fn(**arrays):
-        sizes: dict[str, int] = {}
-        for key, exts in axiom_ext.items():
-            arr = arrays[key.ref.name]
-            for axis, d in enumerate(key.dims):
-                e = exts.get(d)
-                if e is not None and e.size not in sizes:
-                    sizes[e.size] = arr.shape[axis] - (e.hi - e.lo)
-        nj = sizes[dim_sym[jdim]]
-        ni = sizes[dim_sym[inner]]
-        n_outs = tuple(sizes[dim_sym[d]] for d in outer_dims)
-        sz = (*n_outs, nj, ni)
-        env: dict[str, jnp.ndarray] = {
-            name: arrays[name] for name in input_names
-        }
-        for ne in nest_execs:
-            for hs in ne.host_pre:
-                _run_host(hs, env)
-            if ne.spec is not None:
-                call, _ = build_call(ne.spec, sz, dtype, interpret=interpret,
-                                     double_buffer=double_buffer)
-                args = []
-                for ispec, name in zip(ne.spec.inputs, ne.in_env):
-                    v = jnp.asarray(env[name], dtype)
-                    if ispec.scalar:
-                        v = v.reshape((1, 1))
-                    args.append(v)
-                padded = call(*args)
-                if not isinstance(padded, (list, tuple)):
-                    padded = [padded]
-                for bind, pout in zip(ne.out_binds, padded):
-                    env[bind.env] = _assemble(
-                        bind, pout, ne.spec, nj, ni, n_outs, dtype)
-            for hs in ne.host_post:
-                _run_host(hs, env)
-        return {out_name: env[var_name] for out_name, var_name in goal_out}
-
-    specs = tuple(ne.spec for ne in nest_execs if ne.spec is not None)
-    return PallasGenerated(specs, fn, plan, tuple(nest_execs))
-
-
-def _outer_trim(bind: OutBind, spec: StencilSpec, n_outs: tuple[int, ...],
-                n_dims: int) -> tuple[slice, ...]:
-    """Slices dropping warm-up/drain tiles of the first ``n_dims`` outer
-    grid dims, keeping the bind's canonical extent ``[lo, N_d + hi)``."""
-    o_lo = spec.outer_lo or (0,) * spec.n_outer
-    idx = []
-    for d in range(n_dims):
-        s0 = bind.outer_lo[d] - o_lo[d]
-        cnt = n_outs[d] + bind.outer_hi[d] - bind.outer_lo[d]
-        idx.append(slice(s0, s0 + cnt))
-    return tuple(idx)
-
-
-def _outer_seat(bind: OutBind, n_outs: tuple[int, ...],
-                n_dims: int) -> tuple[slice, ...]:
-    """Slices seating a trimmed value at its goal origin inside
-    full-size ``[0, N_d)`` outer dims."""
-    return tuple(
-        slice(bind.outer_lo[d], n_outs[d] + bind.outer_hi[d])
-        for d in range(n_dims)
-    )
-
-
-def _assemble(bind: OutBind, padded, spec: StencilSpec, nj: int, ni: int,
-              n_outs: tuple[int, ...], dtype):
-    """Map one padded executor output back to its environment array:
-    trim warm-up/drain rows and tiles, re-seat goal origins, lane-reduce
-    accumulators whose vector dim was folded."""
-    n_out = spec.n_outer
-    if bind.kind == "acc":
-        if bind.n_kept:
-            # (*kept grid tiles, width): one combined row per kept tile
-            part = padded[_outer_trim(bind, spec, n_outs, bind.n_kept)]
-            if bind.reduce_fn is not None:
-                part = lane_reduce(bind.reduce_fn,
-                                   jnp.moveaxis(part, -1, 0),
-                                   bind.reduce_init)
-            kept_exact = all(
-                bind.outer_lo[d] == 0 and bind.outer_hi[d] == 0
-                for d in range(bind.n_kept))
-            if kept_exact:
-                return part
-            shape = tuple(n_outs[:bind.n_kept]) + part.shape[bind.n_kept:]
-            seat = _outer_seat(bind, n_outs, bind.n_kept) \
-                + (slice(None),) * (part.ndim - bind.n_kept)
-            return jnp.zeros(shape, dtype).at[seat].set(part)
-        row = padded[0]
-        if bind.reduce_fn is not None:
-            return lane_reduce(bind.reduce_fn, row, bind.reduce_init)
-        return row
-    t0 = bind.j_lo - (spec.x_lo + bind.lead)
-    nrows = nj + bind.j_hi - bind.j_lo
-    otrim = _outer_trim(bind, spec, n_outs, n_out)
-    if bind.kind == "acc_rows":
-        # one identity-padded partial-accumulator row per grid step:
-        # trim, fold the lanes, seat at the goal origin
-        part = padded[otrim + (slice(t0, t0 + nrows), slice(None))]
-        vals = lane_reduce(bind.reduce_fn, jnp.moveaxis(part, -1, 0),
-                           bind.reduce_init)
-        out = jnp.zeros((*n_outs, nj), dtype)
-        return out.at[_outer_seat(bind, n_outs, n_out)
-                      + (slice(bind.j_lo, nj + bind.j_hi),)].set(vals)
-    if bind.kind == "external":
-        jlo, jhi = bind.j_lo, nj + bind.j_hi
-        out = jnp.zeros((*n_outs, nj, ni), dtype)
-        return out.at[_outer_seat(bind, n_outs, n_out)
-                      + (slice(jlo, jhi), slice(None))].set(
-            padded[otrim + (slice(t0, t0 + nrows), slice(None))])
-    w = ni + bind.i_hi - bind.i_lo
-    return padded[otrim + (slice(t0, t0 + nrows),
-                           slice(bind.i_lo, bind.i_lo + w))]
+    kplan = plan_pallas(plan, idag)
+    # imported lazily: the interpreter imports the plan IR from
+    # repro.core, so a module-level import here would be circular
+    from ..kernels.stencil2d.kernel import execute_plan
+    fn = execute_plan(kplan, dtype=dtype, interpret=interpret,
+                      double_buffer=double_buffer)
+    return PallasGenerated(kplan, fn, plan)
 
 
 def compile_program_pallas(

@@ -7,29 +7,34 @@ dispatches to a backend:
 
 * ``backend="jax"`` — emit fused, vectorized JAX source
   (:mod:`repro.core.codegen_jax`), returning :class:`Generated`;
-* ``backend="pallas"`` — execute the schedule on the TPU stencil
-  executor (:mod:`repro.core.codegen_pallas`), returning
+* ``backend="pallas"`` — lower the schedule to the declarative
+  :class:`~repro.core.plan.KernelPlan` IR
+  (:func:`repro.core.codegen_pallas.plan_pallas`, the planner) and hand
+  it to the stencil interpreter
+  (:func:`repro.kernels.stencil2d.kernel.execute_plan`), returning
   :class:`PallasGenerated`; raises :class:`PallasUnsupported` for
-  programs outside the stencil executor's shape;
+  programs outside the interpreter's shape;
 * ``backend="auto"`` (default) — probe Pallas applicability and fall
   back to JAX.  Any single-nest schedule over a (row, vector) loop order
   — including reductions (carried, kept-prefix and row-kept), outer
-  grids, outer-dim stencil halos (plane windows), and cross-row
-  materialized reads, now that the executor covers them — goes to the
-  stencil executor;
+  grids, outer-dim stencil halos (plane windows for streamed inputs
+  *and* same-nest produced variables), and cross-row materialized reads
+  — goes to the stencil interpreter;
   split (multi-nest) schedules take the JAX backend unless the program
   name has been registered as a measured Pallas win with
   :func:`register_pallas_split_win` (benchmark legs feed this table from
   real-TPU ``interpret=False`` timings).  The probe itself is safe:
-  shapes the executor still rejects raise :class:`PallasUnsupported`
-  during extraction and silently fall back to JAX.
+  shapes the planner still rejects raise :class:`PallasUnsupported`
+  during lowering and silently fall back to JAX.
 
-The full routing rules, the cache key, and the table of remaining
+The full routing rules, the cache keys, and the table of remaining
 ``PallasUnsupported`` shapes live in docs/BACKENDS.md.
 
-Compiled results are cached on (program signature, backend, dtype,
-interpret, double_buffer) so repeated compilation in serving/benchmark
-loops is free.
+Compiled results are cached at two levels: a fast path keyed on
+(program signature, backend, dtype, interpret, double_buffer), and —
+for the Pallas backend — a **plan-level** cache keyed on
+:meth:`KernelPlan.cache_key`, so two differently-built programs that
+lower to structurally equal plans share one compiled interpreter.
 """
 from __future__ import annotations
 
@@ -38,16 +43,19 @@ from typing import Union
 import jax.numpy as jnp
 
 from .codegen_jax import Generated, generate
-from .codegen_pallas import PallasGenerated, PallasUnsupported, generate_pallas
+from .codegen_pallas import (PallasGenerated, PallasUnsupported,
+                             plan_pallas)
 from .dataflow import build_dataflow
 from .fusion import fuse_inest_dag
 from .infer import infer
+from .plan import fn_key as _fn_key
 from .reuse import StoragePlan, analyze_storage
 from .rules import Program
 
 BACKENDS = ("auto", "jax", "pallas")
 
 _CACHE: dict = {}
+_PLAN_CACHE: dict = {}
 
 # Split (multi-nest) schedules that measured faster on the stencil
 # executor than on the JAX backend (real-TPU interpret=False runs).
@@ -78,42 +86,11 @@ def register_pallas_split_win(name: str) -> None:
         del _CACHE[key]
 
 
-def _fn_key(fn):
-    """Structural identity for a kernel callable.
-
-    Keyed on ``(module, qualname, code object, closure cells, defaults)``
-    so structurally identical programs whose kernels are *rebuilt*
-    lambdas (fresh function objects compiled from the same source, e.g.
-    a program-builder called twice) still hit the compile cache.
-    Falls back to the function object itself when there is no code
-    object (builtins/partials) or the closure/defaults are unhashable —
-    identity is always correct, just cache-colder."""
-    if fn is None:
-        return None
-    code = getattr(fn, "__code__", None)
-    if code is None:
-        return fn
-    try:
-        cells = tuple(c.cell_contents for c in
-                      (getattr(fn, "__closure__", None) or ()))
-        # bound methods share module/qualname/code/closure across
-        # instances — the receiver must be part of the key, as must
-        # keyword-only defaults (they don't appear in __defaults__)
-        kwdefs = tuple(sorted((getattr(fn, "__kwdefaults__", None)
-                               or {}).items()))
-        extras = (getattr(fn, "__self__", None), cells,
-                  getattr(fn, "__defaults__", None) or (), kwdefs)
-        hash(extras)
-    except (TypeError, ValueError):
-        return fn
-    return (fn.__module__, fn.__qualname__, code, extras)
-
-
 def program_signature(program: Program):
     """A hashable identity for a program: two structurally identical
     programs (same rules/axioms/goals/loop order, same kernel callables
-    — rebuilt lambdas compare by code object, see :func:`_fn_key`)
-    share compiled artifacts."""
+    — rebuilt lambdas compare by code object, see
+    :func:`repro.core.plan.fn_key`) share compiled artifacts."""
 
     def params(ps):
         return tuple((p.name, str(p.pattern)) for p in ps)
@@ -134,13 +111,19 @@ def program_signature(program: Program):
 
 
 def clear_compile_cache() -> None:
-    """Drop every memoized compilation (all backends)."""
+    """Drop every memoized compilation (all backends, both levels)."""
     _CACHE.clear()
+    _PLAN_CACHE.clear()
 
 
 def compile_cache_size() -> int:
-    """Number of live entries in the compile cache."""
+    """Number of live entries in the signature-level compile cache."""
     return len(_CACHE)
+
+
+def plan_cache_size() -> int:
+    """Number of live entries in the plan-level (Pallas) compile cache."""
+    return len(_PLAN_CACHE)
 
 
 def _build_plan(program: Program):
@@ -153,13 +136,14 @@ def _build_plan(program: Program):
 
 def pallas_auto_viable(plan: StoragePlan) -> bool:
     """Whether ``backend="auto"`` should offer this plan to the stencil
-    executor.
+    interpreter.
 
     Single-nest schedules over a >= 2-dim loop order always qualify —
-    the executor now covers rolling/row contraction, reductions (carried,
-    kept-prefix and row-kept accumulators), outer grids, outer-dim halo
-    reads via plane windows, and cross-row materialized reads, and
-    shapes it still rejects fail the probe with
+    the interpreter now covers rolling/row contraction, reductions
+    (carried, kept-prefix and row-kept accumulators), outer grids,
+    outer-dim halo reads via plane windows (streamed *and* same-nest
+    produced variables), and cross-row materialized reads, and shapes
+    the planner still rejects fail the probe with
     :class:`PallasUnsupported` and fall back to JAX.  Multi-nest (split)
     schedules qualify only when the program is a registered measured win
     (:func:`register_pallas_split_win`)."""
@@ -170,18 +154,46 @@ def pallas_auto_viable(plan: StoragePlan) -> bool:
     return plan.schedule.program.name in PALLAS_SPLIT_WINS
 
 
-def _pallas_auto_probe(plan, idag, *, dtype, interpret, double_buffer):
+def _emit_pallas(plan, idag, *, dtype, interpret, double_buffer,
+                 use_cache=True) -> PallasGenerated:
+    """Plan, then interpret — through the plan-level cache.
+
+    The planner runs unconditionally (it is cheap and raises
+    :class:`PallasUnsupported` for unsupported shapes); the interpreter
+    construction is memoized on :meth:`KernelPlan.cache_key` plus the
+    execution flags, so programs lowering to structurally equal plans
+    share one compiled executor."""
+    kplan = plan_pallas(plan, idag)
+    pkey = (kplan.cache_key(), jnp.dtype(dtype).name, bool(interpret),
+            bool(double_buffer))
+    if use_cache:
+        hit = _PLAN_CACHE.get(pkey)
+        if hit is not None:
+            return hit
+    # imported here: the interpreter module imports the plan IR from
+    # repro.core, so a module-level import would be circular
+    from ..kernels.stencil2d.kernel import execute_plan
+    fn = execute_plan(kplan, dtype=dtype, interpret=interpret,
+                      double_buffer=double_buffer)
+    gen = PallasGenerated(kplan, fn, plan)
+    if use_cache:
+        _PLAN_CACHE[pkey] = gen
+    return gen
+
+
+def _pallas_auto_probe(plan, idag, *, dtype, interpret, double_buffer,
+                       use_cache=True):
     """The single auto-routing probe shared by :func:`compile_program`
     and :func:`explain`: build the Pallas execution if the plan is
-    viable, return None (fall back to JAX) if it is not or extraction
+    viable, return None (fall back to JAX) if it is not or the planner
     raises :class:`PallasUnsupported`.  Keeping one probe guarantees
     ``explain`` reports exactly the backend ``compile_program`` would
     pick for the same flags."""
     if not pallas_auto_viable(plan):
         return None
     try:
-        return generate_pallas(plan, idag, dtype=dtype, interpret=interpret,
-                               double_buffer=double_buffer)
+        return _emit_pallas(plan, idag, dtype=dtype, interpret=interpret,
+                            double_buffer=double_buffer, use_cache=use_cache)
     except PallasUnsupported:
         return None
 
@@ -216,11 +228,12 @@ def compile_program(
     if backend == "jax":
         gen: Union[Generated, PallasGenerated] = generate(plan, idag)
     elif backend == "pallas":
-        gen = generate_pallas(plan, idag, dtype=dtype, interpret=interpret,
-                              double_buffer=double_buffer)
+        gen = _emit_pallas(plan, idag, dtype=dtype, interpret=interpret,
+                           double_buffer=double_buffer, use_cache=use_cache)
     else:
         gen = _pallas_auto_probe(plan, idag, dtype=dtype, interpret=interpret,
-                                 double_buffer=double_buffer)
+                                 double_buffer=double_buffer,
+                                 use_cache=use_cache)
         if gen is None:
             gen = generate(plan, idag)
     if use_cache:
@@ -233,21 +246,26 @@ def compile_program(
 
 
 def explain(program: Program, *, dtype=jnp.float32, interpret: bool = True,
-            double_buffer: bool = False) -> str:
+            double_buffer: bool = False, verbose: bool = False) -> str:
     """Human-readable transformation report (the paper's debugging output).
 
     The keyword flags mirror :func:`compile_program` and feed the same
     shared probe (:func:`_pallas_auto_probe`), so the reported
     ``auto backend`` is exactly what ``backend="auto"`` would pick for a
     compilation with those flags — including split-win routing and
-    non-default ``double_buffer``/``dtype``."""
+    non-default ``double_buffer``/``dtype``.
+
+    ``verbose=True`` appends the rendered
+    :class:`~repro.core.plan.KernelPlan` (grid ranges, window and
+    accumulator plans, per-step reads/writes, output trim rules) when
+    the probe lowered one — the declarative contract the interpreter
+    will execute."""
     idag, plan = _build_plan(program)
     schedule = plan.schedule
     dag = schedule.dag
-    backend = "jax"
-    if _pallas_auto_probe(plan, idag, dtype=dtype, interpret=interpret,
-                          double_buffer=double_buffer) is not None:
-        backend = "pallas"
+    gen = _pallas_auto_probe(plan, idag, dtype=dtype, interpret=interpret,
+                             double_buffer=double_buffer)
+    backend = "pallas" if gen is not None else "jax"
     lines = [
         f"program: {program.name}",
         f"raps: {len(idag.raps)}  groups: {len(dag.groups)}  "
@@ -258,4 +276,10 @@ def explain(program: Program, *, dtype=jnp.float32, interpret: bool = True,
         "--- storage plan ---",
         plan.summary(),
     ]
+    if verbose:
+        lines.append("--- kernel plan ---")
+        if gen is not None:
+            lines.append(gen.kernel_plan.render())
+        else:
+            lines.append("(auto picked the JAX backend: no stencil plan)")
     return "\n".join(lines)

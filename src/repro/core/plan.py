@@ -1,0 +1,740 @@
+"""The KernelPlan IR: the declarative seam between analysis and execution.
+
+HFAV's separation of concerns — *what* a loop nest must compute
+(dependences, access patterns; Sections 3.2-3.4 of the paper) versus
+*how* storage and iteration are laid out (fusion, contraction,
+vectorization; Section 3.5) — is realized here as an explicit,
+serializable intermediate representation.  The Pallas **planner**
+(:func:`repro.core.codegen_pallas.plan_pallas`) lowers a storage plan to
+a :class:`KernelPlan`; the Pallas **interpreter**
+(:func:`repro.kernels.stencil2d.kernel.execute_plan`) runs one without
+ever consulting the analysis pipeline.  The two sides share *only* this
+module, so each is testable in isolation (golden-plan snapshots on the
+planner, hand-built plans on the interpreter) and the engine can key its
+compile cache on plan structure (:meth:`KernelPlan.cache_key`).
+
+Everything in the IR is a frozen dataclass of plain values.  Kernel
+callables are deliberately **outside** structural identity: each
+:class:`CallPlan` carries its function table in a ``compare=False``
+field, and steps reference it by index — two plans built from rebuilt
+lambdas compare (and hash) equal, while :meth:`KernelPlan.cache_key`
+folds the callables back in structurally via :func:`fn_key`.
+
+All row widths are stored as deltas against the vector-dim size ``Ni``
+(and row counts against ``Nj``, outer-tile counts against ``N_d``) so
+one plan serves every problem size.
+
+This module also owns every ``raise PallasUnsupported`` site: the
+``require_*`` functions are the **validate pass**, invoked by the
+planner while lowering and re-run by :meth:`KernelPlan.validate` on the
+finished IR.  Each raise site carries a ``# doc-row:`` marker tying it
+to the restriction table in docs/BACKENDS.md (enforced by
+``scripts/check_docs.sh``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Callable, Optional, Union
+
+
+class PallasUnsupported(Exception):
+    """A program shape the stencil executor does not cover.
+
+    ``backend="auto"`` treats this as a routing signal and falls back to
+    the JAX backend; ``backend="pallas"`` propagates it.  Messages name
+    the specific restriction and the offending variable or dimension —
+    the live restriction table is docs/BACKENDS.md, and every raise site
+    lives in this module (the planner's validate pass)."""
+
+
+def fn_key(fn):
+    """Structural identity for a kernel callable.
+
+    Keyed on ``(module, qualname, code object, closure cells, defaults)``
+    so structurally identical programs whose kernels are *rebuilt*
+    lambdas (fresh function objects compiled from the same source, e.g.
+    a program-builder called twice) still hit the compile cache.
+    Falls back to the function object itself when there is no code
+    object (builtins/partials) or the closure/defaults are unhashable —
+    identity is always correct, just cache-colder."""
+    if fn is None:
+        return None
+    code = getattr(fn, "__code__", None)
+    if code is None:
+        return fn
+    try:
+        cells = tuple(c.cell_contents for c in
+                      (getattr(fn, "__closure__", None) or ()))
+        # bound methods share module/qualname/code/closure across
+        # instances — the receiver must be part of the key, as must
+        # keyword-only defaults (they don't appear in __defaults__)
+        kwdefs = tuple(sorted((getattr(fn, "__kwdefaults__", None)
+                               or {}).items()))
+        extras = (getattr(fn, "__self__", None), cells,
+                  getattr(fn, "__defaults__", None) or (), kwdefs)
+        hash(extras)
+    except (TypeError, ValueError):
+        return fn
+    return (fn.__module__, fn.__qualname__, code, extras)
+
+
+# ---------------------------------------------------------------------------
+# IR dataclasses
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class GridDim:
+    """One Pallas grid dimension covering the canonical range
+    ``[lo, N_dim + hi_off)`` — non-zero bounds when goals/axioms narrow
+    the dim or plane windows prepend warm-up tiles.  The last grid dim
+    of a :class:`CallPlan` is always the row dim."""
+
+    dim: str
+    lo: int = 0
+    hi_off: int = 0
+
+
+@dataclass(frozen=True)
+class AxiomPlan:
+    """Shape contract of one external input array: its dims (outermost
+    first) and per-dim ``(dim, size_symbol, lo, hi)`` extents — array
+    length along a dim is ``size + hi - lo``.  The interpreter resolves
+    concrete dim sizes from the runtime array shapes through these."""
+
+    array: str
+    dims: tuple[str, ...]
+    extents: tuple[tuple[str, str, int, int], ...]
+
+
+@dataclass(frozen=True)
+class InputPlan:
+    """One streamed input of a stencil call.
+
+    Array inputs cover positions ``[j_lo, Nj + j_hi) x [i_lo, Ni + i_hi)``
+    of the iteration space (array index = position - origin) and stream
+    one row per grid step into a ``stages``-row VMEM window at ``lead``
+    rows ahead of the canonical point.  ``n_outer`` is the number of
+    *outer* grid dimensions the array itself carries (fewer than the
+    grid's broadcasts over the leading outer dims);
+    ``outer_los``/``outer_his`` are its per-outer-dim origins.  Scalar
+    inputs are 0-dim values passed as a single ``(1, 1)`` block.
+
+    ``p_stages > 1`` (or a non-zero ``p_lead``) switches the input to
+    *plane-window* mode: VMEM holds a ``(p_stages, rows, width)`` window
+    of whole planes rotated across outer tiles of the plane dim (the
+    grid's last outer dim), the streamed row landing in the newest plane
+    ``p_lead`` tiles ahead, while older planes stay resident for
+    ``u[k-1]``-style reads."""
+
+    name: str
+    stages: int = 1
+    lead: int = 0
+    j_lo: int = 0
+    j_hi: int = 0  # array rows = Nj + (j_hi - j_lo)
+    i_lo: int = 0
+    i_hi: int = 0  # array cols = Ni + (i_hi - i_lo)
+    scalar: bool = False
+    n_outer: int = 0  # outer grid dims carried by the array itself
+    p_stages: int = 1  # planes kept resident
+    p_lead: int = 0  # plane-dim stream lead (tiles ahead)
+    outer_los: tuple[int, ...] = ()  # per-outer-dim array origins
+    outer_his: tuple[int, ...] = ()
+
+    @property
+    def plane(self) -> bool:
+        """Whether this input streams through a multi-plane VMEM window."""
+        return self.p_stages > 1 or self.p_lead != 0
+
+
+@dataclass(frozen=True)
+class WindowPlan:
+    """One VMEM window for a variable *produced inside* the stencil call.
+
+    Rolling mode (``p_stages == 1``): ``stages`` rows covering column
+    positions ``[i_lo, Ni + i_hi)``, rotated by mod-``stages`` row
+    arithmetic (Fig. 9a/9b) — serves cross-row (j-offset) reads.
+
+    Plane mode (``p_stages > 1`` or ``p_lead != 0``): whole planes of
+    ``Nj + j_hi - j_lo`` rows stay resident across outer tiles of the
+    plane dim; the producer runs ``p_lead`` tiles ahead and writes into
+    the newest plane slot (mod-``p_stages``), rows addressed absolutely
+    — serves same-nest ``v[k-1][j][i]``-style reads (the *producer
+    plane window*, the outer-dim analogue of the rolling row window)."""
+
+    name: str
+    stages: int
+    i_lo: int = 0
+    i_hi: int = 0
+    p_stages: int = 1
+    p_lead: int = 0  # producer's plane-dim software-pipeline lead
+    j_lo: int = 0
+    j_hi: int = 0  # plane rows = Nj + (j_hi - j_lo) (plane mode only)
+
+    @property
+    def plane(self) -> bool:
+        """Whether this window keeps whole planes resident."""
+        return self.p_stages > 1 or self.p_lead != 0
+
+
+@dataclass(frozen=True)
+class AccPlan:
+    """One carried accumulator row (vector partial accumulator of a
+    fused reduction): width ``Ni + w_off``, initialized to ``init``.
+
+    ``n_kept`` counts the *leading* outer grid dims the reduction output
+    keeps: 0 carries one running row across the entire grid (the k-tiled
+    form); >= 1 re-initializes the row at the first step of every
+    kept-prefix tile and emits one combined row per tile."""
+
+    name: str
+    w_off: int
+    init: float
+    n_kept: int = 0
+
+    @property
+    def per_outer(self) -> bool:
+        """Whether the row re-initializes per kept-prefix outer tile."""
+        return self.n_kept > 0
+
+
+@dataclass(frozen=True)
+class ReadPlan:
+    """One operand read of a fused step.
+
+    ``src`` resolves against the call's namespace: ``in_<name>`` (a
+    streamed input's window), ``b_<name>`` (a produced VMEM window),
+    ``local:<name>`` (a same-grid-step row), or ``scalar:<name>``.
+    ``j_off`` is the total row offset (consumer lead + stencil offset),
+    ``p_off`` the total plane position (consumer plane lead + stencil
+    offset) for plane-window sources; the read covers columns
+    ``[col0, col0 + Ni + w_off)`` in iteration-space positions."""
+
+    src: str
+    j_off: int
+    col0: int
+    w_off: int
+    p_off: int = 0
+
+
+@dataclass(frozen=True)
+class StepPlan:
+    """One fused kernel at its software-pipeline lead.
+
+    ``op`` names the kernel rule (rendering/serialization); ``fn_idx``
+    indexes the owning :class:`CallPlan`'s function table.  ``writes``
+    holds one tuple of targets per produced value; each target is
+    ``('buf', name) | ('local', name) | ('out', index)`` — a value may
+    go to several targets.  The produced row covers columns
+    ``[out_col0, out_col0 + Ni + out_w_off)``.
+
+    Reduction steps set ``acc``: the named accumulator row is prepended
+    to the kernel arguments and the combined result stored back,
+    predicated on the canonical row position lying inside ``valid`` =
+    ``(lo, hi_off)`` and every outer-dim position inside the matching
+    ``valid_outer`` entry (warm-up/drain tiles must not pollute)."""
+
+    op: str
+    fn_idx: int
+    reads: tuple[ReadPlan, ...]
+    writes: tuple[tuple[tuple[str, Union[str, int]], ...], ...]
+    lead: int
+    out_col0: int = 0
+    out_w_off: int = 0
+    acc: Optional[str] = None
+    valid: tuple[int, int] = (0, 0)
+    valid_outer: tuple[tuple[int, int], ...] = ()
+
+
+@dataclass(frozen=True)
+class OutputPlan:
+    """One stencil-call output and its host-side trim/seat rule.
+
+    ``kind`` selects the assembly: ``'external'`` (a goal array row
+    stream re-seated at its goal origin), ``'full'`` (a halo'd
+    materialized intermediate kept in its own origin frame), ``'acc'``
+    (a carried/kept-prefix accumulator block, lane-reduced via
+    ``reduce_idx`` when the vector dim was folded) or ``'acc_rows'``
+    (row-kept reductions: one identity-padded partial row per grid
+    step, lane-reduced on the host).  ``outer_lo``/``outer_hi`` give the
+    bound variable's canonical extent ``[lo, N_d + hi)`` per outer grid
+    dim; ``outer_lead`` the producing step's per-outer-dim pipeline lead
+    (a plane-window producer running tiles ahead writes its output that
+    many blocks early); ``fill`` pads device rows outside the computed
+    span (the combine identity for ``acc_rows``)."""
+
+    name: str
+    kind: str  # 'external' | 'full' | 'acc' | 'acc_rows'
+    lead: int = 0
+    j_lo: int = 0
+    j_hi: int = 0
+    i_lo: int = 0
+    i_hi: int = 0
+    outer_lo: tuple[int, ...] = ()
+    outer_hi: tuple[int, ...] = ()
+    outer_lead: tuple[int, ...] = ()
+    acc: Optional[str] = None
+    fill: float = 0.0
+    n_kept: int = 0
+    reduce_idx: Optional[int] = None  # lane reduction, into CallPlan.fns
+    reduce_init: float = 0.0
+
+
+@dataclass(frozen=True)
+class HostStepPlan:
+    """A 0-dim kernel executed on the host before/after a stencil call,
+    reading and writing named environment entries."""
+
+    op: str
+    fn_idx: int
+    reads: tuple[str, ...]
+    writes: tuple[str, ...]
+
+
+@dataclass(frozen=True)
+class CallPlan:
+    """One top-level fused nest: host prologue steps, at most one
+    stencil call (``grid`` empty for host-only nests), host epilogue
+    steps.  ``grid`` lists outer dims first and the row dim last; the
+    vector dim is folded across lanes.  ``fns`` is the call's kernel
+    function table — excluded from structural equality (steps reference
+    it by index; :meth:`KernelPlan.cache_key` re-keys it via
+    :func:`fn_key`)."""
+
+    name: str
+    grid: tuple[GridDim, ...]
+    vec_dim: str
+    inputs: tuple[InputPlan, ...] = ()
+    windows: tuple[WindowPlan, ...] = ()
+    accs: tuple[AccPlan, ...] = ()
+    steps: tuple[StepPlan, ...] = ()
+    outputs: tuple[OutputPlan, ...] = ()
+    host_pre: tuple[HostStepPlan, ...] = ()
+    host_post: tuple[HostStepPlan, ...] = ()
+    fns: tuple[Callable, ...] = field(default=(), compare=False, repr=False)
+
+    @property
+    def has_grid(self) -> bool:
+        """Whether this nest lowers to a stencil call at all."""
+        return bool(self.grid)
+
+    @property
+    def n_outer(self) -> int:
+        """Grid dims ahead of the row dim."""
+        return len(self.grid) - 1
+
+    @property
+    def row_dim(self) -> str:
+        """The grid's final (fastest) dimension identifier."""
+        return self.grid[-1].dim
+
+    @property
+    def x_lo(self) -> int:
+        """Canonical row-loop start (negative = pipeline priming rows)."""
+        return self.grid[-1].lo
+
+    @property
+    def x_hi_off(self) -> int:
+        """Row-loop end offset: rows cover ``[x_lo, Nj + x_hi_off)``."""
+        return self.grid[-1].hi_off
+
+    @property
+    def outer_lo(self) -> tuple[int, ...]:
+        """Per-outer-dim canonical range starts."""
+        return tuple(g.lo for g in self.grid[:-1])
+
+    @property
+    def outer_hi_off(self) -> tuple[int, ...]:
+        """Per-outer-dim canonical range end offsets."""
+        return tuple(g.hi_off for g in self.grid[:-1])
+
+
+@dataclass(frozen=True)
+class KernelPlan:
+    """A complete, declarative execution plan for one program on the
+    stencil executor: the planner's output, the interpreter's input.
+
+    ``dim_sizes`` maps every loop identifier to its runtime size symbol;
+    ``goal_outputs`` pairs each goal's store name with the environment
+    variable holding it after the final call."""
+
+    program: str
+    loop_order: tuple[str, ...]
+    dim_sizes: tuple[tuple[str, str], ...]
+    axioms: tuple[AxiomPlan, ...]
+    goal_outputs: tuple[tuple[str, str], ...]
+    calls: tuple[CallPlan, ...]
+
+    def validate(self) -> "KernelPlan":
+        """Re-run the restriction checks expressible over the finished
+        IR (the planner already ran the context-dependent ones while
+        lowering).  Raises :class:`PallasUnsupported` for restriction
+        violations and ``ValueError`` for structurally malformed plans;
+        returns ``self`` so the planner can ``return plan.validate()``."""
+        require_loop_order(self.loop_order)
+        jdim, inner = self.loop_order[-2], self.loop_order[-1]
+        for call in self.calls:
+            if not call.has_grid:
+                continue
+            if call.row_dim != jdim or call.vec_dim != inner:
+                raise ValueError(
+                    f"call {call.name}: grid row/vector dims "
+                    f"({call.row_dim!r}, {call.vec_dim!r}) disagree with "
+                    f"the loop order {self.loop_order}")
+            names = {f"in_{i.name}" for i in call.inputs if not i.scalar}
+            names |= {f"scalar:{i.name}" for i in call.inputs if i.scalar}
+            names |= {w.name for w in call.windows}
+            accs = {a.name for a in call.accs}
+            for a in call.accs:
+                require_kept_prefix_len(a.name, a.n_kept, call.n_outer)
+            locals_: set[str] = set()
+            for s in call.steps:
+                for targets in s.writes:
+                    for kind, tgt in targets:
+                        if kind == "local":
+                            locals_.add(f"local:{tgt}")
+            plane_srcs = {f"in_{i.name}" for i in call.inputs if i.plane}
+            plane_srcs |= {w.name for w in call.windows if w.plane}
+            for s in call.steps:
+                if s.acc is not None and s.acc not in accs:
+                    raise ValueError(
+                        f"call {call.name}: step {s.op} names unknown "
+                        f"accumulator {s.acc!r}")
+                for rd in s.reads:
+                    if rd.src not in names and rd.src not in locals_:
+                        raise ValueError(
+                            f"call {call.name}: step {s.op} reads "
+                            f"unresolved source {rd.src!r}")
+                    if rd.p_off and rd.src not in plane_srcs:
+                        require_plane_window_read(rd.src, rd.p_off)
+                for targets in s.writes:
+                    for kind, tgt in targets:
+                        if kind == "out" and not (
+                                0 <= int(tgt) < len(call.outputs)):
+                            raise ValueError(
+                                f"call {call.name}: step {s.op} writes "
+                                f"out-of-range output {tgt}")
+                if s.valid_outer and len(s.valid_outer) != call.n_outer:
+                    raise ValueError(
+                        f"call {call.name}: step {s.op} valid_outer rank "
+                        f"{len(s.valid_outer)} != n_outer {call.n_outer}")
+            for out in call.outputs:
+                if out.kind in ("external", "full", "acc_rows"):
+                    require_output_row_span(out.name, out.i_lo, out.i_hi)
+                if out.acc is not None and out.acc not in accs:
+                    raise ValueError(
+                        f"call {call.name}: output {out.name} names "
+                        f"unknown accumulator {out.acc!r}")
+        return self
+
+    def render(self) -> str:
+        """Human-readable plan dump (``explain(..., verbose=True)``)."""
+        lines = [f"kernel plan: {self.program}",
+                 f"  loop order: ({', '.join(self.loop_order)})"]
+        for call in self.calls:
+            if not call.has_grid:
+                lines.append(f"  call {call.name}: host-only")
+            else:
+                gd = " x ".join(
+                    f"{g.dim}=[{g.lo}, N{g.dim}{g.hi_off:+d})"
+                    for g in call.grid)
+                lines.append(f"  call {call.name}: grid {gd}")
+            for hs in call.host_pre:
+                lines.append(f"    host pre  {hs.op}: "
+                             f"{', '.join(hs.reads)} -> "
+                             f"{', '.join(hs.writes)}")
+            for i in call.inputs:
+                if i.scalar:
+                    lines.append(f"    input {i.name}: scalar")
+                    continue
+                desc = (f"    input {i.name}: rows[{i.j_lo},{i.j_hi:+d}] "
+                        f"cols[{i.i_lo},{i.i_hi:+d}] lead={i.lead} "
+                        f"stages={i.stages}")
+                if i.plane:
+                    desc += (f" plane_window={i.p_stages}"
+                             f" p_lead={i.p_lead}")
+                lines.append(desc)
+            for w in call.windows:
+                if w.plane:
+                    lines.append(
+                        f"    window {w.name}: {w.p_stages} planes "
+                        f"p_lead={w.p_lead} rows[{w.j_lo},{w.j_hi:+d}] "
+                        f"cols[{w.i_lo},{w.i_hi:+d}]")
+                else:
+                    lines.append(f"    window {w.name}: {w.stages} rows "
+                                 f"cols[{w.i_lo},{w.i_hi:+d}]")
+            for a in call.accs:
+                lines.append(f"    acc {a.name}: width Ni{a.w_off:+d} "
+                             f"init={a.init} n_kept={a.n_kept}")
+            for s in call.steps:
+                rd = ", ".join(
+                    f"{r.src}[{('p%+d ' % r.p_off) if r.p_off else ''}"
+                    f"j{r.j_off:+d}]" for r in s.reads)
+                wr = "; ".join(
+                    ",".join(f"{k}:{t}" for k, t in targets)
+                    for targets in s.writes) or (f"acc:{s.acc}")
+                lines.append(f"    step {s.op} @lead {s.lead}: "
+                             f"reads [{rd}] -> {wr}")
+            for o in call.outputs:
+                lines.append(
+                    f"    out {o.name}: {o.kind} lead={o.lead} "
+                    f"rows[{o.j_lo},{o.j_hi:+d}]"
+                    + (f" outer_lead={o.outer_lead}"
+                       if any(o.outer_lead) else ""))
+            for hs in call.host_post:
+                lines.append(f"    host post {hs.op}: "
+                             f"{', '.join(hs.reads)} -> "
+                             f"{', '.join(hs.writes)}")
+        lines.append("  goals: " + ", ".join(
+            f"{store}<-{var}" for store, var in self.goal_outputs))
+        return "\n".join(lines)
+
+    def to_json(self) -> str:
+        """Serialize the plan (function tables rendered as op names —
+        the IR is declarative; callables travel separately)."""
+        def strip(obj):
+            if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+                d = {}
+                for f in dataclasses.fields(obj):
+                    if f.name == "fns":
+                        continue
+                    d[f.name] = strip(getattr(obj, f.name))
+                return d
+            if isinstance(obj, (list, tuple)):
+                return [strip(x) for x in obj]
+            return obj
+        return json.dumps(strip(self), indent=1, sort_keys=True)
+
+    def cache_key(self):
+        """Hashable identity for compiled-executor caching: the plan's
+        structural equality plus the kernel callables keyed by
+        :func:`fn_key` — plans that differ structurally, or whose
+        kernels differ behaviorally, get distinct entries."""
+        return (self, tuple(tuple(fn_key(f) for f in c.fns)
+                            for c in self.calls))
+
+
+# ---------------------------------------------------------------------------
+# The validate pass: every PallasUnsupported raise site lives below.
+# The planner invokes these while lowering (context-dependent checks);
+# KernelPlan.validate() re-runs the IR-expressible subset.
+# ---------------------------------------------------------------------------
+
+def require_loop_order(loop_order: tuple[str, ...]) -> None:
+    """The executor needs at least a (row, vector) identifier pair."""
+    if len(loop_order) < 2:
+        # doc-row: loop order shorter than
+        raise PallasUnsupported(
+            f"loop order {loop_order} has {len(loop_order)} dim(s): the "
+            f"stencil executor needs at least a (row, vector) pair")
+
+
+def require_host_group_0dim(group: str, dims: tuple[str, ...]) -> None:
+    """Host-side groups must be 0-dim kernels."""
+    if dims:
+        # doc-row: host kernels between stencil calls
+        raise PallasUnsupported(
+            f"host-side group {group} iterates {dims}: only 0-dim "
+            f"kernels can run between stencil calls")
+
+
+def require_host_read_no_offset(group: str, var: str) -> None:
+    """Host-side kernels read their operands at offset zero."""
+    # doc-row: host kernels between stencil calls
+    raise PallasUnsupported(
+        f"group {group} reads {var} at a non-zero offset: 0-dim host "
+        f"kernels cannot read offsets")
+
+
+def require_host_orderable(group: str, jdim: str) -> None:
+    """Host steps must order entirely before or after the grid."""
+    # doc-row: host kernels between stencil calls
+    raise PallasUnsupported(
+        f"group {group} cannot be ordered around the {jdim}-grid")
+
+
+def require_nest_outputs(nest_idx: int) -> None:
+    """Every grid nest must produce at least one output."""
+    # doc-row: host kernels between stencil calls
+    raise PallasUnsupported(f"nest {nest_idx} produces no outputs")
+
+
+def require_offset_in_window_dims(var: str, dim: str, off: int,
+                                  pdim: Optional[str], jdim: str,
+                                  inner: str) -> None:
+    """Stencil offsets live in the innermost three dims: row, vector,
+    and the plane dim (served by plane windows)."""
+    # doc-row: stencil offsets beyond the plane dim
+    raise PallasUnsupported(
+        f"read of {var} at offset {off:+d} in outer dim {dim!r}: "
+        f"stencil offsets are only supported in the innermost three "
+        f"dims ({pdim!r}, {jdim!r}, {inner!r})")
+
+
+def require_no_nonplane_lead(group: str, dim: str, lead: int) -> None:
+    """Only the plane dim supports software-pipeline leads across outer
+    tiles (a producer plane window); leads in any other outer dim would
+    need volume windows."""
+    # doc-row: stencil offsets beyond the plane dim
+    raise PallasUnsupported(
+        f"group {group} runs {lead} tile(s) ahead in outer dim {dim!r}: "
+        f"producers may only run ahead in the plane dim (plane windows); "
+        f"offsets beyond the plane dim need volume windows")
+
+
+def require_plane_window_read(src: str, p_off: int) -> None:
+    """A plane-offset read must resolve to a plane-window source."""
+    # doc-row: stencil offsets beyond the plane dim
+    raise PallasUnsupported(
+        f"plane-offset read (p{p_off:+d}) of {src}: the source has no "
+        f"plane window")
+
+
+def require_streamed_suffix(name: str, dims: tuple[str, ...],
+                            loop_order: tuple[str, ...]) -> None:
+    """Streamed arrays span a >= 2-D suffix of the loop order."""
+    rank = len(dims)
+    if rank < 2 or tuple(dims) != tuple(loop_order[-rank:]):
+        # doc-row: streamed input dims not a suffix of the loop order
+        raise PallasUnsupported(
+            f"streamed input {name} spans dims {dims}: the executor "
+            f"streams arrays whose dims are a suffix of the loop order "
+            f"{loop_order} ending in ({loop_order[-2]!r}, "
+            f"{loop_order[-1]!r}); 1-D row variables cannot cross a "
+            f"stencil-call boundary")
+
+
+def require_nest_order(name: str) -> None:
+    """A nest may only stream variables produced by earlier nests."""
+    # doc-row: streamed input dims not a suffix of the loop order
+    raise PallasUnsupported(f"{name} consumed before its producing nest")
+
+
+def require_materialized_extents(name: str) -> None:
+    """Materialized intermediates need (j, i) extents to cross calls."""
+    # doc-row: streamed input dims not a suffix of the loop order
+    raise PallasUnsupported(f"materialized {name} lacks (j, i) extents")
+
+
+def require_scalar_acc_stream(name: str, dims: tuple[str, ...]) -> None:
+    """Only fully-reduced scalars stream between stencil calls."""
+    # doc-row: cross-call read of a vector accumulator
+    raise PallasUnsupported(
+        f"cross-call read of vector accumulator {name} (dims {dims}): "
+        f"only fully-reduced scalars stream between stencil calls")
+
+
+def require_representable_read(name: str, kind: str) -> None:
+    """Reads must resolve to a streamed window, VMEM window, or local."""
+    # doc-row: cross-call read of a vector accumulator
+    raise PallasUnsupported(
+        f"read of {name}: storage kind {kind!r} is not representable "
+        f"inside a stencil call")
+
+
+def require_representable_write(name: str, kind: str) -> None:
+    """Writes must target a window, local row, or call output."""
+    # doc-row: cross-call read of a vector accumulator
+    raise PallasUnsupported(
+        f"write of {name}: storage kind {kind!r} is not representable "
+        f"inside a stencil call")
+
+
+def require_reduction_result_kind(name: str, kind: str) -> None:
+    """Reduction results are accumulators or terminal outputs."""
+    if kind not in ("acc", "external_out"):
+        # doc-row: cross-call read of a vector accumulator
+        raise PallasUnsupported(
+            f"reduction result {name} of storage kind {kind!r}: only "
+            f"accumulator or terminal results are supported")
+
+
+def require_full_outer_iteration(group: str, missing: list[str],
+                                 loop_order: tuple[str, ...]) -> None:
+    """Every kernel fused into an outer grid iterates all of it."""
+    # doc-row: kernels not iterating the full outer grid
+    raise PallasUnsupported(
+        f"group {group} lacks outer grid dim(s) {missing}: every kernel "
+        f"fused into a {'/'.join(loop_order)} nest must iterate the "
+        f"full outer grid")
+
+
+def require_row_contraction(name: str, dim: Optional[str],
+                            jdim: str) -> None:
+    """Rolling buffers contract over the row dim only."""
+    if dim != jdim:
+        # doc-row: contraction over a non-row dim
+        raise PallasUnsupported(
+            f"rolling buffer {name} contracts over dim {dim!r}: the "
+            f"executor only carries windows across the row dim {jdim!r}")
+
+
+def require_reduction_iterates_vector(group: str) -> None:
+    """Reductions must iterate the vector dim (lane accumulators)."""
+    # doc-row: reductions not iterating the vector dim
+    raise PallasUnsupported(
+        f"reduction {group} does not iterate the vector dim")
+
+
+def require_row_kept_vector_only(name: str, jdim: str,
+                                 reduced: tuple[str, ...],
+                                 inner: str) -> None:
+    """Row-kept reductions may only fold the vector dim."""
+    if set(reduced) != {inner}:
+        # doc-row: row-kept reductions reducing an outer dim
+        raise PallasUnsupported(
+            f"reduction output {name} keeps the row dim {jdim!r} while "
+            f"reducing {reduced}: row-kept reductions may only reduce "
+            f"the vector dim {inner!r}")
+
+
+def require_kept_prefix(name: str, kept_outer: tuple[str, ...],
+                        outer_dims: tuple[str, ...]) -> None:
+    """Kept outer dims of a reduction form a leading grid prefix."""
+    if kept_outer != tuple(outer_dims[:len(kept_outer)]):
+        # doc-row: reductions keeping a non-prefix outer subset
+        raise PallasUnsupported(
+            f"reduction output {name} keeps outer dims {kept_outer} of "
+            f"a {outer_dims} grid: kept outer dims must form a leading "
+            f"prefix of the grid (the accumulator re-initializes per "
+            f"kept tile)")
+
+
+def require_kept_prefix_len(name: str, n_kept: int, n_outer: int) -> None:
+    """An accumulator cannot keep more outer dims than the grid has."""
+    if n_kept > n_outer:
+        # doc-row: reductions keeping a non-prefix outer subset
+        raise PallasUnsupported(
+            f"accumulator {name} keeps {n_kept} outer dim(s) of a "
+            f"{n_outer}-outer grid")
+
+
+def require_output_row_span(name: str, i_lo: int, i_hi: int,
+                            what: str = "row") -> None:
+    """Device output rows must sit inside the Ni-wide block."""
+    if i_lo < 0 or i_hi > 0:
+        # doc-row: negative innermost origins on outputs
+        raise PallasUnsupported(
+            f"{what} of {name} spans [{i_lo}, Ni{i_hi:+d}): outside the "
+            f"Ni-wide output row")
+
+
+def require_matching_producer_extent(name: str) -> None:
+    """A materialized variable's producer must cover its full extent."""
+    # doc-row: negative innermost origins on outputs
+    raise PallasUnsupported(
+        f"{name}: producer extent differs from variable extent; cannot "
+        f"materialize across calls")
+
+
+def require_same_step_position(name: str, kind: str, pos: int,
+                               prod_pos: int) -> None:
+    """Same-step (local) reads must match the producer's row position —
+    row/scalar variables carry no window to bridge a lead mismatch."""
+    if pos != prod_pos:
+        # doc-row: lead-mismatched same-step reads
+        raise PallasUnsupported(
+            f"read of same-nest {kind} variable {name} at row position "
+            f"{pos} but produced at {prod_pos}: variables without a "
+            f"VMEM window cannot be read across rows")

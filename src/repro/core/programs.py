@@ -264,6 +264,107 @@ def heat3d_program(name: str = "heat3d") -> Program:
     )
 
 
+def _stage2(a, b):
+    return 0.5 * (a + b)
+
+
+def heat3d_stage_program(name: str = "heat3d_stage") -> Program:
+    """A two-stage 3-D heat pipeline: pre-smooth, then the 7-point
+    stencil over the *pre-smoothed* field.
+
+    The ``st(u[k-1])``/``st(u[k+1])`` reads put a plane-dim stencil
+    offset on a variable *produced in the same nest*: the stage kernel
+    runs one tile ahead of the outer grid (its plane-dim software-
+    pipeline lead) and writes a **producer plane window** — 3 whole
+    planes resident in VMEM, rotated across k tiles — from which the
+    heat kernel reads without any HBM round-trip.  The intermediate is
+    consumed only in-nest, so it is never materialized at all."""
+    k_stage = kernel(
+        "stage",
+        inputs=[("a", "u?[k?][j?][i?]"), ("b", "u?[k?][j?][i?+1]")],
+        outputs=[("o", "st(u?[k?][j?][i?])")],
+        fn=_stage2,
+    )
+    k_heat = kernel(
+        "heat7",
+        inputs=[
+            ("km", "st(u?[k?-1][j?][i?])"),
+            ("kp", "st(u?[k?+1][j?][i?])"),
+            ("n", "st(u?[k?][j?-1][i?])"),
+            ("s", "st(u?[k?][j?+1][i?])"),
+            ("w", "st(u?[k?][j?][i?-1])"),
+            ("e", "st(u?[k?][j?][i?+1])"),
+            ("c", "st(u?[k?][j?][i?])"),
+        ],
+        outputs=[("o", "heat(u?[k?][j?][i?])")],
+        fn=_heat7,
+    )
+    return Program(
+        rules=[k_stage, k_heat],
+        axioms=[axiom("u[k?][j?][i?]", k="Nk", j="Nj", i="Ni")],
+        goals=[goal("heat(u[k][j][i])", store_as="heat",
+                    k=("Nk", 1, -1), j=("Nj", 1, -1), i=("Ni", 1, -2))],
+        loop_order=("k", "j", "i"),
+        name=name,
+    )
+
+
+def _resid2(h, c):
+    d = h - c
+    return d * d
+
+
+def heat3d_residual_norm_program(name: str = "heat3d_residual_norm") -> Program:
+    """The 7-point heat stencil *and* its squared-residual norm in one
+    fused nest — the halo'd reduction the ROADMAP called untested
+    territory.
+
+    ``u`` streams through a 3-plane VMEM window (k +/- 1 halo reads)
+    while the residual reduction's carried accumulator rides the same
+    grid, its combines predicated off the window's warm-up tiles; the
+    heat field is both a terminal output and a same-step operand of the
+    residual kernel."""
+    k_heat = kernel(
+        "heat7",
+        inputs=[
+            ("km", "u?[k?-1][j?][i?]"),
+            ("kp", "u?[k?+1][j?][i?]"),
+            ("n", "u?[k?][j?-1][i?]"),
+            ("s", "u?[k?][j?+1][i?]"),
+            ("w", "u?[k?][j?][i?-1]"),
+            ("e", "u?[k?][j?][i?+1]"),
+            ("c", "u?[k?][j?][i?]"),
+        ],
+        outputs=[("o", "heat(u?[k?][j?][i?])")],
+        fn=_heat7,
+    )
+    k_res = kernel(
+        "resid",
+        inputs=[("h", "heat(u?[k?][j?][i?])"), ("c", "u?[k?][j?][i?]")],
+        outputs=[("r", "resid(u?[k?][j?][i?])")],
+        fn=_resid2,
+    )
+    k_sum = kernel(
+        "res_sum",
+        inputs=[("x", "resid(u[k][j][i])")],
+        outputs=[("acc", "rnorm(u)")],
+        fn=_sum2,
+        kind="reduce",
+        init=0.0,
+    )
+    return Program(
+        rules=[k_heat, k_res, k_sum],
+        axioms=[axiom("u[k?][j?][i?]", k="Nk", j="Nj", i="Ni")],
+        goals=[
+            goal("heat(u[k][j][i])", store_as="heat",
+                 k=("Nk", 1, -1), j=("Nj", 1, -1), i=("Ni", 1, -1)),
+            goal("rnorm(u)", store_as="rnorm"),
+        ],
+        loop_order=("k", "j", "i"),
+        name=name,
+    )
+
+
 def _advect4(km, kp, c, w_):
     return c - 0.25 * (kp - km) + 0.05 * (c - w_)
 

@@ -185,6 +185,27 @@ def dim_window(np_: NestPlan, v: Var, dim: str,
     return lead, window_stages(lead, positions), positions
 
 
+def produced_window(np_: NestPlan, v: Var, dim: str,
+                    within: set[int] | None = None
+                    ) -> tuple[int, int, list[int]]:
+    """``(lead, stages, positions)`` of the window a *produced* variable
+    needs along ``dim`` — the producer-side companion of
+    :func:`dim_window`.
+
+    Where :func:`dim_window` sizes the window of a *streamed* input
+    (whose stream lead floats to the newest consumer position), a
+    produced variable's write position is pinned to its producer's
+    software-pipeline lead in ``dim`` (from :func:`_compute_leads`), so
+    the window must span from that lead back to the oldest consumer
+    position.  The same rule sizes cross-row rolling windows (``dim`` =
+    the row identifier) and producer plane windows carried across the
+    outer grid (``dim`` = the plane identifier)."""
+    assert v.producer is not None
+    lead = np_.lead(v.producer.gid, dim)
+    positions = consumer_positions(np_, v, dim, within)
+    return lead, window_stages(lead, positions), positions
+
+
 def _compute_leads(schedule: FusedSchedule, np_: NestPlan) -> None:
     """lead_P(d) >= lead_C(d) + max read offset in d, minimized, floored at
     0 per nest (longest-path over the nest's internal dataflow edges)."""

@@ -1,22 +1,23 @@
-"""Pallas TPU executor for HFAV-fused stencil pipelines.
+"""Pallas TPU interpreter for HFAV :class:`~repro.core.plan.KernelPlan` IR.
 
 This is the TPU-native realization of the paper's generated code
-(Section 3.6 + the hardware adaptation of DESIGN.md §2): the fused
-iteration nest's steady state becomes the Pallas grid, and *all* rolling
-buffers — including the optional input-row window the paper mentions for
-COSMO — live in VMEM scratch that persists across sequential grid steps.
+(Section 3.6 + the hardware adaptation of DESIGN.md §2), now a pure
+**interpreter**: it consumes the declarative plan produced by
+:func:`repro.core.codegen_pallas.plan_pallas` and contains no analysis
+logic of its own — every grid range, window shape, lead and trim rule
+arrives pre-computed in the plan.  The fused iteration nest's steady
+state becomes the Pallas grid, and *all* rolling buffers — including the
+optional input-row window the paper mentions for COSMO — live in VMEM
+scratch that persists across sequential grid steps.
 
-The grid is ``(*outer, steps_j)``: the loop nest's outer identifiers map
-one-to-one onto leading grid dimensions (``n_outer`` of them, any number
-including zero) and the row identifier ``j`` maps onto the last, so a
-``(j, i)`` nest runs on a 1-D grid, ``(k, j, i)`` on a 2-D grid,
-``(l, k, j, i)`` on a 3-D grid, and so on.  Outer grid dims cover the
-*canonical range* ``[outer_lo[d], N_d + outer_hi_off[d])`` — narrowed
-by halo'd goals and extended downward by plane-window warm-up tiles.
-TPU grids execute sequentially with the last dimension fastest, which
-is exactly the fused nest's traversal order — VMEM scratch therefore
-carries state both across rows *and* across outer-tile boundaries.
-Each grid step:
+The grid is ``(*outer, steps_j)``: the plan's outer :class:`GridDim`
+entries map one-to-one onto leading grid dimensions and the row dim onto
+the last, each covering its canonical range ``[lo, N_d + hi_off)`` —
+narrowed by halo'd goals and extended downward by plane-window warm-up
+tiles.  TPU grids execute sequentially with the last dimension fastest,
+which is exactly the fused nest's traversal order — VMEM scratch
+therefore carries state both across rows *and* across outer-tile
+boundaries.  Each grid step:
 
 1. streams exactly one new row per array input from HBM into that
    input's VMEM window — either through the BlockSpec index map (the DMA
@@ -24,61 +25,59 @@ Each grid step:
    ``double_buffer=True``, through an explicitly double-buffered
    ``make_async_copy`` pair that prefetches the next grid step's row
    while the current one is being consumed.  Inputs read at non-zero
-   offsets in the *plane dim* (the outer identifier adjacent to ``j`` —
-   ``u[k-1][j][i]`` stencils) use a *multi-plane window* instead of a
-   rolling row window: ``(p_stages, rows, width)`` VMEM where whole
-   planes stay resident across outer tiles and the streamed row lands
-   in the newest plane, ``p_lead`` tiles ahead (Fig. 9a/9b applied one
-   loop level further out);
-2. executes every fused kernel at its software-pipeline lead, reading
+   offsets in the *plane dim* (the outer identifier adjacent to the row
+   dim — ``u[k-1][j][i]`` stencils) use a *multi-plane window* instead
+   of a rolling row window: ``(p_stages, rows, width)`` VMEM where whole
+   planes stay resident across outer tiles and the streamed row lands in
+   the newest plane, ``p_lead`` tiles ahead (Fig. 9a/9b applied one loop
+   level further out);
+2. executes every fused step at its software-pipeline lead, reading
    neighbor rows from VMEM windows via mod-``stages`` index arithmetic
    (the functional form of the paper's pointer rotation, Fig. 9a/9b) —
-   and neighbor *planes* via mod-``p_stages`` plane slots; reduction
-   kernels combine into VMEM accumulator rows carried across grid steps
+   and neighbor *planes* via mod-``p_stages`` plane slots.  Variables
+   *produced in the nest* and read at plane offsets write a **producer
+   plane window** (:class:`~repro.core.plan.WindowPlan` in plane mode):
+   the producing step runs ``p_lead`` tiles ahead in the plane dim and
+   seats each row at its absolute plane-row index (store predicated to
+   the plane's row extent), so ``v[k-1][j][i]``-style consumers read
+   older resident planes without a round-trip through HBM.  Reduction
+   steps combine into VMEM accumulator rows carried across grid steps
    (the vector partial accumulators of Section 3.5), predicated on the
    canonical point being inside the reduced extent (rows *and* outer
-   tiles) — an accumulator is either *carried* across the whole grid
-   (k-tiled reduction: one running row survives every outer tile) or
-   re-initialized per tile of the *kept prefix* of outer dims
-   (:attr:`AccSpec.n_kept` — a reduction keeping all outer dims or a
-   leading subset of them); row-kept reductions carry nothing and emit
-   one identity-padded partial row per step instead;
+   tiles) — carried across the whole grid or re-initialized per
+   kept-prefix tile (:attr:`~repro.core.plan.AccPlan.n_kept`); row-kept
+   reductions carry nothing and emit one identity-padded partial row per
+   step instead;
 3. writes one row per terminal output back to HBM; accumulator outputs
    are dumped into a revisited block whose final grid step (per kept
-   tile for kept-prefix accumulators) holds the fully-combined
-   partial-accumulator row.
-
-Inputs may be full-size external arrays over any *suffix* of the loop
-order ending in ``(j, i)`` (:attr:`InSpec.n_outer` counts the outer dims
-the array actually carries, so a 2-D coefficient field broadcasts over
-the outer grid; per-outer-dim origins ride in
-:attr:`InSpec.outer_los`/``outer_his``), halo-trimmed intermediates
-materialized by an earlier stencil call of the same schedule (their
-``j/i`` origins are carried in :class:`InSpec`), or 0-dim scalars
-(broadcast values such as a normalization factor) passed as ``(1, 1)``
-blocks.
+   tile) holds the fully-combined partial-accumulator row.
 
 Rolling windows are padded to the 128-wide TPU lane tile (the
 vector-length expansion of Fig. 9c).  Warm-up/drain grid steps compute
-garbage rows into padded outputs that the ops wrapper slices away — the
-masked steady-state ('HFAV + Tuning') form.
+garbage rows into padded outputs that :func:`execute_plan`'s host layer
+slices away — the masked steady-state ('HFAV + Tuning') form.
 
-All row widths in the spec are stored as *deltas against Ni* (and row
-counts as deltas against Nj) so one spec serves every problem size; they
+All row widths in the plan are stored as *deltas against Ni* (and row
+counts as deltas against Nj) so one plan serves every problem size; they
 are concretized in :func:`build_call`.
 
-The executor is driven by the engine's storage plan — see
-:func:`repro.core.codegen_pallas.generate_pallas`.
+:func:`execute_plan` is the host half of the interpreter: it resolves
+runtime sizes through the plan's :class:`~repro.core.plan.AxiomPlan`
+shape contracts, threads the environment between stencil calls and host
+steps, and assembles each padded device output back to its canonical
+array (trim warm-up rows/tiles, re-seat goal origins, lane-reduce folded
+accumulators) — exactly as the plan's :class:`OutputPlan` trim/seat
+rules dictate.
 """
 from __future__ import annotations
-
-import dataclasses
-from typing import Callable, Optional, Union
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from ...core.plan import CallPlan, KernelPlan, OutputPlan, WindowPlan
+from ...core.runtime import lane_reduce
 
 LANE = 128
 
@@ -92,172 +91,15 @@ def _mod(pos, stages: int):
     return jax.lax.rem(jax.lax.rem(pos, stages) + stages, stages)
 
 
-@dataclasses.dataclass(frozen=True)
-class InSpec:
-    """One streamed input.
-
-    Array inputs cover positions ``[j_lo, Nj + j_hi) x [i_lo, Ni + i_hi)``
-    of the iteration space (array index = position - origin) and stream
-    one row per grid step into a ``stages``-row VMEM window at ``lead``
-    rows ahead of the canonical point.  ``n_outer`` is the number of
-    *outer* grid dimensions the array itself carries (its dims are the
-    trailing ``n_outer`` outer identifiers of the nest, so an array with
-    ``n_outer`` smaller than the grid's broadcasts over the leading outer
-    dims); ``outer_los``/``outer_his`` are the array's per-outer-dim
-    origins (array planes in dim d = N_d + hi_d - lo_d), in the input's
-    own outer-dim order.  Scalar inputs are 0-dim values passed as a
-    single ``(1, 1)`` block.
-
-    ``p_stages > 1`` switches the input to *plane-window* mode (the
-    input is read at non-zero offsets in the plane dim — the grid's last
-    outer dim): instead of a rolling row window, VMEM holds a
-    ``(p_stages, rows, width)`` window of whole planes rotated across
-    outer tiles; each grid step streams one row of the *newest* plane
-    (``p_lead`` tiles ahead of the canonical tile) while older planes
-    stay resident for ``u[k-1]``-style reads."""
-
-    name: str
-    stages: int = 1
-    lead: int = 0
-    j_lo: int = 0
-    j_hi: int = 0  # array rows = Nj + (j_hi - j_lo)
-    i_lo: int = 0
-    i_hi: int = 0  # array cols = Ni + (i_hi - i_lo)
-    scalar: bool = False
-    n_outer: int = 0  # outer grid dims carried by the array itself
-    p_stages: int = 1  # planes kept resident (>1: plane-window mode)
-    p_lead: int = 0  # plane-dim stream lead (tiles ahead)
-    outer_los: tuple[int, ...] = ()  # per-outer-dim array origins
-    outer_his: tuple[int, ...] = ()
-
-    @property
-    def plane(self) -> bool:
-        """Whether this input uses a multi-plane VMEM window."""
-        return self.p_stages > 1
-
-
-@dataclasses.dataclass(frozen=True)
-class BufSpec:
-    """One VMEM rolling window: ``stages`` rows covering column positions
-    [i_lo, Ni + i_hi) of its variable (widths are Ni-relative)."""
-
-    name: str
-    stages: int
-    i_lo: int
-    i_hi: int
-
-
-@dataclasses.dataclass(frozen=True)
-class AccSpec:
-    """One carried accumulator row (vector partial accumulator of a
-    fused reduction): width Ni + w_off, initialized to ``init``.
-
-    ``n_kept`` is the number of *leading* outer grid dims the reduction
-    output keeps.  ``n_kept == 0`` carries one running row across the
-    entire grid (initialized on the very first grid step — the k-tiled
-    reduction form, where outer grid steps are tiles of one global
-    reduction).  ``n_kept >= 1`` re-initializes the row whenever every
-    grid dim *after* the kept prefix is at its first step and produces
-    one combined row per kept-prefix tile (a reduction whose output
-    keeps all outer dims — the per-outer form — or a strict leading
-    subset of them)."""
-
-    name: str
-    w_off: int
-    init: float
-    n_kept: int = 0
-
-    @property
-    def per_outer(self) -> bool:
-        """Whether the row re-initializes per kept-prefix outer tile."""
-        return self.n_kept > 0
-
-
-@dataclasses.dataclass(frozen=True)
-class ReadSpec:
-    src: str  # window/buffer name, 'local:<name>', or 'scalar:<name>'
-    j_off: int  # total row offset (consumer lead + stencil offset)
-    col0: int  # absolute column position of the first lane read
-    w_off: int  # read width = Ni + w_off
-    p_off: int = 0  # plane-dim offset (plane-window inputs only)
-
-
-@dataclasses.dataclass(frozen=True)
-class StepSpec:
-    """One fused kernel at its software-pipeline lead.
-
-    ``writes`` holds one tuple of targets per produced value; each
-    target is ``('buf', name) | ('local', name) | ('out', index)`` — a
-    value may go to several targets (e.g. a cross-call materialized
-    intermediate that is also consumed in the same grid step, or one
-    consumed at a row offset through a rolling buffer).
-
-    Reduction steps set ``acc``: the current accumulator row is
-    prepended to the kernel arguments and the combined result is stored
-    back, predicated on the canonical j-position lying inside
-    ``valid`` = (lo, hi_off), i.e. ``lo <= x + lead < Nj + hi_off``, and
-    on every outer-dim position lying inside the matching entry of
-    ``valid_outer`` (same (lo, hi_off) convention per outer grid dim —
-    warm-up/drain tiles of a halo'd grid must not pollute)."""
-
-    fn: Callable
-    reads: tuple[ReadSpec, ...]
-    writes: tuple[tuple[tuple[str, Union[str, int]], ...], ...]
-    lead: int
-    out_col0: int = 0  # absolute column of the produced row's first lane
-    acc: Optional[str] = None
-    valid: tuple[int, int] = (0, 0)
-    valid_outer: tuple[tuple[int, int], ...] = ()
-
-
-@dataclasses.dataclass(frozen=True)
-class OutSpec:
-    """One terminal output.  Row outputs get one padded row per grid
-    step, filled with ``fill`` outside the computed span (non-zero for
-    row-kept reductions, whose rows are lane-reduced on the host and
-    must pad with the combine identity); accumulator outputs (``acc``
-    set) are a revisited block dumped from the named accumulator —
-    ``(1, Ni + w_off)`` for carried accumulators, one ``(Ni + w_off)``
-    row per kept-prefix outer tile otherwise."""
-
-    name: str
-    lead: int = 0
-    acc: Optional[str] = None
-    fill: float = 0.0
-
-
-@dataclasses.dataclass(frozen=True)
-class StencilSpec:
-    """A complete fused, contracted stencil pipeline (one iteration
-    nest of the engine's schedule).  ``n_outer`` is the number of grid
-    dimensions ahead of the row dimension — 0 for a ``(j,)`` grid, 1 for
-    ``(k, j)``, 2 for ``(l, k, j)``, and so on.  ``outer_lo`` /
-    ``outer_hi_off`` give each outer grid dim's canonical range
-    ``[lo, N_d + hi_off)`` — non-zero when goals/axioms narrow an outer
-    dim or a plane window needs warm-up tiles (the outer-dim analogue of
-    ``x_lo``/``x_hi_off``); empty tuples mean exact ``[0, N_d)``."""
-
-    name: str
-    n_outer: int
-    inputs: tuple[InSpec, ...]
-    bufs: tuple[BufSpec, ...]
-    accs: tuple[AccSpec, ...]
-    steps: tuple[StepSpec, ...]
-    outs: tuple[OutSpec, ...]
-    x_lo: int  # canonical loop start (negative = pipeline priming rows)
-    x_hi_off: int  # loop end offset: x in [x_lo, Nj + x_hi_off)
-    outer_lo: tuple[int, ...] = ()
-    outer_hi_off: tuple[int, ...] = ()
-
-
-def build_call(spec: StencilSpec, sizes: tuple[int, ...], dtype,
+def build_call(call: CallPlan, sizes: tuple[int, ...], dtype,
                interpret: bool = False, double_buffer: bool = False):
-    """Concretize the spec for one problem size and build the pallas_call.
+    """Concretize one :class:`CallPlan` for a problem size and build the
+    pallas_call.
 
-    ``sizes`` is ``(*outer_sizes, Nj, Ni)`` with ``spec.n_outer`` leading
+    ``sizes`` is ``(*outer_sizes, Nj, Ni)`` with ``call.n_outer`` leading
     outer extents (``(Nj, Ni)`` for a plain 2-D nest).  Returns
-    ``(call, steps_j)``; the call maps the input arrays to one padded
-    output per ``spec.outs`` entry (a list when there are several).
+    ``(fn, steps_j)``; the call maps the input arrays to one padded
+    output per ``call.outputs`` entry (a list when there are several).
     Row-output row ``t`` holds iteration position ``t + x_lo + out.lead``;
     carried-accumulator outputs are ``(1, width)`` and per-outer
     accumulator outputs ``(*outer_sizes, width)``.
@@ -267,39 +109,42 @@ def build_call(spec: StencilSpec, sizes: tuple[int, ...], dtype,
     (``memory_space=ANY``) and each grid step waits on the row DMA
     issued by the previous step while kicking off the copy for the next
     one, so the input DMA overlaps the compute of the current row."""
-    n_out = spec.n_outer
+    n_out = call.n_outer
     if len(sizes) != n_out + 2:
         raise ValueError(
-            f"spec {spec.name} has n_outer={n_out} but got sizes {sizes}"
+            f"call {call.name} has n_outer={n_out} but got sizes {sizes}"
         )
     *outer_sizes, nj, ni = sizes
-    o_lo = spec.outer_lo or (0,) * n_out
-    o_hi = spec.outer_hi_off or (0,) * n_out
+    o_lo = call.outer_lo
+    o_hi = call.outer_hi_off
     gsz = [outer_sizes[d] + o_hi[d] - o_lo[d] for d in range(n_out)]
-    steps_j = (nj + spec.x_hi_off) - spec.x_lo
+    steps_j = (nj + call.x_hi_off) - call.x_lo
     total_steps = steps_j
     for s in gsz:
         total_steps *= s
 
-    arr_ins = [i for i in spec.inputs if not i.scalar]
+    arr_ins = [i for i in call.inputs if not i.scalar]
     row_ins = [i for i in arr_ins if not i.plane]
     plane_ins = [i for i in arr_ins if i.plane]
-    win_bufs = [BufSpec(f"in_{i.name}", i.stages, i.i_lo, i.i_hi)
-                for i in row_ins] + list(spec.bufs)
-    bwidth = {b.name: ni + (b.i_hi - b.i_lo) for b in win_bufs}
-    acc_w = {a.name: ni + a.w_off for a in spec.accs}
-    ref_idx = {ispec.name: k for k, ispec in enumerate(spec.inputs)}
+    roll_wins = [WindowPlan(f"in_{i.name}", i.stages, i.i_lo, i.i_hi)
+                 for i in row_ins] + [w for w in call.windows if not w.plane]
+    plane_wins = [w for w in call.windows if w.plane]
+    bwidth = {w.name: ni + (w.i_hi - w.i_lo) for w in roll_wins + plane_wins}
+    win_h = {w.name: nj + (w.j_hi - w.j_lo) for w in plane_wins}
+    acc_w = {a.name: ni + a.w_off for a in call.accs}
+    ref_idx = {ispec.name: k for k, ispec in enumerate(call.inputs)}
     ispec_of = {i.name: i for i in arr_ins}
     in_h = {i.name: nj + (i.j_hi - i.j_lo) for i in arr_ins}
     in_w = {i.name: ni + (i.i_hi - i.i_lo) for i in arr_ins}
-    n_scratch_bufs = len(win_bufs) + len(plane_ins) + len(spec.accs)
+    n_scratch = len(roll_wins) + len(plane_ins) + len(plane_wins) \
+        + len(call.accs)
 
-    def _row_pos(ispec: InSpec, x):
+    def _row_pos(ispec, x):
         """Source row index of ``ispec`` for canonical position ``x``
         (clamped: edge rows repeat during warm-up/drain)."""
         return jnp.clip(x + ispec.lead - ispec.j_lo, 0, in_h[ispec.name] - 1)
 
-    def _outer_src(ispec: InSpec, pos):
+    def _outer_src(ispec, pos):
         """Source indices for the input's own outer dims at canonical
         outer positions ``pos`` (one per grid outer dim).  The plane dim
         (last outer dim) of a plane-window input runs ``p_lead`` tiles
@@ -318,28 +163,31 @@ def build_call(spec: StencilSpec, sizes: tuple[int, ...], dtype,
         return idxs
 
     def kernel(*refs):
-        nin = len(spec.inputs)
+        nin = len(call.inputs)
         in_refs = refs[:nin]
-        o_refs = refs[nin:nin + len(spec.outs)]
-        scratch = refs[nin + len(spec.outs):]
-        ref_of = {b.name: (r, b) for r, b in zip(scratch, win_bufs)}
+        o_refs = refs[nin:nin + len(call.outputs)]
+        scratch = refs[nin + len(call.outputs):]
+        ref_of = {w.name: (r, w) for r, w in zip(scratch, roll_wins)}
         plane_of = {i.name: r for i, r in
-                    zip(plane_ins, scratch[len(win_bufs):])}
+                    zip(plane_ins, scratch[len(roll_wins):])}
+        pwin_of = {w.name: (r, w) for r, w in zip(
+            scratch[len(roll_wins) + len(plane_ins):], plane_wins)}
         acc_of = {a.name: (r, a) for r, a in zip(
-            scratch[len(win_bufs) + len(plane_ins):], spec.accs)}
+            scratch[len(roll_wins) + len(plane_ins) + len(plane_wins):],
+            call.accs)}
         dma_stage = {
             i.name: r for i, r in zip(
-                arr_ins, scratch[n_scratch_bufs:n_scratch_bufs + len(arr_ins)])
+                arr_ins, scratch[n_scratch:n_scratch + len(arr_ins)])
         } if double_buffer else {}
-        dma_sems = (scratch[n_scratch_bufs + len(arr_ins)]
+        dma_sems = (scratch[n_scratch + len(arr_ins)]
                     if double_buffer and arr_ins else None)
 
         outer_ids = [pl.program_id(d) for d in range(n_out)]
         opos = [outer_ids[d] + o_lo[d] for d in range(n_out)]
         jid = pl.program_id(n_out)
-        x = jid + spec.x_lo
+        x = jid + call.x_lo
 
-        def _store_window(ispec: InSpec, row, pos_outer, xx):
+        def _store_window(ispec, row, pos_outer, xx):
             """Seat one freshly-streamed row: rolling row windows rotate
             by mod-``stages`` position arithmetic; plane windows place
             the row at its absolute array index inside the newest plane
@@ -356,18 +204,18 @@ def build_call(spec: StencilSpec, sizes: tuple[int, ...], dtype,
                     row[None, None, :],
                 )
             else:
-                ref, b = ref_of[f"in_{ispec.name}"]
+                ref, w = ref_of[f"in_{ispec.name}"]
                 pl.store(
                     ref,
-                    (pl.dslice(_mod(xx + ispec.lead, b.stages), 1),
-                     pl.dslice(0, bwidth[b.name])),
+                    (pl.dslice(_mod(xx + ispec.lead, w.stages), 1),
+                     pl.dslice(0, bwidth[w.name])),
                     row[None, :],
                 )
 
         # 0. identity-initialize accumulators: carried accumulators
         # (n_kept == 0) once on the very first grid step, kept-prefix
         # accumulators at the first step of every kept tile.
-        for a in spec.accs:
+        for a in call.accs:
             first = jid == 0
             for d in range(a.n_kept, n_out):
                 first &= outer_ids[d] == 0
@@ -400,7 +248,7 @@ def build_call(spec: StencilSpec, sizes: tuple[int, ...], dtype,
             def _copy(ai, ispec, pos_outer, j_id, to_slot):
                 """The row DMA descriptor for one input at one grid step
                 (start and wait must agree on shape)."""
-                pos = _row_pos(ispec, j_id + spec.x_lo)
+                pos = _row_pos(ispec, j_id + call.x_lo)
                 src = in_refs[ref_idx[ispec.name]]
                 src_idx = tuple(pl.ds(i, 1)
                                 for i in _outer_src(ispec, pos_outer))
@@ -433,9 +281,9 @@ def build_call(spec: StencilSpec, sizes: tuple[int, ...], dtype,
                 row = src[(0,) * (ispec.n_outer + 1)]
                 _store_window(ispec, row, opos, x)
 
-        # 2. fused kernels, in dataflow order, at their leads
+        # 2. fused steps, in dataflow order, at their leads
         local: dict[str, jnp.ndarray] = {}
-        for step in spec.steps:
+        for step in call.steps:
             ins = []
             cur = None
             if step.acc is not None:
@@ -454,8 +302,8 @@ def build_call(spec: StencilSpec, sizes: tuple[int, ...], dtype,
                 elif rd.src.startswith("in_") and \
                         ispec_of.get(rd.src[3:]) is not None and \
                         ispec_of[rd.src[3:]].plane:
-                    # plane-window read: plane slot by mod-stage rotation
-                    # in the plane dim, absolute row index within it
+                    # streamed plane-window read: plane slot by mod-stage
+                    # rotation in the plane dim, absolute row inside it
                     ispec = ispec_of[rd.src[3:]]
                     pref = plane_of[ispec.name]
                     slot = _mod(opos[n_out - 1] + rd.p_off, ispec.p_stages)
@@ -467,6 +315,19 @@ def build_call(spec: StencilSpec, sizes: tuple[int, ...], dtype,
                                        pl.dslice(rd.col0 - ispec.i_lo, w))
                                 )[0, 0]
                     )
+                elif rd.src in pwin_of:
+                    # producer plane-window read: older planes resident,
+                    # rows addressed absolutely (clamped on warm-up)
+                    pref, pw = pwin_of[rd.src]
+                    slot = _mod(opos[n_out - 1] + rd.p_off, pw.p_stages)
+                    r_idx = jnp.clip(x + rd.j_off - pw.j_lo, 0,
+                                     win_h[pw.name] - 1)
+                    ins.append(
+                        pl.load(pref, (pl.dslice(slot, 1),
+                                       pl.dslice(r_idx, 1),
+                                       pl.dslice(rd.col0 - pw.i_lo, w))
+                                )[0, 0]
+                    )
                 else:
                     ref, b = ref_of[rd.src]
                     stage = _mod(x + rd.j_off, b.stages)
@@ -474,7 +335,7 @@ def build_call(spec: StencilSpec, sizes: tuple[int, ...], dtype,
                         pl.load(ref, (pl.dslice(stage, 1),
                                       pl.dslice(rd.col0 - b.i_lo, w)))[0]
                     )
-            vals = step.fn(*ins)
+            vals = call.fns[step.fn_idx](*ins)
             if step.acc is not None:
                 # predicated combine: warm-up/drain rows *and* tiles
                 # must not pollute
@@ -494,6 +355,24 @@ def build_call(spec: StencilSpec, sizes: tuple[int, ...], dtype,
                 for wkind, wtgt in targets:
                     if wkind == "local":
                         local[str(wtgt)] = val
+                    elif wkind == "buf" and str(wtgt) in pwin_of:
+                        # producer plane window: the newest plane slot
+                        # (p_lead tiles ahead), absolute row seating,
+                        # predicated to the plane's row extent
+                        pref, pw = pwin_of[str(wtgt)]
+                        slot = _mod(opos[n_out - 1] + pw.p_lead,
+                                    pw.p_stages)
+                        r_idx = x + step.lead - pw.j_lo
+
+                        @pl.when((r_idx >= 0) & (r_idx < win_h[pw.name]))
+                        def _seat(_p=pref, _s=slot, _r=r_idx, _v=val,
+                                  _c=step.out_col0 - pw.i_lo):
+                            pl.store(
+                                _p,
+                                (pl.dslice(_s, 1), pl.dslice(_r, 1),
+                                 pl.dslice(_c, _v.shape[0])),
+                                _v[None, None, :],
+                            )
                     elif wkind == "buf":
                         ref, b = ref_of[str(wtgt)]
                         stage = _mod(x + step.lead, b.stages)
@@ -505,7 +384,7 @@ def build_call(spec: StencilSpec, sizes: tuple[int, ...], dtype,
                         )
                     else:  # 3. one output row for this grid step
                         out_row = jnp.full(
-                            (ni,), spec.outs[int(wtgt)].fill, val.dtype)
+                            (ni,), call.outputs[int(wtgt)].fill, val.dtype)
                         out_row = jax.lax.dynamic_update_slice(
                             out_row, val, (step.out_col0,)
                         )
@@ -515,7 +394,7 @@ def build_call(spec: StencilSpec, sizes: tuple[int, ...], dtype,
         # 3b. dump accumulators into their revisited output blocks: the
         # final grid step (per kept tile for kept-prefix accumulators)
         # leaves the fully-combined row in place.
-        for oi, out in enumerate(spec.outs):
+        for oi, out in enumerate(call.outputs):
             if out.acc is not None:
                 aref, a = acc_of[out.acc]
                 wa = acc_w[out.acc]
@@ -529,7 +408,7 @@ def build_call(spec: StencilSpec, sizes: tuple[int, ...], dtype,
     in_specs = []
     out_specs = []
     out_shape = []
-    for ispec in spec.inputs:
+    for ispec in call.inputs:
         if ispec.scalar:
             in_specs.append(pl.BlockSpec((1, 1), lambda *ids: (0, 0)))
             continue
@@ -540,11 +419,11 @@ def build_call(spec: StencilSpec, sizes: tuple[int, ...], dtype,
             (1,) * (ispec.n_outer + 1) + (in_w[ispec.name],),
             (lambda *ids, _sp=ispec:
              tuple(_outer_src(_sp, [ids[d] + o_lo[d] for d in range(n_out)]))
-             + (_row_pos(_sp, ids[n_out] + spec.x_lo), 0)),
+             + (_row_pos(_sp, ids[n_out] + call.x_lo), 0)),
         ))
-    for out in spec.outs:
+    for out in call.outputs:
         if out.acc is not None:
-            a = next(a for a in spec.accs if a.name == out.acc)
+            a = next(a for a in call.accs if a.name == out.acc)
             wa = acc_w[out.acc]
             if a.n_kept:
                 out_specs.append(pl.BlockSpec(
@@ -563,15 +442,19 @@ def build_call(spec: StencilSpec, sizes: tuple[int, ...], dtype,
                 jax.ShapeDtypeStruct((*gsz, steps_j, ni), dtype))
 
     scratch_shapes = [
-        pltpu.VMEM((b.stages, _pad_to_lane(ni + (b.i_hi - b.i_lo))), dtype)
-        for b in win_bufs
+        pltpu.VMEM((w.stages, _pad_to_lane(ni + (w.i_hi - w.i_lo))), dtype)
+        for w in roll_wins
     ] + [
         pltpu.VMEM((i.p_stages, in_h[i.name], _pad_to_lane(in_w[i.name])),
                    dtype)
         for i in plane_ins
     ] + [
+        pltpu.VMEM((w.p_stages, win_h[w.name],
+                    _pad_to_lane(ni + (w.i_hi - w.i_lo))), dtype)
+        for w in plane_wins
+    ] + [
         pltpu.VMEM((1, _pad_to_lane(ni + a.w_off)), dtype)
-        for a in spec.accs
+        for a in call.accs
     ]
     if double_buffer and arr_ins:
         scratch_shapes += [
@@ -579,7 +462,7 @@ def build_call(spec: StencilSpec, sizes: tuple[int, ...], dtype,
             for i in arr_ins
         ]
         scratch_shapes.append(pltpu.SemaphoreType.DMA((len(arr_ins), 2)))
-    call = pl.pallas_call(
+    fn = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=in_specs,
@@ -588,4 +471,154 @@ def build_call(spec: StencilSpec, sizes: tuple[int, ...], dtype,
         scratch_shapes=scratch_shapes,
         interpret=interpret,
     )
-    return call, steps_j
+    return fn, steps_j
+
+
+# ---------------------------------------------------------------------------
+# Host half of the interpreter: size resolution, environment threading,
+# output assembly (the plan's trim/seat rules).
+# ---------------------------------------------------------------------------
+
+def _run_host(call: CallPlan, hs, env: dict) -> None:
+    vals = call.fns[hs.fn_idx](*[env[n] for n in hs.reads])
+    if len(hs.writes) == 1:
+        vals = (vals,)
+    for name, val in zip(hs.writes, vals):
+        env[name] = val
+
+
+def _outer_trim(out: OutputPlan, call: CallPlan, n_outs: tuple[int, ...],
+                n_dims: int) -> tuple[slice, ...]:
+    """Slices dropping warm-up/drain tiles of the first ``n_dims`` outer
+    grid dims, keeping the output's canonical extent ``[lo, N_d + hi)``
+    (a producer running ``outer_lead`` tiles ahead wrote its blocks that
+    many tiles early)."""
+    o_lo = call.outer_lo
+    idx = []
+    for d in range(n_dims):
+        lead = out.outer_lead[d] if out.outer_lead else 0
+        s0 = out.outer_lo[d] - lead - o_lo[d]
+        cnt = n_outs[d] + out.outer_hi[d] - out.outer_lo[d]
+        idx.append(slice(s0, s0 + cnt))
+    return tuple(idx)
+
+
+def _outer_seat(out: OutputPlan, n_outs: tuple[int, ...],
+                n_dims: int) -> tuple[slice, ...]:
+    """Slices seating a trimmed value at its goal origin inside
+    full-size ``[0, N_d)`` outer dims."""
+    return tuple(
+        slice(out.outer_lo[d], n_outs[d] + out.outer_hi[d])
+        for d in range(n_dims)
+    )
+
+
+def _assemble(call: CallPlan, out: OutputPlan, padded, nj: int, ni: int,
+              n_outs: tuple[int, ...], dtype):
+    """Map one padded device output back to its environment array: trim
+    warm-up/drain rows and tiles, re-seat goal origins, lane-reduce
+    accumulators whose vector dim was folded."""
+    n_out = call.n_outer
+    reduce_fn = call.fns[out.reduce_idx] if out.reduce_idx is not None \
+        else None
+    if out.kind == "acc":
+        if out.n_kept:
+            # (*kept grid tiles, width): one combined row per kept tile
+            part = padded[_outer_trim(out, call, n_outs, out.n_kept)]
+            if reduce_fn is not None:
+                part = lane_reduce(reduce_fn,
+                                   jnp.moveaxis(part, -1, 0),
+                                   out.reduce_init)
+            kept_exact = all(
+                out.outer_lo[d] == 0 and out.outer_hi[d] == 0
+                for d in range(out.n_kept))
+            if kept_exact:
+                return part
+            shape = tuple(n_outs[:out.n_kept]) + part.shape[out.n_kept:]
+            seat = _outer_seat(out, n_outs, out.n_kept) \
+                + (slice(None),) * (part.ndim - out.n_kept)
+            return jnp.zeros(shape, dtype).at[seat].set(part)
+        row = padded[0]
+        if reduce_fn is not None:
+            return lane_reduce(reduce_fn, row, out.reduce_init)
+        return row
+    t0 = out.j_lo - (call.x_lo + out.lead)
+    nrows = nj + out.j_hi - out.j_lo
+    otrim = _outer_trim(out, call, n_outs, n_out)
+    if out.kind == "acc_rows":
+        # one identity-padded partial-accumulator row per grid step:
+        # trim, fold the lanes, seat at the goal origin
+        part = padded[otrim + (slice(t0, t0 + nrows), slice(None))]
+        vals = lane_reduce(reduce_fn, jnp.moveaxis(part, -1, 0),
+                           out.reduce_init)
+        res = jnp.zeros((*n_outs, nj), dtype)
+        return res.at[_outer_seat(out, n_outs, n_out)
+                      + (slice(out.j_lo, nj + out.j_hi),)].set(vals)
+    if out.kind == "external":
+        jlo, jhi = out.j_lo, nj + out.j_hi
+        res = jnp.zeros((*n_outs, nj, ni), dtype)
+        return res.at[_outer_seat(out, n_outs, n_out)
+                      + (slice(jlo, jhi), slice(None))].set(
+            padded[otrim + (slice(t0, t0 + nrows), slice(None))])
+    w = ni + out.i_hi - out.i_lo
+    return padded[otrim + (slice(t0, t0 + nrows),
+                           slice(out.i_lo, out.i_lo + w))]
+
+
+def execute_plan(kplan: KernelPlan, *, dtype=jnp.float32,
+                 interpret: bool = True, double_buffer: bool = False):
+    """Build the host callable executing a full :class:`KernelPlan`.
+
+    The returned function takes the program's external arrays as keyword
+    arguments and returns ``{store name: array}`` for every goal.  It
+    resolves runtime dim sizes through the plan's axiom shape contracts,
+    runs each :class:`CallPlan` (host prologue, stencil call, output
+    assembly, host epilogue) in order, and threads intermediate arrays
+    through the environment.  ``interpret=True`` runs kernel bodies on
+    CPU for validation; ``double_buffer=True`` selects the explicit
+    two-slot async-DMA input pipeline."""
+    dim_sym = dict(kplan.dim_sizes)
+    inner = kplan.loop_order[-1]
+    jdim = kplan.loop_order[-2]
+    outer_dims = kplan.loop_order[:-2]
+    input_names = sorted({ax.array for ax in kplan.axioms})
+
+    def fn(**arrays):
+        sizes: dict[str, int] = {}
+        for ax in kplan.axioms:
+            arr = arrays[ax.array]
+            ext = {d: (sym, lo, hi) for d, sym, lo, hi in ax.extents}
+            for axis, d in enumerate(ax.dims):
+                e = ext.get(d)
+                if e is not None and e[0] not in sizes:
+                    sizes[e[0]] = arr.shape[axis] - (e[2] - e[1])
+        nj = sizes[dim_sym[jdim]]
+        ni = sizes[dim_sym[inner]]
+        n_outs = tuple(sizes[dim_sym[d]] for d in outer_dims)
+        env: dict[str, jnp.ndarray] = {
+            name: arrays[name] for name in input_names
+        }
+        for cp in kplan.calls:
+            for hs in cp.host_pre:
+                _run_host(cp, hs, env)
+            if cp.has_grid:
+                pcall, _ = build_call(cp, (*n_outs, nj, ni), dtype,
+                                      interpret=interpret,
+                                      double_buffer=double_buffer)
+                args = []
+                for ispec in cp.inputs:
+                    v = jnp.asarray(env[ispec.name], dtype)
+                    if ispec.scalar:
+                        v = v.reshape((1, 1))
+                    args.append(v)
+                padded = pcall(*args)
+                if not isinstance(padded, (list, tuple)):
+                    padded = [padded]
+                for out, pout in zip(cp.outputs, padded):
+                    env[out.name] = _assemble(cp, out, pout, nj, ni,
+                                              n_outs, dtype)
+            for hs in cp.host_post:
+                _run_host(cp, hs, env)
+        return {store: env[var] for store, var in kplan.goal_outputs}
+
+    return fn

@@ -30,9 +30,9 @@ def test_normalization_on_pallas_backend(rng):
     prog = normalization_program()
     gen = compile_program(prog, backend="pallas")
     assert isinstance(gen, PallasGenerated)
-    assert len(gen.specs) == 2
-    assert gen.specs[0].accs, "reduction must become a carried accumulator"
-    assert any(i.scalar for i in gen.specs[1].inputs), \
+    assert len(gen.calls) == 2
+    assert gen.calls[0].accs, "reduction must become a carried accumulator"
+    assert any(i.scalar for i in gen.calls[1].inputs), \
         "invnorm must be streamed as a scalar input"
     u = _u(rng, (9, 14))
     got = gen.fn(u=u)["nflux"]
@@ -66,7 +66,7 @@ def test_multiple_terminal_outputs(rng):
     u = _u(rng, (11, 40))
     want = build_unfused(prog).fn(cell=u)
     gen_p = compile_program(prog, backend="pallas")
-    assert len(gen_p.spec.outs) == 2
+    assert len(gen_p.call.outputs) == 2
     gen_j = compile_program(prog, backend="jax")
     for gen in (gen_p, gen_j):
         got = gen.fn(cell=u)

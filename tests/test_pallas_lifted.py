@@ -8,6 +8,12 @@ unfused oracle in interpret mode:
 * outer-dim stencil halos (``u[k-1][j][i]`` reads) served by multi-plane
   VMEM windows carried across the outer grid, including on grids with
   two outer dims and with the non-exact outer extents halos induce;
+* **producer plane windows** — same-nest *produced* variables read at
+  plane offsets (``st(u[k-1])`` where ``st`` is computed in the nest):
+  the producer runs its plane-dim lead ahead of the outer grid and
+  keeps whole planes resident in VMEM;
+* **halo'd reductions** — plane windows and carried accumulators fused
+  in one nest (``heat3d_residual_norm``);
 * reductions keeping the row dim (``rsum[j]``) and reductions keeping a
   strict leading subset of the outer dims (``(l, k, j, i) -> out[l]``) —
   on both backends;
@@ -29,9 +35,11 @@ from repro.core import (Generated, PallasGenerated, PallasUnsupported,
 from repro.core.engine import PALLAS_SPLIT_WINS
 from repro.core.programs import (advect4d_halo_program, cosmo_program,
                                  energy3d_program, heat3d_program,
-                                 laplace5_program, plane_sum_program,
-                                 pyramid4d_program, row_sum_program,
-                                 smooth_norm_program, subset_sum_program)
+                                 heat3d_residual_norm_program,
+                                 heat3d_stage_program, laplace5_program,
+                                 plane_sum_program, pyramid4d_program,
+                                 row_sum_program, smooth_norm_program,
+                                 subset_sum_program)
 from repro.core.unfused import build_unfused
 
 
@@ -57,6 +65,8 @@ LIFTED = [
     (advect4d_halo_program, "adv", (2, 4, 6, 20), "plane window, 2 outer dims"),
     (row_sum_program, "rsum", (7, 21), "row-kept reduction"),
     (subset_sum_program, "lsum", (3, 4, 5, 16), "subset-outer reduction"),
+    (heat3d_stage_program, "heat", (5, 7, 24), "producer plane window"),
+    (heat3d_residual_norm_program, "rnorm", (5, 7, 24), "halo'd reduction"),
 ]
 
 
@@ -79,7 +89,7 @@ def test_lifted_restriction_matches_oracle(rng, build, out, shape, _why,
 
 def _broadcast_coeff_program():
     """A 2-D coefficient field on a (k, j, i) grid: the streamed input
-    `c` carries only the (j, i) suffix (InSpec.n_outer=0 on an
+    `c` carries only the (j, i) suffix (InputPlan.n_outer=0 on an
     n_outer=1 grid) and broadcasts over k."""
     k_mul = kernel(
         "damp",
@@ -111,7 +121,7 @@ def test_broadcast_suffix_input_matches_oracle(rng, double_buffer):
     prog = _broadcast_coeff_program()
     gen = compile_program(prog, backend="pallas",
                           double_buffer=double_buffer)
-    (ispec_u, ispec_c) = [i for i in gen.spec.inputs if not i.scalar]
+    (ispec_u, ispec_c) = [i for i in gen.call.inputs if not i.scalar]
     assert {ispec_u.name: ispec_u.n_outer,
             ispec_c.name: ispec_c.n_outer} == {"u": 1, "c": 0}
     u, c = _u(rng, (3, 8, 33)), _u(rng, (8, 33))
@@ -121,25 +131,25 @@ def test_broadcast_suffix_input_matches_oracle(rng, double_buffer):
                                atol=2e-5, rtol=1e-4)
 
 
-def test_outer_grid_spec_shape():
+def test_outer_grid_plan_shape():
     """pyramid4d maps both outer identifiers onto leading grid dims and
     carries the blur in a 3-row rolling window."""
     gen = compile_program(pyramid4d_program(), backend="pallas")
-    assert gen.spec.n_outer == 2
-    assert [(b.name, b.stages) for b in gen.spec.bufs] == [("b_blur_u", 3)]
+    assert gen.call.n_outer == 2
+    assert [(w.name, w.stages) for w in gen.call.windows] == [("b_blur_u", 3)]
 
 
-def test_ktiled_reduction_spec():
+def test_ktiled_reduction_plan():
     """energy3d: one carried accumulator on a (k, j) grid."""
     gen = compile_program(energy3d_program(), backend="pallas")
-    (acc,) = gen.spec.accs
-    assert gen.spec.n_outer == 1 and not acc.per_outer
+    (acc,) = gen.call.accs
+    assert gen.call.n_outer == 1 and not acc.per_outer
 
 
-def test_per_outer_reduction_spec():
+def test_per_outer_reduction_plan():
     """plane_sum: the accumulator re-initializes per k-tile."""
     gen = compile_program(plane_sum_program(), backend="pallas")
-    (acc,) = gen.spec.accs
+    (acc,) = gen.call.accs
     assert acc.per_outer
 
 
@@ -147,51 +157,87 @@ def test_cross_row_read_gets_rolling_window():
     """smooth_norm: the materialized flux is ALSO served in-nest from a
     2-stage rolling window (rows j and j-1)."""
     gen = compile_program(smooth_norm_program(), backend="pallas")
-    assert len(gen.specs) == 2
-    assert [(b.name, b.stages) for b in gen.specs[0].bufs] == [("b_flux_u", 2)]
+    assert len(gen.calls) == 2
+    assert [(w.name, w.stages) for w in gen.calls[0].windows] \
+        == [("b_flux_u", 2)]
 
 
-def test_heat3d_plane_window_spec():
+def test_heat3d_plane_window_plan():
     """heat3d: the k +/- 1 reads give the streamed input a 3-plane VMEM
     window with a one-tile plane lead, and the k grid dim gains one
     warm-up tile (outer_lo = -1) to prime it."""
     gen = compile_program(heat3d_program(), backend="pallas")
-    spec = gen.spec
-    (ispec,) = spec.inputs
+    call = gen.call
+    (ispec,) = call.inputs
     assert (ispec.p_stages, ispec.p_lead) == (3, 1) and ispec.plane
-    assert spec.n_outer == 1
-    assert spec.outer_lo == (-1,) and spec.outer_hi_off == (-1,)
+    assert call.n_outer == 1
+    assert call.outer_lo == (-1,) and call.outer_hi_off == (-1,)
 
 
 def test_advect4d_plane_window_on_two_outer_dims():
     """advect4d_halo: the plane window rides the *last* outer grid dim
     (k) while l stays an exact leading grid dim."""
     gen = compile_program(advect4d_halo_program(), backend="pallas")
-    spec = gen.spec
-    (ispec,) = spec.inputs
-    assert spec.n_outer == 2
+    call = gen.call
+    (ispec,) = call.inputs
+    assert call.n_outer == 2
     assert (ispec.p_stages, ispec.p_lead) == (3, 1)
-    assert spec.outer_lo == (0, -1) and spec.outer_hi_off == (0, -1)
+    assert call.outer_lo == (0, -1) and call.outer_hi_off == (0, -1)
 
 
-def test_subset_outer_reduction_spec():
+def test_producer_plane_window_plan():
+    """heat3d_stage: the same-nest produced intermediate gets a 3-plane
+    producer window with the stage kernel running one tile ahead, and —
+    consumed only in-nest — is never materialized to HBM."""
+    gen = compile_program(heat3d_stage_program(), backend="pallas")
+    call = gen.call
+    (w,) = call.windows
+    assert w.plane and (w.p_stages, w.p_lead) == (3, 1)
+    # the producer's step runs at plane lead 1, row lead 1
+    stage = next(s for s in call.steps if s.op == "stage")
+    assert stage.writes == ((("buf", "b_st_u"),),)
+    assert stage.lead == 1
+    # only the goal is an output: the intermediate skipped HBM entirely
+    assert [o.name for o in call.outputs] == ["heat_u"]
+    # the consumer reads planes -1/0/+1 out of the window
+    heat = next(s for s in call.steps if s.op == "heat7")
+    assert sorted({r.p_off for r in heat.reads}) == [-1, 0, 1]
+
+
+def test_halo_reduction_plan():
+    """heat3d_residual_norm: one nest holds the plane-window input, the
+    terminal heat field, its same-step residual consumer, and the
+    carried accumulator whose combines are predicated off the window's
+    warm-up tiles."""
+    gen = compile_program(heat3d_residual_norm_program(), backend="pallas")
+    (call,) = gen.calls
+    (ispec,) = call.inputs
+    assert ispec.plane and ispec.p_stages == 3
+    (acc,) = call.accs
+    assert not acc.per_outer
+    red = next(s for s in call.steps if s.acc is not None)
+    assert red.valid_outer == ((1, -1),)
+    kinds = sorted(o.kind for o in call.outputs)
+    assert kinds == ["acc", "external"]
+
+
+def test_subset_outer_reduction_plan():
     """subset_sum: the accumulator keeps the leading-prefix outer dim l
     (n_kept=1 of a 2-outer grid) and re-initializes per l tile."""
     gen = compile_program(subset_sum_program(), backend="pallas")
-    (acc,) = gen.spec.accs
-    assert gen.spec.n_outer == 2
+    (acc,) = gen.call.accs
+    assert gen.call.n_outer == 2
     assert acc.n_kept == 1 and acc.per_outer
 
 
-def test_row_kept_reduction_spec():
+def test_row_kept_reduction_plan():
     """row_sum: no carried accumulator at all — each grid step emits one
     identity-padded partial row, lane-reduced on the host."""
     gen = compile_program(row_sum_program(), backend="pallas")
-    assert not gen.spec.accs
-    (out,) = gen.spec.outs
+    assert not gen.call.accs
+    (out,) = gen.call.outputs
     assert out.acc is None and out.fill == 0.0
-    (bind,) = gen.nest_execs[0].out_binds
-    assert bind.kind == "acc_rows" and bind.reduce_fn is not None
+    assert out.kind == "acc_rows" and out.reduce_idx is not None
 
 
 REDUCTION_SHAPES = [
@@ -204,7 +250,7 @@ REDUCTION_SHAPES = [
 @pytest.mark.parametrize("build,out,shape", REDUCTION_SHAPES,
                          ids=[c[0].__name__ for c in REDUCTION_SHAPES])
 def test_kept_dim_reductions_on_jax_backend(rng, build, out, shape):
-    """The JAX emitter now covers every kept-dim reduction shape (no
+    """The JAX emitter covers every kept-dim reduction shape (no
     more 'neither backend' rows): per-cell accumulator arrays, masked
     in-place combines, lane-reduced returns."""
     prog = build()
@@ -243,6 +289,53 @@ def test_row_kept_reduction_with_outer_dims(rng):
                                atol=2e-4, rtol=1e-4)
 
 
+def _same_nest_koff_program():
+    """A staged k-difference: diff reads st at k-1 AND k while st is
+    produced in the same nest — formerly the last outer-dim restriction
+    ('only streamed inputs get plane windows'), now served by a
+    2-plane producer window at plane lead 0."""
+    k_a = kernel("stage", [("a", "u?[k?][j?][i?]")],
+                 [("o", "st(u?[k?][j?][i?])")], fn=lambda a: 2.0 * a)
+    k_b = kernel("diff", [("m", "st(u?[k?-1][j?][i?])"),
+                          ("c", "st(u?[k?][j?][i?])")],
+                 [("o", "d(u?[k?][j?][i?])")], fn=lambda m, c: c - m)
+    return Program(
+        rules=[k_a, k_b],
+        axioms=[axiom("u[k?][j?][i?]", k="Nk", j="Nj", i="Ni")],
+        goals=[goal("d(u[k][j][i])", store_as="d",
+                    k=("Nk", 1, 0), j=("Nj", 0, 0), i=("Ni", 0, 0))],
+        loop_order=("k", "j", "i"),
+        name="same_nest_koff",
+    )
+
+
+@pytest.mark.parametrize("double_buffer", [False, True],
+                         ids=["blockspec", "double_buffer"])
+def test_same_nest_plane_offset_lifted(rng, double_buffer):
+    """The producer-plane-window lift: a same-nest variable read at a
+    backward plane offset compiles on the stencil interpreter (2 planes
+    resident, producer lead 0) and matches the oracle."""
+    prog = _same_nest_koff_program()
+    gen = compile_program(prog, backend="pallas", double_buffer=double_buffer)
+    assert isinstance(gen, PallasGenerated)
+    (w,) = gen.call.windows
+    assert w.plane and (w.p_stages, w.p_lead) == (2, 0)
+    u = _u(rng, (4, 5, 12))
+    got = gen.fn(u=u)["d"]
+    want = build_unfused(prog).fn(u=u)["d"]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_auto_routes_producer_plane_window_to_pallas():
+    """With the last outer-dim restriction gone, auto now routes
+    same-nest plane-offset programs to the stencil interpreter."""
+    gen = compile_program(_same_nest_koff_program(), backend="auto")
+    assert isinstance(gen, PallasGenerated)
+    gen2 = compile_program(heat3d_stage_program(), backend="auto")
+    assert isinstance(gen2, PallasGenerated)
+
+
 def _cross_call_halo_program():
     """A materialized intermediate consumed at k +/- 1 in a *later*
     nest: the cross-call streamed input gets the plane window (its
@@ -278,10 +371,10 @@ def test_cross_call_materialized_plane_window(rng, double_buffer):
     into nest 1 with a 3-plane window and one k warm-up tile."""
     prog = _cross_call_halo_program()
     gen = compile_program(prog, backend="pallas", double_buffer=double_buffer)
-    assert len(gen.specs) == 2
-    (fx_in,) = [i for i in gen.specs[1].inputs if not i.scalar]
+    assert len(gen.calls) == 2
+    (fx_in,) = [i for i in gen.calls[1].inputs if not i.scalar]
     assert fx_in.name == "fx_u" and (fx_in.p_stages, fx_in.p_lead) == (3, 1)
-    assert gen.specs[1].outer_lo == (-1,)
+    assert gen.calls[1].outer_lo == (-1,)
     u = _u(rng, (5, 6, 16))
     got = gen.fn(u=u)["sm"]
     want = build_unfused(prog).fn(u=u)["sm"]
@@ -313,17 +406,17 @@ def _narrowed_axiom_program():
 @pytest.mark.parametrize("double_buffer", [False, True],
                          ids=["blockspec", "double_buffer"])
 def test_narrowed_axiom_stream_origin(rng, double_buffer):
-    """Regression: ``add_input`` used to size the fetched window from
-    the axiom extents but the grid range from the variable extent —
-    a narrowed axiom row extent misaligned the stream.  Both now come
+    """Regression: the planner used to size the fetched window from the
+    axiom extents but the grid range from the variable extent — a
+    narrowed axiom row extent misaligned the stream.  Both now come
     from the same frame."""
     prog = _narrowed_axiom_program()
     gen = compile_program(prog, backend="pallas", double_buffer=double_buffer)
-    (ispec,) = gen.spec.inputs
+    (ispec,) = gen.call.inputs
     assert (ispec.j_lo, ispec.j_hi) == (1, -1)
     # grid start = array origin minus the streaming lead: rows stream
     # from the first array row, not from before it
-    assert gen.spec.x_lo == ispec.j_lo - ispec.lead
+    assert gen.call.x_lo == ispec.j_lo - ispec.lead
     u = _u(rng, (9, 16))  # Nj=11 positions, rows cover [1, 10)
     got = gen.fn(u=u)["ridge"]
     want = build_unfused(prog).fn(u=u)["ridge"]
@@ -365,7 +458,7 @@ def test_double_buffer_distinct_cache_entry():
 
 # ---------------------------------------------------------------------------
 # Remaining restrictions: each must raise naming the offending
-# variable/dim (regression for the improved messages)
+# variable/dim (regression for the plan.py validate-pass messages)
 # ---------------------------------------------------------------------------
 
 def test_loop_order_too_short_message():
@@ -405,30 +498,31 @@ def test_offset_beyond_plane_dim_message():
     assert isinstance(compile_program(prog, backend="auto"), Generated)
 
 
-def test_same_nest_plane_offset_message(rng):
-    """Only *streamed* inputs get plane windows: a variable produced in
-    the same nest cannot be read at a k offset (the producer would have
-    to run a whole plane ahead)."""
-    k_a = kernel("stage", [("a", "u?[k?][j?][i?]")],
-                 [("o", "st(u?[k?][j?][i?])")], fn=lambda a: 2.0 * a)
-    k_b = kernel("diff", [("m", "st(u?[k?-1][j?][i?])"),
-                          ("c", "st(u?[k?][j?][i?])")],
-                 [("o", "d(u?[k?][j?][i?])")], fn=lambda m, c: c - m)
+def test_same_nest_nonplane_lead_message(rng):
+    """A same-nest variable read at a *positive* offset in a non-plane
+    outer dim would need the producer to lead a dim with no window
+    (volume windows): the planner refuses, the JAX backend covers."""
+    k_a = kernel("stage", [("a", "u?[l?][k?][j?][i?]")],
+                 [("o", "st(u?[l?][k?][j?][i?])")], fn=lambda a: 2.0 * a)
+    k_b = kernel("diff", [("m", "st(u?[l?+1][k?][j?][i?])"),
+                          ("c", "st(u?[l?][k?][j?][i?])")],
+                 [("o", "d(u?[l?][k?][j?][i?])")], fn=lambda m, c: c - m)
     prog = Program(
         rules=[k_a, k_b],
-        axioms=[axiom("u[k?][j?][i?]", k="Nk", j="Nj", i="Ni")],
-        goals=[goal("d(u[k][j][i])", store_as="d",
-                    k=("Nk", 1, 0), j=("Nj", 0, 0), i=("Ni", 0, 0))],
-        loop_order=("k", "j", "i"),
-        name="same_nest_koff",
+        axioms=[axiom("u[l?][k?][j?][i?]", l="Nl", k="Nk", j="Nj", i="Ni")],
+        goals=[goal("d(u[l][k][j][i])", store_as="d",
+                    l=("Nl", 0, -1), k=("Nk", 0, 0), j=("Nj", 0, 0),
+                    i=("Ni", 0, 0))],
+        loop_order=("l", "k", "j", "i"),
+        name="same_nest_loff",
     )
     with pytest.raises(PallasUnsupported,
-                       match=r"plane dim 'k'.*produced in the same nest"):
+                       match=r"ahead in outer dim 'l'.*volume windows"):
         compile_program(prog, backend="pallas")
     # auto degrades gracefully AND the JAX compilation is correct
     gen = compile_program(prog, backend="auto")
     assert isinstance(gen, Generated)
-    u = _u(rng, (4, 5, 12))
+    u = _u(rng, (3, 4, 5, 12))
     got = gen.fn(u)["d"]
     want = build_unfused(prog).fn(u=u)["d"]
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
@@ -463,8 +557,8 @@ def test_row_kept_reduction_reducing_outer_dim_message(rng):
 
 def test_row_kept_reduction_negative_row_origin_message(rng):
     """A row-kept reduction whose reduced i extent starts below 0 cannot
-    seat its partial row in the Ni-wide output: the spec extraction must
-    raise (so auto degrades to JAX) instead of crashing at call time."""
+    seat its partial row in the Ni-wide output: the planner must raise
+    (so auto degrades to JAX) instead of crashing at call time."""
     k_sum = kernel("nsum", [("x", "u[j?][i]")], [("acc", "nsum(u[j?])")],
                    fn=lambda acc, x: acc + x, kind="reduce", init=0.0)
     prog = Program(
