@@ -27,6 +27,12 @@ program as its in-row baseline:
 * ``subset_sum`` — reduction keeping a leading subset of outer dims
   (accumulator re-initialized per kept-prefix tile).
 
+The suite also times the **AOT plan cache** (``plan_cache`` legs):
+cold-plan compiles (full analysis pipeline + planner) against
+warm-cache compiles (the serialized plan loaded from disk, analysis
+skipped entirely) for the laplace5 and heat3d programs — the
+"decide ahead of time, replay cheaply" claim in wall-clock form.
+
 Off-TPU the legs run in interpret mode on bounded sizes (the grid
 unrolls at trace time); pass ``interpret=False`` on a TPU runtime for
 real timings, and feed measured split-schedule wins back into
@@ -45,18 +51,21 @@ from __future__ import annotations
 import argparse
 import json
 import sys
+import tempfile
+import time
 
 import jax
 import numpy as np
 
-from repro.core import compile_program
+from repro.core import clear_compile_cache, compile_program
 from repro.core.codegen_jax import CodegenError
 from repro.core.programs import (cosmo_program, energy3d_program,
                                  heat3d_program,
                                  heat3d_residual_norm_program,
-                                 heat3d_stage_program, plane_sum_program,
-                                 pyramid4d_program, row_sum_program,
-                                 smooth_norm_program, subset_sum_program)
+                                 heat3d_stage_program, laplace5_program,
+                                 plane_sum_program, pyramid4d_program,
+                                 row_sum_program, smooth_norm_program,
+                                 subset_sum_program)
 from repro.core.unfused import build_unfused
 
 from .common import mk, time_fn
@@ -121,6 +130,42 @@ def run(interpret: bool = True):
     return rows
 
 
+PLAN_CACHE_CASES = [("laplace5", laplace5_program),
+                    ("heat3d", heat3d_program)]
+
+
+def run_plan_cache(repeats: int = 5):
+    """Time cold-plan vs warm-cache compiles (best of ``repeats``).
+
+    Cold runs the whole pipeline — inference, dataflow, fusion, storage
+    analysis, planning — plus interpreter construction; warm loads the
+    serialized plan from a pre-warmed on-disk cache and builds the
+    interpreter straight from the IR.  In-memory caches are cleared
+    before every sample so each timing is a genuine fresh-process
+    stand-in."""
+    legs = []
+    for name, build in PLAN_CACHE_CASES:
+        prog = build()
+        with tempfile.TemporaryDirectory() as d:
+            def once(**kw):
+                clear_compile_cache()
+                t0 = time.perf_counter()
+                compile_program(prog, backend="pallas", **kw)
+                return time.perf_counter() - t0
+
+            cold = min(once() for _ in range(repeats))
+            once(plan_cache_dir=d)  # warm the disk entry
+            warm = min(once(plan_cache_dir=d) for _ in range(repeats))
+        legs.append({
+            "name": f"plan_cache_{name}",
+            "cold_plan_ms": cold * 1e3,
+            "warm_cache_ms": warm * 1e3,
+            "speedup": cold / warm if warm > 0 else float("inf"),
+        })
+        clear_compile_cache()
+    return legs
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(
         description="Time one leg per lifted Pallas restriction.")
@@ -131,17 +176,23 @@ def main(argv=None) -> None:
                     help="run with interpret=False (TPU runtimes only)")
     args = ap.parse_args(argv)
     rows = run(interpret=not args.no_interpret)
+    cache_legs = run_plan_cache()
     if args.json:
         legs = [{k: r[k] for k in ("name", "us_per_call", "backend",
                                    "interpret", "double_buffer",
                                    "jax_us_per_call", "mcells_per_s")}
                 for r in rows]
-        json.dump({"suite": "lifted", "legs": legs}, sys.stdout, indent=1)
+        json.dump({"suite": "lifted", "legs": legs,
+                   "plan_cache": cache_legs}, sys.stdout, indent=1)
         sys.stdout.write("\n")
         return
     print("name,us_per_call,derived")
     for r in rows:
         print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+    for leg in cache_legs:
+        print(f"{leg['name']},cold_plan_ms={leg['cold_plan_ms']:.2f},"
+              f"warm_cache_ms={leg['warm_cache_ms']:.2f},"
+              f"speedup={leg['speedup']:.1f}x")
 
 
 if __name__ == "__main__":

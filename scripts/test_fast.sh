@@ -4,6 +4,22 @@
 # (scripts/check_docs.sh) run inside the suite via tests/test_docs.py,
 # so both this wrapper and the canonical tier-1 command in ROADMAP.md
 # pick them up without a duplicate invocation.
+#
+# When pytest-cov is installed (requirements-dev.txt) a *full-suite*
+# run also enforces a line-coverage floor over repro.core — the engine
+# is the paper's contribution and must not grow untested branches.  The
+# floor is a ratchet: raise it as coverage rises, never lower it to
+# make a PR pass.  Subset invocations (`scripts/test_fast.sh
+# tests/test_engine.py`) skip the gate — a partial run cannot meet a
+# whole-suite floor.  (The container image may lack pytest-cov; the
+# suite then runs without the coverage gate rather than failing on a
+# missing dep.)
 set -euo pipefail
 cd "$(dirname "$0")/.."
-PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -q -m "not slow" "$@"
+
+COV_ARGS=()
+if [ "$#" -eq 0 ] && python -c "import pytest_cov" >/dev/null 2>&1; then
+    COV_ARGS=(--cov=repro.core --cov-report=term --cov-fail-under=75)
+fi
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m pytest -q -m "not slow" ${COV_ARGS[@]+"${COV_ARGS[@]}"} "$@"

@@ -1,0 +1,87 @@
+#!/usr/bin/env python
+"""Pre-plan every program in ``repro.core.programs`` into an on-disk
+AOT plan cache (and, with ``--goldens``, regenerate the golden-plan
+corpus under ``tests/goldens/plans/``).
+
+Run from the repo root::
+
+    PYTHONPATH=src python scripts/warm_cache.py --cache-dir .plan_cache
+    PYTHONPATH=src python scripts/warm_cache.py --goldens
+
+A warmed cache directory lets any later process compile these programs
+on the Pallas backend without ever invoking the analysis pipeline:
+``compile_program(prog, backend="pallas", plan_cache_dir=...)`` loads
+the serialized :class:`~repro.core.plan.KernelPlan`, re-validates it,
+and builds the interpreter directly (see docs/BACKENDS.md, "AOT plan
+cache").  The golden corpus is the same serialized form checked into
+the repo — ``tests/test_plan.py`` re-plans every program on every run
+and diffs against it, so planner drift shows up as a reviewable
+golden-file change, regenerated only through this script.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.core import plan_pallas  # noqa: E402
+from repro.core.dataflow import build_dataflow  # noqa: E402
+from repro.core.fusion import fuse_inest_dag  # noqa: E402
+from repro.core.infer import infer  # noqa: E402
+from repro.core.plancache import PlanCache, program_plan_key  # noqa: E402
+from repro.core.programs import ALL_PROGRAMS  # noqa: E402
+from repro.core.reuse import analyze_storage  # noqa: E402
+
+GOLDEN_DIR = ROOT / "tests" / "goldens" / "plans"
+
+
+def plan_program(build):
+    """Run the pure analysis pipeline (no execution) for one builder."""
+    program = build()
+    idag = infer(program)
+    storage = analyze_storage(fuse_inest_dag(build_dataflow(idag)))
+    return program, plan_pallas(storage, idag)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Pre-plan every repro.core.programs entry into an "
+                    "on-disk AOT plan cache / the golden-plan corpus.")
+    ap.add_argument("--cache-dir", default=None,
+                    help="plan-cache directory to warm (created if "
+                         "missing); omit to skip cache warming")
+    ap.add_argument("--goldens", action="store_true",
+                    help=f"rewrite the golden corpus under "
+                         f"{GOLDEN_DIR.relative_to(ROOT)}")
+    args = ap.parse_args(argv)
+    if args.cache_dir is None and not args.goldens:
+        ap.error("nothing to do: pass --cache-dir and/or --goldens")
+
+    cache = PlanCache(args.cache_dir) if args.cache_dir else None
+    if args.goldens:
+        GOLDEN_DIR.mkdir(parents=True, exist_ok=True)
+    for name, build in sorted(ALL_PROGRAMS.items()):
+        program, kplan = plan_program(build)
+        what = []
+        if cache is not None:
+            stored = cache.put(program_plan_key(program), kplan)
+            what.append("cached" if stored else "NOT SERIALIZABLE")
+        if args.goldens:
+            path = GOLDEN_DIR / f"{name}.json"
+            path.write_text(
+                json.dumps(kplan.to_dict(), indent=1, sort_keys=True) + "\n")
+            what.append("golden")
+        print(f"  {name:24s} {len(kplan.calls)} call(s)  [{', '.join(what)}]")
+    if cache is not None:
+        print(f"warmed {args.cache_dir}: {len(cache)} entr(y/ies)")
+    if args.goldens:
+        print(f"wrote goldens to {GOLDEN_DIR.relative_to(ROOT)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

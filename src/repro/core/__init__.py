@@ -1,24 +1,35 @@
 """HFAV core: the paper's fusion/vectorization engine as a JAX module."""
+
+#: Build stamp folded into on-disk plan-cache keys and entry headers
+#: (repro.core.plancache): bump alongside behavior changes that should
+#: invalidate persisted plans without a schema change.
+__version__ = "0.5.0"
+
 from .codegen_jax import Generated
 from .codegen_pallas import PallasGenerated, generate_pallas, plan_pallas
 from .engine import (BACKENDS, clear_compile_cache, compile_cache_size,
                      compile_program, explain, pallas_auto_viable,
-                     plan_cache_size, program_signature,
-                     register_pallas_split_win)
+                     plan_cache_cap, plan_cache_size, program_signature,
+                     register_pallas_split_win, set_plan_cache_cap)
 from .fusion import FusedSchedule, Unfusable, fuse_inest_dag
 from .infer import IDAG, InferenceError, infer
 from .dataflow import build_dataflow
-from .plan import CallPlan, KernelPlan, PallasUnsupported, fn_key
+from .plan import (SCHEMA_VERSION, CallPlan, KernelPlan, PallasUnsupported,
+                   PlanSerializationError, fn_key, register_step_builder,
+                   unregister_step_builder)
+from .plancache import PlanCache, program_plan_key
 from .reuse import analyze_storage, reuse_graph, reuse_order
 from .rules import Extent, KernelRule, Program, axiom, goal, kernel
 from .terms import Term, parse_term, unify_term
 
 __all__ = [
     "BACKENDS", "CallPlan", "Generated", "KernelPlan", "PallasGenerated",
-    "PallasUnsupported", "clear_compile_cache", "compile_cache_size",
+    "PallasUnsupported", "PlanCache", "PlanSerializationError",
+    "SCHEMA_VERSION", "clear_compile_cache", "compile_cache_size",
     "compile_program", "fn_key", "generate_pallas",
-    "pallas_auto_viable", "plan_cache_size", "plan_pallas",
-    "program_signature", "register_pallas_split_win",
+    "pallas_auto_viable", "plan_cache_cap", "plan_cache_size", "plan_pallas",
+    "program_plan_key", "program_signature", "register_pallas_split_win",
+    "register_step_builder", "set_plan_cache_cap", "unregister_step_builder",
     "explain", "FusedSchedule", "Unfusable",
     "fuse_inest_dag", "IDAG", "InferenceError", "infer", "build_dataflow",
     "analyze_storage", "reuse_graph", "reuse_order", "Extent", "KernelRule",

@@ -50,7 +50,7 @@ program-to-plan entry point used by tests and ``explain(verbose=True)``.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable
+from typing import Callable, Optional
 
 import jax.numpy as jnp
 
@@ -60,7 +60,8 @@ from .infer import IDAG, infer
 from .inest import walk_bodies
 from .plan import (AccPlan, AxiomPlan, CallPlan, GridDim, HostStepPlan,
                    InputPlan, KernelPlan, OutputPlan, PallasUnsupported,
-                   ReadPlan, StepPlan, WindowPlan, require_full_outer_iteration,
+                   ReadPlan, StepPlan, WindowPlan, acc_init_wrap,
+                   require_full_outer_iteration,
                    require_host_group_0dim, require_host_orderable,
                    require_host_read_no_offset, require_kept_prefix,
                    require_loop_order, require_matching_producer_extent,
@@ -409,10 +410,7 @@ def _plan_nest(plan: StoragePlan, idag: IDAG, nest_idx: int) -> CallPlan:
                 require_output_row_span(ovp.name, c_ilo, c_ilo + c_w,
                                         what="partial-accumulator row")
                 init = ovp.acc_init
-
-                def fn_with_init(*ins, _f=g.rule.fn, _i=init):
-                    return _f(jnp.full_like(ins[0], _i), *ins)
-
+                fn_with_init = acc_init_wrap(g.rule.fn, init)
                 glos, ghis = outer_extents(gexts)
                 gj = gexts.get(jdim)
                 steps.append(StepPlan(g.name, fns.add(fn_with_init),
@@ -573,11 +571,17 @@ def plan_pallas(plan: StoragePlan, idag: IDAG) -> KernelPlan:
 @dataclass
 class PallasGenerated:
     """The Pallas backend's end product: the declarative
-    :class:`KernelPlan` plus the interpreter callable executing it."""
+    :class:`KernelPlan` plus the interpreter callable executing it.
+
+    ``plan`` is the analysis-side :class:`StoragePlan` when the
+    compilation ran the pipeline — and ``None`` when the kernel plan
+    was restored from an on-disk AOT cache
+    (:mod:`repro.core.plancache`), where the analysis never ran at
+    all."""
 
     kernel_plan: KernelPlan
     fn: Callable
-    plan: StoragePlan
+    plan: Optional[StoragePlan] = None
 
     @property
     def calls(self) -> tuple[CallPlan, ...]:
@@ -591,7 +595,14 @@ class PallasGenerated:
 
     @property
     def schedule(self):
-        """The fused schedule this execution realizes."""
+        """The fused schedule this execution realizes (unavailable on
+        executions restored from the on-disk plan cache)."""
+        if self.plan is None:
+            raise ValueError(
+                "this PallasGenerated was restored from an on-disk plan "
+                "cache: the analysis pipeline never ran, so no "
+                "StoragePlan/schedule exists (recompile without "
+                "plan_cache_dir to inspect the schedule)")
         return self.plan.schedule
 
 

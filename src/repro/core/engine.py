@@ -34,11 +34,17 @@ Compiled results are cached at two levels: a fast path keyed on
 (program signature, backend, dtype, interpret, double_buffer), and —
 for the Pallas backend — a **plan-level** cache keyed on
 :meth:`KernelPlan.cache_key`, so two differently-built programs that
-lower to structurally equal plans share one compiled interpreter.
+lower to structurally equal plans share one compiled interpreter.  The
+plan-level cache is LRU-bounded (:func:`set_plan_cache_cap`) and, when
+``plan_cache_dir=...`` is passed, becomes the L1 over a durable
+on-disk L2 (:mod:`repro.core.plancache`): a process that finds its
+program's serialized plan on disk builds the interpreter straight from
+the loaded IR and never invokes the analysis pipeline at all.
 """
 from __future__ import annotations
 
-from typing import Union
+from collections import OrderedDict
+from typing import Optional, Union
 
 import jax.numpy as jnp
 
@@ -48,6 +54,7 @@ from .codegen_pallas import (PallasGenerated, PallasUnsupported,
 from .dataflow import build_dataflow
 from .fusion import fuse_inest_dag
 from .infer import infer
+from .plan import KernelPlan
 from .plan import fn_key as _fn_key
 from .reuse import StoragePlan, analyze_storage
 from .rules import Program
@@ -55,7 +62,8 @@ from .rules import Program
 BACKENDS = ("auto", "jax", "pallas")
 
 _CACHE: dict = {}
-_PLAN_CACHE: dict = {}
+_PLAN_CACHE: "OrderedDict" = OrderedDict()
+_PLAN_CACHE_CAP = 128
 
 # Split (multi-nest) schedules that measured faster on the stencil
 # executor than on the JAX backend (real-TPU interpret=False runs).
@@ -126,6 +134,27 @@ def plan_cache_size() -> int:
     return len(_PLAN_CACHE)
 
 
+def plan_cache_cap() -> int:
+    """Current LRU bound of the in-memory plan-level compile cache."""
+    return _PLAN_CACHE_CAP
+
+
+def set_plan_cache_cap(cap: int) -> int:
+    """Re-bound the in-memory plan-level compile cache (LRU).
+
+    Every compiled-interpreter entry pins its plan and closures, so the
+    cache must not grow without bound in long-lived serving processes.
+    Lowering the cap evicts least-recently-used entries immediately;
+    returns the previous cap so callers can restore it."""
+    global _PLAN_CACHE_CAP
+    if cap < 1:
+        raise ValueError(f"plan cache cap must be >= 1, got {cap}")
+    prev, _PLAN_CACHE_CAP = _PLAN_CACHE_CAP, int(cap)
+    while len(_PLAN_CACHE) > _PLAN_CACHE_CAP:
+        _PLAN_CACHE.popitem(last=False)
+    return prev
+
+
 def _build_plan(program: Program):
     idag = infer(program)
     dag = build_dataflow(idag)
@@ -154,21 +183,25 @@ def pallas_auto_viable(plan: StoragePlan) -> bool:
     return plan.schedule.program.name in PALLAS_SPLIT_WINS
 
 
-def _emit_pallas(plan, idag, *, dtype, interpret, double_buffer,
-                 use_cache=True) -> PallasGenerated:
-    """Plan, then interpret — through the plan-level cache.
+def _emit_plan(kplan: KernelPlan, plan: Optional[StoragePlan], *, dtype,
+               interpret, double_buffer, use_cache=True) -> PallasGenerated:
+    """Build (or fetch) the interpreter for a finished kernel plan.
 
-    The planner runs unconditionally (it is cheap and raises
-    :class:`PallasUnsupported` for unsupported shapes); the interpreter
-    construction is memoized on :meth:`KernelPlan.cache_key` plus the
-    execution flags, so programs lowering to structurally equal plans
-    share one compiled executor."""
-    kplan = plan_pallas(plan, idag)
+    Memoized on :meth:`KernelPlan.cache_key` plus the execution flags
+    (LRU-bounded, :func:`set_plan_cache_cap`), so programs lowering to
+    structurally equal plans share one compiled executor — whether the
+    plan came from the planner or from the on-disk cache."""
     pkey = (kplan.cache_key(), jnp.dtype(dtype).name, bool(interpret),
             bool(double_buffer))
     if use_cache:
         hit = _PLAN_CACHE.get(pkey)
         if hit is not None:
+            _PLAN_CACHE.move_to_end(pkey)
+            if hit.plan is None and plan is not None:
+                # a disk-restored entry lacks the analysis-side
+                # StoragePlan; this caller just built one — upgrade the
+                # shared artifact so .schedule works everywhere
+                hit.plan = plan
             return hit
     # imported here: the interpreter module imports the plan IR from
     # repro.core, so a module-level import would be circular
@@ -178,7 +211,57 @@ def _emit_pallas(plan, idag, *, dtype, interpret, double_buffer,
     gen = PallasGenerated(kplan, fn, plan)
     if use_cache:
         _PLAN_CACHE[pkey] = gen
+        while len(_PLAN_CACHE) > _PLAN_CACHE_CAP:
+            _PLAN_CACHE.popitem(last=False)
     return gen
+
+
+def _emit_pallas(plan, idag, *, dtype, interpret, double_buffer,
+                 use_cache=True) -> PallasGenerated:
+    """Plan, then interpret — through the plan-level cache.
+
+    The planner runs unconditionally (it is cheap and raises
+    :class:`PallasUnsupported` for unsupported shapes); interpreter
+    construction is memoized by :func:`_emit_plan`."""
+    kplan = plan_pallas(plan, idag)
+    return _emit_plan(kplan, plan, dtype=dtype, interpret=interpret,
+                      double_buffer=double_buffer, use_cache=use_cache)
+
+
+def _load_plan_from_disk(program: Program, backend: str,
+                         plan_cache_dir) -> Optional[KernelPlan]:
+    """L2 lookup: fetch the program's serialized plan, honoring auto's
+    routing rules (a pre-warmed multi-nest plan must not flip an
+    ``auto`` compilation that would otherwise take the JAX backend —
+    split schedules still require a registered win)."""
+    from .plancache import PlanCache, program_plan_key
+    try:
+        kplan = PlanCache(plan_cache_dir).get(program_plan_key(program))
+    except OSError:  # uncreatable/unreadable cache dir: cold compile
+        return None
+    if kplan is None:
+        return None
+    if backend == "auto" and len(kplan.calls) != 1 \
+            and program.name not in PALLAS_SPLIT_WINS:
+        return None
+    return kplan
+
+
+def _store_plan_to_disk(program: Program, kplan: KernelPlan,
+                        plan_cache_dir, only_if_missing: bool = False) -> None:
+    """L2 fill: persist a planned program (best-effort — plans whose
+    callables have no stable spec, and filesystem failures, are
+    skipped, not errors).  ``only_if_missing`` makes the fill
+    idempotent for hot paths that revisit the same program."""
+    from .plancache import PlanCache, program_plan_key
+    try:
+        cache = PlanCache(plan_cache_dir)
+        key = program_plan_key(program)
+        if only_if_missing and cache.has(key):
+            return
+        cache.put(key, kplan)
+    except OSError:
+        pass
 
 
 def _pallas_auto_probe(plan, idag, *, dtype, interpret, double_buffer,
@@ -206,13 +289,24 @@ def compile_program(
     interpret: bool = True,
     double_buffer: bool = False,
     use_cache: bool = True,
+    plan_cache_dir=None,
 ) -> Union[Generated, PallasGenerated]:
     """Compile ``program`` through the HFAV pipeline onto a backend.
 
     ``interpret`` and ``double_buffer`` only affect the Pallas backend
     (CPU validation vs TPU execution, and BlockSpec streaming vs the
     explicit two-slot DMA pipeline).  Results are memoized; pass
-    ``use_cache=False`` to force a rebuild."""
+    ``use_cache=False`` to force a rebuild.
+
+    ``plan_cache_dir`` names a durable on-disk plan cache
+    (:mod:`repro.core.plancache`): Pallas-bound compilations first try
+    to load the program's serialized :class:`KernelPlan` from there —
+    a hit skips the entire analysis pipeline (inference, fusion,
+    storage, planning; the loaded plan is re-validated via
+    :meth:`KernelPlan.validate`) — and freshly-planned programs are
+    persisted back, so a second process compiles warm.  Pre-populate
+    with ``scripts/warm_cache.py``; ``use_cache`` governs only the
+    in-memory caches."""
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; expected {BACKENDS}")
     # double_buffer is a Pallas streaming mode: normalize it out of the
@@ -223,7 +317,30 @@ def compile_program(
     if use_cache:
         hit = _CACHE.get(key)
         if hit is not None:
+            if plan_cache_dir is not None and isinstance(hit,
+                                                         PallasGenerated):
+                # the program compiled before this call named a cache
+                # dir: back-fill the L2 so the next process runs warm
+                _store_plan_to_disk(program, hit.kernel_plan,
+                                    plan_cache_dir, only_if_missing=True)
             return hit
+    if plan_cache_dir is not None and backend in ("pallas", "auto"):
+        # disk-restored artifacts carry no StoragePlan, so they live
+        # under a marked key: a later compile *without* plan_cache_dir
+        # must rebuild the full artifact, not inherit the degraded one
+        dkey = key + ("disk",)
+        if use_cache:
+            hit = _CACHE.get(dkey)
+            if hit is not None:
+                return hit
+        kplan = _load_plan_from_disk(program, backend, plan_cache_dir)
+        if kplan is not None:
+            gen = _emit_plan(kplan, None, dtype=dtype, interpret=interpret,
+                             double_buffer=double_buffer,
+                             use_cache=use_cache)
+            if use_cache:
+                _CACHE[dkey] = gen
+            return gen
     idag, plan = _build_plan(program)
     if backend == "jax":
         gen: Union[Generated, PallasGenerated] = generate(plan, idag)
@@ -236,6 +353,8 @@ def compile_program(
                                  use_cache=use_cache)
         if gen is None:
             gen = generate(plan, idag)
+    if plan_cache_dir is not None and isinstance(gen, PallasGenerated):
+        _store_plan_to_disk(program, gen.kernel_plan, plan_cache_dir)
     if use_cache:
         _CACHE[key] = gen
         if key[4] and isinstance(gen, Generated):

@@ -30,13 +30,33 @@ planner while lowering and re-run by :meth:`KernelPlan.validate` on the
 finished IR.  Each raise site carries a ``# doc-row:`` marker tying it
 to the restriction table in docs/BACKENDS.md (enforced by
 ``scripts/check_docs.sh``).
+
+The IR is **durable**: every dataclass has a versioned
+``to_dict``/``from_dict`` pair (:data:`SCHEMA_VERSION`), and the kernel
+callables — the one non-declarative ingredient — serialize as *function
+specs* re-linked on load through the registered step-builder table
+(:func:`register_step_builder`, :func:`fn_to_spec`,
+:func:`fn_from_spec`): module-level functions travel as importable
+references, reduction init-wrappers (:func:`acc_init_wrap`) as a
+``with_init`` spec over their base, and anything else (lambdas,
+closures) must be registered under a stable key or serialization raises
+:class:`PlanSerializationError`.  The on-disk AOT cache
+(:mod:`repro.core.plancache`) and the golden-plan corpus
+(``tests/goldens/plans/``) are built on this format.
 """
 from __future__ import annotations
 
 import dataclasses
+import importlib
 import json
 from dataclasses import dataclass, field
 from typing import Callable, Optional, Union
+
+#: Version of the serialized-plan schema.  Bump on any change to the
+#: dataclass fields, the function-spec format, or their meaning — the
+#: on-disk plan cache treats entries from other versions as misses and
+#: the golden corpus must be regenerated (scripts/warm_cache.py).
+SCHEMA_VERSION = 1
 
 
 class PallasUnsupported(Exception):
@@ -81,6 +101,143 @@ def fn_key(fn):
 
 
 # ---------------------------------------------------------------------------
+# Plan serialization: function specs and the step-builder registry
+# ---------------------------------------------------------------------------
+
+class PlanSerializationError(Exception):
+    """A plan cannot be serialized or deserialized.
+
+    Raised when a kernel callable has no stable spec (a lambda/closure
+    that was never registered via :func:`register_step_builder`), when a
+    spec cannot be re-linked on load, or when a serialized plan's schema
+    version does not match :data:`SCHEMA_VERSION`."""
+
+
+_STEP_BUILDERS: dict[str, Callable] = {}
+
+
+def register_step_builder(key: str, fn: Callable) -> None:
+    """Register a kernel callable under a stable key.
+
+    Serialized plans reference callables by spec; lambdas and closures
+    have no importable identity, so programs built from them must
+    register each callable here (same key in every process) before
+    their plans can round-trip.  Re-registering a key overwrites it."""
+    _STEP_BUILDERS[key] = fn
+
+
+def unregister_step_builder(key: str) -> None:
+    """Remove a registered step builder (no-op if absent)."""
+    _STEP_BUILDERS.pop(key, None)
+
+
+def acc_init_wrap(fn: Callable, init: float) -> Callable:
+    """Wrap a reduction combine so its identity row is baked in:
+    ``wrapped(*ins) == fn(full_like(ins[0], init), *ins)``.
+
+    The planner uses this for row-kept reductions (each grid step's
+    combine starts from the identity).  The wrapper carries its base
+    callable and init value as attributes, so :func:`fn_to_spec`
+    serializes it as a ``with_init`` spec over the base function."""
+    def wrapped(*ins, _f=fn, _i=init):
+        import jax.numpy as jnp
+        return _f(jnp.full_like(ins[0], _i), *ins)
+    wrapped._plan_base_fn = fn
+    wrapped._plan_init = float(init)
+    return wrapped
+
+
+def _resolve_ref(module: str, qualname: str):
+    obj = importlib.import_module(module)
+    for part in qualname.split("."):
+        obj = getattr(obj, part)
+    return obj
+
+
+def fn_to_spec(fn: Callable) -> dict:
+    """Serialize one kernel callable to a JSON-safe spec.
+
+    Three spec kinds, tried in order: ``registered`` (the callable was
+    registered via :func:`register_step_builder`), ``with_init`` (an
+    :func:`acc_init_wrap` wrapper — recurses into its base), and ``ref``
+    (an importable module-level function, stored as module + qualname).
+    Anything else raises :class:`PlanSerializationError` — the plan is
+    not durable until its callables have stable identities."""
+    for key, cand in _STEP_BUILDERS.items():
+        if cand is fn:
+            return {"kind": "registered", "key": key}
+    base = getattr(fn, "_plan_base_fn", None)
+    if base is not None:
+        return {"kind": "with_init", "base": fn_to_spec(base),
+                "init": float(fn._plan_init)}
+    mod = getattr(fn, "__module__", None)
+    qn = getattr(fn, "__qualname__", None)
+    if mod and qn and "<" not in qn:
+        try:
+            target = _resolve_ref(mod, qn)
+        except Exception:
+            target = None
+        if target is fn:
+            return {"kind": "ref", "module": mod, "qualname": qn}
+    raise PlanSerializationError(
+        f"kernel callable {fn!r} has no stable identity: not a "
+        f"module-level function and not registered via "
+        f"register_step_builder")
+
+
+def fn_from_spec(spec: dict) -> Callable:
+    """Re-link one serialized function spec to a live callable.
+
+    The inverse of :func:`fn_to_spec`; raises
+    :class:`PlanSerializationError` when a ``registered`` key is absent
+    from the step-builder table or a ``ref`` no longer resolves."""
+    kind = spec.get("kind")
+    if kind == "registered":
+        key = spec["key"]
+        if key not in _STEP_BUILDERS:
+            raise PlanSerializationError(
+                f"step builder {key!r} is not registered in this process "
+                f"(register_step_builder must run before plan loads)")
+        return _STEP_BUILDERS[key]
+    if kind == "with_init":
+        return acc_init_wrap(fn_from_spec(spec["base"]),
+                             float(spec["init"]))
+    if kind == "ref":
+        try:
+            fn = _resolve_ref(spec["module"], spec["qualname"])
+        except Exception as e:
+            raise PlanSerializationError(
+                f"cannot re-link {spec['module']}.{spec['qualname']}: {e}"
+            ) from e
+        if not callable(fn):
+            raise PlanSerializationError(
+                f"{spec['module']}.{spec['qualname']} resolved to a "
+                f"non-callable {fn!r}")
+        return fn
+    raise PlanSerializationError(f"unknown function spec kind {kind!r}")
+
+
+def _jsonable(obj):
+    """Generic dataclass walker producing JSON-native values; per-call
+    fn tables serialize through fn_to_spec."""
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        out = {}
+        for f in dataclasses.fields(obj):
+            if f.name == "fns":
+                out["fns"] = [fn_to_spec(fn) for fn in obj.fns]
+            else:
+                out[f.name] = _jsonable(getattr(obj, f.name))
+        return out
+    if isinstance(obj, (tuple, list)):
+        return [_jsonable(x) for x in obj]
+    return obj
+
+
+def _pairs(rows, conv=str) -> tuple:
+    return tuple((str(a), conv(b)) for a, b in rows)
+
+
+# ---------------------------------------------------------------------------
 # IR dataclasses
 # ---------------------------------------------------------------------------
 
@@ -95,6 +252,15 @@ class GridDim:
     lo: int = 0
     hi_off: int = 0
 
+    def to_dict(self) -> dict:
+        """JSON-native form (schema :data:`SCHEMA_VERSION`)."""
+        return _jsonable(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "GridDim":
+        """Rebuild from :meth:`to_dict` output."""
+        return cls(str(d["dim"]), int(d["lo"]), int(d["hi_off"]))
+
 
 @dataclass(frozen=True)
 class AxiomPlan:
@@ -106,6 +272,17 @@ class AxiomPlan:
     array: str
     dims: tuple[str, ...]
     extents: tuple[tuple[str, str, int, int], ...]
+
+    def to_dict(self) -> dict:
+        """JSON-native form (schema :data:`SCHEMA_VERSION`)."""
+        return _jsonable(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "AxiomPlan":
+        """Rebuild from :meth:`to_dict` output."""
+        return cls(str(d["array"]), tuple(str(x) for x in d["dims"]),
+                   tuple((str(a), str(b), int(c), int(e))
+                         for a, b, c, e in d["extents"]))
 
 
 @dataclass(frozen=True)
@@ -147,6 +324,20 @@ class InputPlan:
         """Whether this input streams through a multi-plane VMEM window."""
         return self.p_stages > 1 or self.p_lead != 0
 
+    def to_dict(self) -> dict:
+        """JSON-native form (schema :data:`SCHEMA_VERSION`)."""
+        return _jsonable(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "InputPlan":
+        """Rebuild from :meth:`to_dict` output."""
+        return cls(str(d["name"]), int(d["stages"]), int(d["lead"]),
+                   int(d["j_lo"]), int(d["j_hi"]), int(d["i_lo"]),
+                   int(d["i_hi"]), bool(d["scalar"]), int(d["n_outer"]),
+                   int(d["p_stages"]), int(d["p_lead"]),
+                   tuple(int(x) for x in d["outer_los"]),
+                   tuple(int(x) for x in d["outer_his"]))
+
 
 @dataclass(frozen=True)
 class WindowPlan:
@@ -177,6 +368,17 @@ class WindowPlan:
         """Whether this window keeps whole planes resident."""
         return self.p_stages > 1 or self.p_lead != 0
 
+    def to_dict(self) -> dict:
+        """JSON-native form (schema :data:`SCHEMA_VERSION`)."""
+        return _jsonable(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "WindowPlan":
+        """Rebuild from :meth:`to_dict` output."""
+        return cls(str(d["name"]), int(d["stages"]), int(d["i_lo"]),
+                   int(d["i_hi"]), int(d["p_stages"]), int(d["p_lead"]),
+                   int(d["j_lo"]), int(d["j_hi"]))
+
 
 @dataclass(frozen=True)
 class AccPlan:
@@ -198,6 +400,16 @@ class AccPlan:
         """Whether the row re-initializes per kept-prefix outer tile."""
         return self.n_kept > 0
 
+    def to_dict(self) -> dict:
+        """JSON-native form (schema :data:`SCHEMA_VERSION`)."""
+        return _jsonable(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "AccPlan":
+        """Rebuild from :meth:`to_dict` output."""
+        return cls(str(d["name"]), int(d["w_off"]), float(d["init"]),
+                   int(d["n_kept"]))
+
 
 @dataclass(frozen=True)
 class ReadPlan:
@@ -216,6 +428,16 @@ class ReadPlan:
     col0: int
     w_off: int
     p_off: int = 0
+
+    def to_dict(self) -> dict:
+        """JSON-native form (schema :data:`SCHEMA_VERSION`)."""
+        return _jsonable(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ReadPlan":
+        """Rebuild from :meth:`to_dict` output."""
+        return cls(str(d["src"]), int(d["j_off"]), int(d["col0"]),
+                   int(d["w_off"]), int(d["p_off"]))
 
 
 @dataclass(frozen=True)
@@ -245,6 +467,26 @@ class StepPlan:
     acc: Optional[str] = None
     valid: tuple[int, int] = (0, 0)
     valid_outer: tuple[tuple[int, int], ...] = ()
+
+    def to_dict(self) -> dict:
+        """JSON-native form (schema :data:`SCHEMA_VERSION`)."""
+        return _jsonable(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "StepPlan":
+        """Rebuild from :meth:`to_dict` output (``'out'`` write targets
+        come back as ints, every other target kind as a name)."""
+        writes = tuple(
+            tuple((str(k), int(t) if k == "out" else str(t))
+                  for k, t in targets)
+            for targets in d["writes"])
+        return cls(str(d["op"]), int(d["fn_idx"]),
+                   tuple(ReadPlan.from_dict(r) for r in d["reads"]),
+                   writes, int(d["lead"]), int(d["out_col0"]),
+                   int(d["out_w_off"]),
+                   None if d["acc"] is None else str(d["acc"]),
+                   (int(d["valid"][0]), int(d["valid"][1])),
+                   tuple((int(a), int(b)) for a, b in d["valid_outer"]))
 
 
 @dataclass(frozen=True)
@@ -280,6 +522,24 @@ class OutputPlan:
     reduce_idx: Optional[int] = None  # lane reduction, into CallPlan.fns
     reduce_init: float = 0.0
 
+    def to_dict(self) -> dict:
+        """JSON-native form (schema :data:`SCHEMA_VERSION`)."""
+        return _jsonable(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "OutputPlan":
+        """Rebuild from :meth:`to_dict` output."""
+        return cls(str(d["name"]), str(d["kind"]), int(d["lead"]),
+                   int(d["j_lo"]), int(d["j_hi"]), int(d["i_lo"]),
+                   int(d["i_hi"]),
+                   tuple(int(x) for x in d["outer_lo"]),
+                   tuple(int(x) for x in d["outer_hi"]),
+                   tuple(int(x) for x in d["outer_lead"]),
+                   None if d["acc"] is None else str(d["acc"]),
+                   float(d["fill"]), int(d["n_kept"]),
+                   None if d["reduce_idx"] is None else int(d["reduce_idx"]),
+                   float(d["reduce_init"]))
+
 
 @dataclass(frozen=True)
 class HostStepPlan:
@@ -290,6 +550,17 @@ class HostStepPlan:
     fn_idx: int
     reads: tuple[str, ...]
     writes: tuple[str, ...]
+
+    def to_dict(self) -> dict:
+        """JSON-native form (schema :data:`SCHEMA_VERSION`)."""
+        return _jsonable(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "HostStepPlan":
+        """Rebuild from :meth:`to_dict` output."""
+        return cls(str(d["op"]), int(d["fn_idx"]),
+                   tuple(str(x) for x in d["reads"]),
+                   tuple(str(x) for x in d["writes"]))
 
 
 @dataclass(frozen=True)
@@ -348,6 +619,31 @@ class CallPlan:
     def outer_hi_off(self) -> tuple[int, ...]:
         """Per-outer-dim canonical range end offsets."""
         return tuple(g.hi_off for g in self.grid[:-1])
+
+    def to_dict(self) -> dict:
+        """JSON-native form (schema :data:`SCHEMA_VERSION`); the fn
+        table serializes as function specs (:func:`fn_to_spec`)."""
+        return _jsonable(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "CallPlan":
+        """Rebuild from :meth:`to_dict` output, re-linking the fn table
+        through :func:`fn_from_spec` (raises
+        :class:`PlanSerializationError` when a spec cannot resolve)."""
+        return cls(
+            name=str(d["name"]),
+            grid=tuple(GridDim.from_dict(g) for g in d["grid"]),
+            vec_dim=str(d["vec_dim"]),
+            inputs=tuple(InputPlan.from_dict(i) for i in d["inputs"]),
+            windows=tuple(WindowPlan.from_dict(w) for w in d["windows"]),
+            accs=tuple(AccPlan.from_dict(a) for a in d["accs"]),
+            steps=tuple(StepPlan.from_dict(s) for s in d["steps"]),
+            outputs=tuple(OutputPlan.from_dict(o) for o in d["outputs"]),
+            host_pre=tuple(HostStepPlan.from_dict(h) for h in d["host_pre"]),
+            host_post=tuple(HostStepPlan.from_dict(h)
+                            for h in d["host_post"]),
+            fns=tuple(fn_from_spec(s) for s in d.get("fns", ())),
+        )
 
 
 @dataclass(frozen=True)
@@ -489,6 +785,40 @@ class KernelPlan:
         lines.append("  goals: " + ", ".join(
             f"{store}<-{var}" for store, var in self.goal_outputs))
         return "\n".join(lines)
+
+    def to_dict(self) -> dict:
+        """Full durable form: every field in JSON-native values, the
+        per-call fn tables as re-linkable function specs, and the
+        schema version stamped in (the on-disk plan cache's payload and
+        the golden-corpus file format)."""
+        d = _jsonable(self)
+        d["schema"] = SCHEMA_VERSION
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "KernelPlan":
+        """Rebuild a plan from :meth:`to_dict` output.
+
+        Checks the schema version first (mismatch raises
+        :class:`PlanSerializationError` — stale cache entries must
+        re-plan, not misexecute) and re-links every kernel callable
+        through the function-spec table.  The result is structurally
+        equal to the original plan and shares its
+        :meth:`cache_key`; callers holding untrusted bytes should
+        re-run :meth:`validate` (the on-disk cache does)."""
+        ver = d.get("schema")
+        if ver != SCHEMA_VERSION:
+            raise PlanSerializationError(
+                f"serialized plan has schema version {ver!r}; this "
+                f"build reads version {SCHEMA_VERSION}")
+        return cls(
+            program=str(d["program"]),
+            loop_order=tuple(str(x) for x in d["loop_order"]),
+            dim_sizes=_pairs(d["dim_sizes"]),
+            axioms=tuple(AxiomPlan.from_dict(a) for a in d["axioms"]),
+            goal_outputs=_pairs(d["goal_outputs"]),
+            calls=tuple(CallPlan.from_dict(c) for c in d["calls"]),
+        )
 
     def to_json(self) -> str:
         """Serialize the plan (function tables rendered as op names —

@@ -48,6 +48,14 @@ docs/BACKENDS.md):
 Every kernel body is a pure elementwise jnp function over rows — the
 engine's unfused references (used by tests/benchmarks) call the same
 bodies, so fused-vs-unfused comparisons share arithmetic exactly.
+Every kernel body is also a *module-level* function, so serialized
+KernelPlans re-link them by importable reference
+(``repro.core.plan.fn_to_spec``) — keep it that way when adding
+programs, or register closures via ``register_step_builder``.
+
+:data:`ALL_PROGRAMS` maps every program name to its builder; it drives
+the golden-plan corpus (``tests/goldens/plans/``), the AOT cache
+warmer (``scripts/warm_cache.py``) and parametrized tests.
 """
 from __future__ import annotations
 
@@ -758,3 +766,30 @@ def hydro1d_program(name: str = "hydro1d") -> Program:
         loop_order=("j", "i"),
         name=name,
     )
+
+
+# ---------------------------------------------------------------------------
+# Program registry
+# ---------------------------------------------------------------------------
+
+#: Every program in this module, by default name.  One golden plan per
+#: entry lives under tests/goldens/plans/ (regenerate with
+#: ``scripts/warm_cache.py --goldens``); ``scripts/warm_cache.py`` also
+#: pre-plans each entry into an on-disk AOT cache.
+ALL_PROGRAMS = {
+    "laplace5": laplace5_program,
+    "laplace_pair": laplace_pair_program,
+    "pyramid4d": pyramid4d_program,
+    "energy3d": energy3d_program,
+    "plane_sum": plane_sum_program,
+    "heat3d": heat3d_program,
+    "heat3d_stage": heat3d_stage_program,
+    "heat3d_residual_norm": heat3d_residual_norm_program,
+    "advect4d_halo": advect4d_halo_program,
+    "row_sum": row_sum_program,
+    "subset_sum": subset_sum_program,
+    "smooth_norm": smooth_norm_program,
+    "normalization": normalization_program,
+    "cosmo": cosmo_program,
+    "hydro1d": hydro1d_program,
+}

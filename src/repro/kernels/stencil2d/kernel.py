@@ -114,6 +114,16 @@ def build_call(call: CallPlan, sizes: tuple[int, ...], dtype,
         raise ValueError(
             f"call {call.name} has n_outer={n_out} but got sizes {sizes}"
         )
+    fn_refs = [s.fn_idx for s in call.steps]
+    fn_refs += [h.fn_idx for h in call.host_pre + call.host_post]
+    fn_refs += [o.reduce_idx for o in call.outputs
+                if o.reduce_idx is not None]
+    if fn_refs and max(fn_refs) >= len(call.fns):
+        raise ValueError(
+            f"call {call.name}: plan references fn index {max(fn_refs)} "
+            f"but the fn table has {len(call.fns)} entries — a "
+            f"deserialized plan must re-link its kernel callables "
+            f"(KernelPlan.from_dict / repro.core.plan.fn_from_spec)")
     *outer_sizes, nj, ni = sizes
     o_lo = call.outer_lo
     o_hi = call.outer_hi_off

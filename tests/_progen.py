@@ -1,0 +1,130 @@
+"""Deterministic random stencil-chain program generator, shared by the
+plan round-trip suite (tests/test_plan_roundtrip.py) and the
+differential fuzz leg (tests/test_codegen_properties.py).
+
+A *chain descriptor* is a plain JSON-able dict — two stages of stencil
+offsets plus their weights — so failing cases print as a
+copy-pasteable repro and shrink structurally (drop one offset at a
+time).  ``build_chain_program`` turns a descriptor into an HFAV
+Program; with ``register=True`` the generated kernel callables (which
+close over the weights, so they have no importable identity) are
+registered as step builders, making the lowered plan serializable.
+"""
+from __future__ import annotations
+
+import random
+
+from repro.core import (Program, axiom, goal, kernel,
+                        register_step_builder, unregister_step_builder)
+
+
+def random_chain(seed: int) -> dict:
+    """A random 2-stage linear stencil chain descriptor (offsets are
+    (j, i) pairs; weights one per offset), deterministic in ``seed``."""
+    rng = random.Random(seed)
+
+    def offsets(n_max, jr, ir):
+        cand = [(j, i) for j in range(-jr, jr + 1)
+                for i in range(-ir, ir + 1)]
+        n = rng.randint(1, n_max)
+        offs = rng.sample(cand, n)
+        offs.sort()
+        return offs
+
+    offs1 = offsets(4, 1, 2)
+    offs2 = offsets(3, 1, 1)
+    return {
+        "seed": seed,
+        "offs1": offs1,
+        "offs2": offs2,
+        "w1": [round(rng.uniform(-2, 2), 3) for _ in offs1],
+        "w2": [round(rng.uniform(-2, 2), 3) for _ in offs2],
+    }
+
+
+def _ref_str(var: str, oj: int, oi: int) -> str:
+    def part(d, o):
+        return f"{d}?{'+' if o > 0 else '-'}{abs(o)}" if o else f"{d}?"
+    return f"{var}[{part('j', oj)}][{part('i', oi)}]"
+
+
+def _wsum(weights):
+    ws = [float(w) for w in weights]
+    return lambda *xs: sum(w * x for w, x in zip(ws, xs))
+
+
+def chain_halo(desc: dict) -> tuple[int, int]:
+    """(j, i) interior-goal halo wide enough for both stages."""
+    hj = max(abs(oj) for oj, _ in desc["offs1"]) \
+        + max(abs(oj) for oj, _ in desc["offs2"])
+    hi = max(abs(oi) for _, oi in desc["offs1"]) \
+        + max(abs(oi) for _, oi in desc["offs2"])
+    return hj, hi
+
+
+def build_chain_program(desc: dict, name: str = "chain",
+                        register: bool = False) -> Program:
+    """Build the 2-stage chain program for a descriptor.
+
+    ``register=True`` registers the two weight-closures as step
+    builders under keys derived from ``name`` (call
+    :func:`unregister_chain` with the same name to clean up), so the
+    program's KernelPlan serializes."""
+    f1, f2 = _wsum(desc["w1"]), _wsum(desc["w2"])
+    if register:
+        register_step_builder(f"progen:{name}:s1", f1)
+        register_step_builder(f"progen:{name}:s2", f2)
+    k1 = kernel(
+        "s1",
+        [(f"a{k}", _ref_str("u?", oj, oi))
+         for k, (oj, oi) in enumerate(desc["offs1"])],
+        [("o", "mid(u?[j?][i?])")], fn=f1,
+    )
+    k2 = kernel(
+        "s2",
+        [(f"b{k}", f"mid({_ref_str('u?', oj, oi)})")
+         for k, (oj, oi) in enumerate(desc["offs2"])],
+        [("o", "out(u?[j?][i?])")], fn=f2,
+    )
+    hj, hi = chain_halo(desc)
+    return Program(
+        rules=[k1, k2],
+        axioms=[axiom("u[j?][i?]", j="Nj", i="Ni")],
+        goals=[goal("out(u[j][i])", store_as="out",
+                    j=("Nj", hj, -hj), i=("Ni", hi, -hi))],
+        loop_order=("j", "i"),
+        name=name,
+    )
+
+
+def unregister_chain(name: str) -> None:
+    """Drop the step builders ``build_chain_program(register=True)``
+    added for ``name``."""
+    unregister_step_builder(f"progen:{name}:s1")
+    unregister_step_builder(f"progen:{name}:s2")
+
+
+def shrink_chain(desc: dict, still_fails) -> dict:
+    """Greedy structural shrink: repeatedly drop one offset (and its
+    weight) from either stage while ``still_fails(desc)`` stays true.
+    Returns the minimal failing descriptor — the dump a bug report
+    wants."""
+    desc = dict(desc)
+    changed = True
+    while changed:
+        changed = False
+        for stage in ("offs1", "offs2"):
+            wkey = "w1" if stage == "offs1" else "w2"
+            if len(desc[stage]) <= 1:
+                continue
+            for k in range(len(desc[stage])):
+                cand = dict(desc)
+                cand[stage] = desc[stage][:k] + desc[stage][k + 1:]
+                cand[wkey] = desc[wkey][:k] + desc[wkey][k + 1:]
+                if still_fails(cand):
+                    desc = cand
+                    changed = True
+                    break
+            if changed:
+                break
+    return desc

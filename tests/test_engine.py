@@ -281,6 +281,70 @@ def test_compile_cache_distinguishes_bound_methods():
         clear_compile_cache()
 
 
+def _plan_cache_prog(c, name):
+    k = kernel("scale_lru", [("a", "u?[j?][i?]")],
+               [("o", "sl(u?[j?][i?])")], fn=lambda a: a * c)
+    return Program(
+        rules=[k],
+        axioms=[axiom("u[j?][i?]", j="Nj", i="Ni")],
+        goals=[goal("sl(u[j][i])", store_as="sl",
+                    j=("Nj", 0, 0), i=("Ni", 0, 0))],
+        loop_order=("j", "i"),
+        name=name,
+    )
+
+
+def test_plan_cache_lru_eviction():
+    """The in-memory plan-level compile cache is LRU-bounded: entries
+    beyond the cap are evicted oldest-first, recently-hit entries
+    survive, and lowering the cap evicts immediately."""
+    from repro.core import (clear_compile_cache, compile_program,
+                            plan_cache_cap, set_plan_cache_cap)
+    from repro.core import engine
+    from repro.core.engine import plan_cache_size
+
+    progs = [_plan_cache_prog(float(c), f"lru_{c}") for c in (2, 3, 4)]
+    clear_compile_cache()
+    old = set_plan_cache_cap(2)
+    try:
+        assert plan_cache_cap() == 2
+        g0 = compile_program(progs[0], backend="pallas")
+        compile_program(progs[1], backend="pallas")
+        assert plan_cache_size() == 2
+        # hit prog 0 so prog 1 becomes the LRU victim
+        engine._CACHE.clear()  # bypass the signature-level L1
+        assert compile_program(progs[0], backend="pallas") is g0
+        compile_program(progs[2], backend="pallas")
+        assert plan_cache_size() == 2
+        # prog 0 survived (recently used): plan-level hit, same object
+        engine._CACHE.clear()
+        assert compile_program(progs[0], backend="pallas") is g0
+        # prog 1 was evicted: recompiling yields a fresh artifact
+        g1b = compile_program(progs[1], backend="pallas")
+        engine._CACHE.clear()
+        assert compile_program(progs[1], backend="pallas") is g1b
+        # lowering the cap evicts down to the bound immediately
+        set_plan_cache_cap(1)
+        assert plan_cache_size() == 1
+    finally:
+        set_plan_cache_cap(old)
+        clear_compile_cache()
+
+
+def test_plan_cache_cap_validation():
+    """A cap below 1 is rejected; the setter returns the previous cap."""
+    import pytest as _pytest
+
+    from repro.core import plan_cache_cap, set_plan_cache_cap
+
+    cur = plan_cache_cap()
+    with _pytest.raises(ValueError, match=">= 1"):
+        set_plan_cache_cap(0)
+    assert plan_cache_cap() == cur
+    prev = set_plan_cache_cap(cur)
+    assert prev == cur
+
+
 def test_explain_matches_compile_program_routing():
     """explain() routes through the same probe as compile_program —
     including split-win registration and non-default flags."""

@@ -16,8 +16,9 @@ from repro.core.fusion import fuse_inest_dag
 from repro.core.infer import infer
 from repro.core.plan import (CallPlan, GridDim, InputPlan, OutputPlan,
                              PallasUnsupported, ReadPlan, StepPlan)
-from repro.core.programs import (heat3d_program, heat3d_stage_program,
-                                 laplace5_program, normalization_program)
+from repro.core.programs import (ALL_PROGRAMS, heat3d_program,
+                                 heat3d_stage_program, laplace5_program,
+                                 normalization_program)
 from repro.core.reuse import analyze_storage
 from repro.core.rules import Program, axiom, goal, kernel
 
@@ -68,6 +69,34 @@ def test_golden_plan_laplace5():
 
 def test_golden_plan_heat3d():
     assert _plan(heat3d_program()).render() == GOLDEN_HEAT3D
+
+
+GOLDEN_DIR = ROOT / "tests" / "goldens" / "plans"
+
+
+def test_golden_corpus_covers_every_program():
+    """One golden file per ALL_PROGRAMS entry, and no strays."""
+    assert {p.stem for p in GOLDEN_DIR.glob("*.json")} == set(ALL_PROGRAMS)
+
+
+@pytest.mark.parametrize("name", sorted(ALL_PROGRAMS))
+def test_golden_plan_corpus(name):
+    """Re-plan every program and diff its full serialized form against
+    the checked-in golden: any planner drift becomes a reviewable
+    golden-file change (regenerate deliberately via
+    ``scripts/warm_cache.py --goldens``), and the golden itself must
+    deserialize into a validating, cache-key-identical plan — the
+    corpus doubles as a round-trip fixture."""
+    kplan = _plan(ALL_PROGRAMS[name]())
+    path = GOLDEN_DIR / f"{name}.json"
+    got = json.loads(json.dumps(kplan.to_dict()))
+    want = json.loads(path.read_text())
+    assert got == want, (
+        f"planner drift for {name!r}: if intended, regenerate the "
+        f"corpus with scripts/warm_cache.py --goldens")
+    restored = KernelPlan.from_dict(want).validate()
+    assert restored == kplan
+    assert restored.cache_key() == kplan.cache_key()
 
 
 def test_plan_is_serializable():

@@ -1,0 +1,357 @@
+"""The on-disk AOT plan cache: content addressing, atomic durable
+entries, corruption tolerance, LRU bounds, and the headline behavior —
+a plan serialized in one process loads in a *fresh subprocess* and
+executes with oracle-identical output without ever invoking the
+planner (the analysis pipeline is skipped entirely).
+"""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.engine as engine
+from repro.core import (Generated, PallasGenerated, PlanCache,
+                        clear_compile_cache, compile_program,
+                        program_plan_key)
+from repro.core.programs import (heat3d_program, laplace5_program,
+                                 normalization_program, row_sum_program)
+from repro.core.unfused import build_unfused
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    clear_compile_cache()
+    yield
+    clear_compile_cache()
+
+
+# ---------------------------------------------------------------------------
+# The store itself
+# ---------------------------------------------------------------------------
+
+def _plan_of(program):
+    from repro.core import plan_pallas
+    from repro.core.dataflow import build_dataflow
+    from repro.core.fusion import fuse_inest_dag
+    from repro.core.infer import infer
+    from repro.core.reuse import analyze_storage
+    idag = infer(program)
+    return plan_pallas(analyze_storage(fuse_inest_dag(build_dataflow(idag))),
+                       idag)
+
+
+def test_put_get_roundtrip(tmp_path):
+    prog = heat3d_program()
+    kplan = _plan_of(prog)
+    cache = PlanCache(tmp_path)
+    key = program_plan_key(prog)
+    assert cache.get(key) is None
+    assert cache.put(key, kplan)
+    loaded = cache.get(key)
+    assert loaded == kplan
+    assert loaded.cache_key() == kplan.cache_key()
+    assert len(cache) == 1
+
+
+def test_key_distinguishes_kernel_bodies(tmp_path):
+    """Programs identical but for a kernel body must not share a key
+    (the digest folds in the code objects)."""
+    assert program_plan_key(laplace5_program()) \
+        != program_plan_key(heat3d_program())
+    p1, p2 = laplace5_program(), laplace5_program("laplace5_b")
+    assert program_plan_key(p1) != program_plan_key(p2)  # name differs
+    assert program_plan_key(laplace5_program()) \
+        == program_plan_key(laplace5_program())  # rebuilds agree
+
+
+def test_corrupt_entry_is_a_miss_and_deleted(tmp_path):
+    prog = laplace5_program()
+    cache = PlanCache(tmp_path)
+    key = program_plan_key(prog)
+    cache.put(key, _plan_of(prog))
+    path = tmp_path / f"{key}.json"
+    path.write_text("{definitely not json")
+    assert cache.get(key) is None
+    assert not path.exists()  # bad entry cleaned up
+
+
+def test_version_header_mismatch_is_a_miss(tmp_path):
+    prog = laplace5_program()
+    cache = PlanCache(tmp_path)
+    key = program_plan_key(prog)
+    cache.put(key, _plan_of(prog))
+    payload = json.loads((tmp_path / f"{key}.json").read_text())
+    payload["jax"] = "0.0.0-other"
+    (tmp_path / f"{key}.json").write_text(json.dumps(payload))
+    assert cache.get(key) is None
+
+
+def test_schema_mismatch_is_a_miss(tmp_path):
+    prog = laplace5_program()
+    cache = PlanCache(tmp_path)
+    key = program_plan_key(prog)
+    cache.put(key, _plan_of(prog))
+    payload = json.loads((tmp_path / f"{key}.json").read_text())
+    payload["plan"]["schema"] = 9999
+    (tmp_path / f"{key}.json").write_text(json.dumps(payload))
+    assert cache.get(key) is None
+    # a schema mismatch condemns the entry itself: cleaned up, unlike
+    # process-local re-link failures
+    assert not (tmp_path / f"{key}.json").exists()
+
+
+def test_lru_eviction_bounds_entries(tmp_path):
+    cache = PlanCache(tmp_path, max_entries=2)
+    progs = [laplace5_program(), heat3d_program(), row_sum_program()]
+    keys = [program_plan_key(p) for p in progs]
+    for p, k in zip(progs[:2], keys[:2]):
+        cache.put(k, _plan_of(p))
+    os.utime(tmp_path / f"{keys[0]}.json", (1, 1))  # make entry 0 oldest
+    cache.put(keys[2], _plan_of(progs[2]))
+    assert len(cache) == 2
+    assert cache.get(keys[0]) is None  # oldest evicted
+    assert cache.get(keys[2]) is not None
+
+
+def test_atomic_write_leaves_no_temp_files(tmp_path):
+    cache = PlanCache(tmp_path)
+    cache.put(program_plan_key(laplace5_program()),
+              _plan_of(laplace5_program()))
+    assert list(tmp_path.glob("*.tmp")) == []
+    assert len(list(tmp_path.glob("*"))) == 1
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: L2 under the in-memory caches
+# ---------------------------------------------------------------------------
+
+def test_warm_compile_skips_planner_and_pipeline(tmp_path, monkeypatch):
+    """With a warmed cache dir, compile_program never invokes
+    plan_pallas *or* the analysis pipeline — and the result still
+    matches the unfused oracle."""
+    prog = laplace5_program()
+    u = jnp.asarray(np.random.default_rng(0).standard_normal((8, 12)),
+                    jnp.float32)
+    ref = build_unfused(prog).fn(cell=u)["lap"]
+    compile_program(prog, backend="pallas", plan_cache_dir=tmp_path)
+    clear_compile_cache()
+
+    def boom(*a, **k):
+        raise AssertionError("analysis ran despite a warm plan cache")
+
+    monkeypatch.setattr(engine, "plan_pallas", boom)
+    monkeypatch.setattr(engine, "_build_plan", boom)
+    gen = compile_program(prog, backend="pallas", plan_cache_dir=tmp_path)
+    assert isinstance(gen, PallasGenerated) and gen.plan is None
+    np.testing.assert_allclose(np.asarray(gen.fn(cell=u)["lap"]),
+                               np.asarray(ref), atol=1e-5, rtol=1e-5)
+    with pytest.raises(ValueError, match="on-disk plan cache"):
+        gen.schedule  # the analysis-side schedule genuinely never existed
+
+
+def test_auto_backend_uses_warm_single_nest_plan(tmp_path, monkeypatch):
+    prog = heat3d_program()
+    compile_program(prog, backend="pallas", plan_cache_dir=tmp_path)
+    clear_compile_cache()
+    monkeypatch.setattr(engine, "_build_plan",
+                        lambda *a: pytest.fail("pipeline ran"))
+    gen = compile_program(prog, backend="auto", plan_cache_dir=tmp_path)
+    assert isinstance(gen, PallasGenerated)
+
+
+def test_auto_backend_ignores_warm_split_plan(tmp_path):
+    """A pre-warmed multi-nest plan must not flip auto routing: split
+    schedules stay on JAX unless registered as a measured win."""
+    prog = normalization_program()
+    compile_program(prog, backend="pallas", plan_cache_dir=tmp_path)
+    assert len(PlanCache(tmp_path)) == 1
+    clear_compile_cache()
+    gen = compile_program(prog, backend="auto", plan_cache_dir=tmp_path)
+    assert isinstance(gen, Generated)
+
+
+def test_cold_compile_fills_the_cache_dir(tmp_path):
+    prog = row_sum_program()
+    assert len(PlanCache(tmp_path)) == 0
+    compile_program(prog, backend="pallas", plan_cache_dir=tmp_path)
+    assert len(PlanCache(tmp_path)) == 1
+    # corrupting the entry degrades to a cold compile that re-fills it
+    entry = next(tmp_path.glob("*.json"))
+    entry.write_text("oops")
+    clear_compile_cache()
+    gen = compile_program(prog, backend="pallas", plan_cache_dir=tmp_path)
+    assert isinstance(gen, PallasGenerated) and gen.plan is not None
+    assert len(PlanCache(tmp_path)) == 1
+
+
+def test_memory_hit_backfills_the_cache_dir(tmp_path):
+    """Regression: a program already compiled in-memory still persists
+    its plan when a later call names a plan_cache_dir — the L1 hit must
+    not starve the L2."""
+    prog = laplace5_program()
+    compile_program(prog, backend="pallas")  # plain compile first
+    assert len(PlanCache(tmp_path)) == 0
+    g = compile_program(prog, backend="pallas", plan_cache_dir=tmp_path)
+    assert g.plan is not None  # the in-memory artifact, not a disk load
+    assert len(PlanCache(tmp_path)) == 1  # ...but the L2 got filled
+    # and the entry genuinely loads
+    assert PlanCache(tmp_path).get(program_plan_key(prog)) is not None
+
+
+def test_disk_restored_gen_does_not_pollute_plain_compiles(tmp_path):
+    """Regression: a disk-restored artifact (plan=None) must not be
+    served to a later compile made WITHOUT plan_cache_dir — that caller
+    gets a full artifact whose .schedule works; and once the full build
+    exists, the shared plan-level entry is upgraded so the disk-keyed
+    artifact regains its schedule too."""
+    prog = laplace5_program()
+    compile_program(prog, backend="pallas", plan_cache_dir=tmp_path)
+    clear_compile_cache()
+    g_disk = compile_program(prog, backend="pallas",
+                             plan_cache_dir=tmp_path)
+    assert g_disk.plan is None
+    g_plain = compile_program(prog, backend="pallas")
+    assert g_plain.plan is not None
+    assert g_plain.schedule.n_toplevel() == 1  # must not raise
+    # the plan-level cache shares one compiled artifact; the full build
+    # upgraded it in place
+    assert g_plain is g_disk and g_disk.plan is not None
+
+
+def test_missing_step_builder_is_a_miss_that_keeps_the_entry(tmp_path):
+    """Regression: a process that has not (yet) registered a plan's
+    step builders must get a miss WITHOUT destroying the shared entry —
+    other, properly-initialized processes still want it."""
+    import sys
+    sys.path.insert(0, str(ROOT / "tests"))
+    from _progen import build_chain_program, random_chain, unregister_chain
+
+    desc = random_chain(5)
+    prog = build_chain_program(desc, name="pc_keep", register=True)
+    cache = PlanCache(tmp_path)
+    key = program_plan_key(prog)
+    try:
+        assert cache.put(key, _plan_of(prog))
+    finally:
+        unregister_chain("pc_keep")  # simulate an uninitialized process
+    assert cache.get(key) is None
+    assert (tmp_path / f"{key}.json").exists()  # entry survives
+    # re-registering (as a warm process would at import time) repairs it
+    build_chain_program(desc, name="pc_keep", register=True)
+    try:
+        assert cache.get(key) is not None
+    finally:
+        unregister_chain("pc_keep")
+
+
+def test_put_survives_filesystem_failures(tmp_path, monkeypatch):
+    """Regression: put() returns False instead of raising when the
+    store itself fails (full/read-only/racing directory), and leaves no
+    temp droppings."""
+    cache = PlanCache(tmp_path)
+    kplan = _plan_of(laplace5_program())
+    key = program_plan_key(laplace5_program())
+    monkeypatch.setattr(os, "replace",
+                        lambda *a: (_ for _ in ()).throw(OSError("ENOSPC")))
+    assert cache.put(key, kplan) is False
+    assert list(tmp_path.glob("*")) == []  # tmp file cleaned up
+
+
+def test_evict_tolerates_racing_unlinks(tmp_path, monkeypatch):
+    """Regression: _evict must not crash when another process unlinks a
+    candidate between glob and stat."""
+    cache = PlanCache(tmp_path, max_entries=1)
+    cache.put(program_plan_key(laplace5_program()),
+              _plan_of(laplace5_program()))
+    key2 = program_plan_key(heat3d_program())
+    kplan2 = _plan_of(heat3d_program())
+    real_stat = pathlib.Path.stat
+    raced = set()
+
+    def racing_stat(self, **kw):
+        if self.suffix == ".json" and str(self) not in raced:
+            raced.add(str(self))
+            try:
+                os.unlink(self)  # the "other process"
+            except FileNotFoundError:
+                pass
+            raise FileNotFoundError(self)
+        return real_stat(self, **kw)
+
+    monkeypatch.setattr(pathlib.Path, "stat", racing_stat)
+    assert cache.put(key2, kplan2)
+
+
+def test_unwritable_cache_dir_degrades_to_cold_compile(tmp_path):
+    """compile_program with an uncreatable plan_cache_dir still
+    compiles (the L2 is best-effort, never load-bearing)."""
+    blocker = tmp_path / "blocker"
+    blocker.write_text("")  # a *file* where the cache dir should go
+    gen = compile_program(laplace5_program(), backend="pallas",
+                          plan_cache_dir=blocker / "cache")
+    assert isinstance(gen, PallasGenerated) and gen.plan is not None
+
+
+# ---------------------------------------------------------------------------
+# The headline: cross-process AOT compile with the planner booby-trapped
+# ---------------------------------------------------------------------------
+
+_CHILD = textwrap.dedent("""\
+    import sys
+    import numpy as np
+    import jax.numpy as jnp
+    import repro.core.engine as engine
+    import repro.core.codegen_pallas as cp
+    from repro.core.programs import {builder}
+
+    def boom(*a, **k):
+        raise AssertionError("planner invoked in the warm process")
+    engine.plan_pallas = boom
+    engine._build_plan = boom
+    cp.plan_pallas = boom
+
+    prog = {builder}()
+    gen = engine.compile_program(prog, backend="pallas",
+                                 plan_cache_dir={cache_dir!r})
+    assert gen.plan is None, "expected a disk-restored plan"
+    u = jnp.asarray(np.random.default_rng(7).standard_normal({shape}),
+                    jnp.float32)
+    out = gen.fn(**{{ {arr!r}: u }})[{out!r}]
+    from repro.core.unfused import build_unfused
+    ref = build_unfused(prog).fn(**{{ {arr!r}: u }})[{out!r}]
+    assert np.allclose(np.asarray(out), np.asarray(ref),
+                       atol=1e-5, rtol=1e-5), "output mismatch"
+    print("AOT-OK")
+""")
+
+
+@pytest.mark.parametrize("builder,arr,out,shape", [
+    ("laplace5_program", "cell", "lap", (8, 12)),
+    ("heat3d_program", "u", "heat", (5, 8, 12)),
+])
+def test_cross_process_aot_compile(tmp_path, builder, arr, out, shape):
+    """Serialize in this process; a fresh ``python -c`` subprocess (with
+    plan_pallas monkeypatched to raise) loads the plan from disk,
+    builds the interpreter, and matches the unfused oracle — planning
+    is decided once, ahead of time, and replayed across processes."""
+    import repro.core.programs as programs
+    prog = getattr(programs, builder)()
+    compile_program(prog, backend="pallas", plan_cache_dir=tmp_path)
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    code = _CHILD.format(builder=builder, cache_dir=str(tmp_path),
+                         shape=shape, arr=arr, out=out)
+    res = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert res.returncode == 0, res.stderr
+    assert "AOT-OK" in res.stdout
