@@ -57,7 +57,8 @@ import time
 import jax
 import numpy as np
 
-from repro.core import clear_compile_cache, compile_program
+from repro.core import (clear_compile_cache, compile_program,
+                        sizes_from_arrays, vmem_bytes)
 from repro.core.codegen_jax import CodegenError
 from repro.core.programs import (cosmo_program, energy3d_program,
                                  heat3d_program,
@@ -112,13 +113,18 @@ def run(interpret: bool = True):
         except CodegenError:
             base = "jax_us=n/a;"  # defensive: both backends cover every leg
         cells = int(np.prod(shape))
+        # the static analyzer's resident-VMEM estimate for this leg's
+        # concrete shape (peak across nests; mirrors build_call scratch)
+        kplan = gen.kernel_plan
+        vmem = vmem_bytes(kplan, sizes_from_arrays(kplan, {"u": shape}),
+                          dtype_bytes=4, double_buffer=dbuf)
         rows.append({
             "name": f"lifted_{name}_{'x'.join(map(str, shape))}",
             "us_per_call": t_p * 1e6,
             "derived": (
                 f"backend=pallas;interpret={interpret};"
                 f"double_buffer={dbuf};{base}"
-                f"Mcells_s={cells / t_p / 1e6:.0f}"
+                f"Mcells_s={cells / t_p / 1e6:.0f};vmem_B={vmem}"
             ),
             # structured fields for the --json trajectory record
             "backend": "pallas",
@@ -126,6 +132,7 @@ def run(interpret: bool = True):
             "double_buffer": dbuf,
             "jax_us_per_call": jax_us,
             "mcells_per_s": cells / t_p / 1e6,
+            "vmem_bytes": vmem,
         })
     return rows
 
@@ -180,9 +187,19 @@ def main(argv=None) -> None:
     if args.json:
         legs = [{k: r[k] for k in ("name", "us_per_call", "backend",
                                    "interpret", "double_buffer",
-                                   "jax_us_per_call", "mcells_per_s")}
+                                   "jax_us_per_call", "mcells_per_s",
+                                   "vmem_bytes")}
                 for r in rows]
-        json.dump({"suite": "lifted", "legs": legs,
+        # environment stamp: perf numbers are only comparable across
+        # PRs when the runtime that produced them is auditable
+        import jaxlib
+        import platform
+        json.dump({"suite": "lifted",
+                   "interpret": not args.no_interpret,
+                   "env": {"jax": jax.__version__,
+                           "jaxlib": jaxlib.__version__,
+                           "python": platform.python_version()},
+                   "legs": legs,
                    "plan_cache": cache_legs}, sys.stdout, indent=1)
         sys.stdout.write("\n")
         return

@@ -31,6 +31,9 @@ def plan_dump(prog):
 in_cell[j+1], in_cell[j+0], in_cell[j+0]] -> out:0
         out laplace_cell: external lead=0 rows[1,-1]
       goals: lap<-laplace_cell
+    --- vmem estimate ---
+      laplace5_n0:
+        in_cell: 3 x pad(Ni+0) x 4B
     """
     report = explain(prog, verbose=True)
     return report.split("--- kernel plan ---\n", 1)[1]

@@ -17,6 +17,10 @@
 #   4. every public (non-underscore) module-level dataclass and
 #      function in repro.core.plan must carry a docstring — the
 #      KernelPlan IR is the planner/interpreter contract.
+#   5. every PC<nnn> diagnostic code emitted in repro.core.plancheck
+#      must have a row in the docs/ARCHITECTURE.md diagnostic table,
+#      and every table row must correspond to a code the analyzer can
+#      actually emit — the live code table cannot drift either way.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -142,11 +146,29 @@ for node in plan_tree.body:
                     f"{plan_path}:{sub.lineno}: public plan-IR method "
                     f"{node.name}.{sub.name} lacks a docstring")
 
+# ---- 5. plancheck PC codes <-> ARCHITECTURE.md diagnostic table -----------
+import re
+
+pc_path = pathlib.Path("src/repro/core/plancheck.py")
+emitted = set(re.findall(r'"(PC\d{3})"', pc_path.read_text()))
+arch = pathlib.Path("docs/ARCHITECTURE.md").read_text()
+documented = set(re.findall(r"^\|\s*`?(PC\d{3})`?\s*\|", arch, re.M))
+if not documented:
+    failures.append("docs/ARCHITECTURE.md: diagnostic-code table missing "
+                    "(no | PCnnn | rows found)")
+for code in sorted(emitted - documented):
+    failures.append(f"{pc_path}: diagnostic {code} is emitted but has no "
+                    f"row in the docs/ARCHITECTURE.md diagnostic table")
+for code in sorted(documented - emitted):
+    failures.append(f"docs/ARCHITECTURE.md: diagnostic {code} is documented "
+                    f"but {pc_path} never emits it")
+
 if failures:
     print("check_docs: FAIL")
     for f in failures:
         print("  " + f)
     sys.exit(1)
 print("check_docs: OK (engine docstrings + docs/*.md code blocks + "
-      "PallasUnsupported restriction table + plan-IR docstrings)")
+      "PallasUnsupported restriction table + plan-IR docstrings + "
+      "PlanCheck diagnostic table)")
 PY

@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Static gates, run by scripts/test_fast.sh ahead of the suite:
+#
+#   1. ruff over src/repro/core (scope + rule selection in ruff.toml)
+#      — skipped with a notice when ruff isn't installed, so the gate
+#      degrades rather than failing on a missing dev dep (the container
+#      image may not carry requirements-dev.txt);
+#   2. scripts/plan_lint.py over the golden-plan corpus — every
+#      checked-in plan must pass the KernelPlan static analyzer
+#      (repro.core.plancheck) with zero error-severity findings.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if command -v ruff >/dev/null 2>&1; then
+    ruff check .
+else
+    echo "lint.sh: ruff not installed; skipping the ruff gate"
+fi
+
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python scripts/plan_lint.py tests/goldens/plans -q

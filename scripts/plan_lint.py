@@ -1,0 +1,150 @@
+#!/usr/bin/env python
+"""Lint KernelPlans with the static analyzer (repro.core.plancheck).
+
+Targets — freely mixed, any number of them::
+
+    PYTHONPATH=src python scripts/plan_lint.py heat3d cosmo     # by name
+    PYTHONPATH=src python scripts/plan_lint.py tests/goldens/plans
+    PYTHONPATH=src python scripts/plan_lint.py .plan_cache/<key>.json
+
+* a **program name** from ``repro.core.programs`` is planned through
+  the analysis pipeline and the resulting plan is linted;
+* a **file** is loaded as a serialized plan — both the bare golden
+  form (``KernelPlan.to_dict``) and the plan-cache entry form (with
+  its ``{"jax", "repro", "plan"}`` header) are accepted;
+* a **directory** (a plan cache or the golden corpus) lints every
+  ``*.json`` inside it;
+* no targets at all lints the golden corpus plus every
+  ``ALL_PROGRAMS`` entry.
+
+A file that fails to load or validate is reported as ``PC000``.  With
+``--sizes Nj=64,Ni=512`` the VMEM budget check (PC003) runs against
+``--vmem-budget`` / ``REPRO_VMEM_BUDGET_BYTES``.  Exit status is
+non-zero iff any target carries an **error**-severity finding
+(warnings alone exit 0; add ``--strict`` to fail on those too).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.core.plan import KernelPlan  # noqa: E402
+from repro.core.plancheck import (Diagnostic, check_plan,  # noqa: E402
+                                  has_errors)
+
+GOLDEN_DIR = ROOT / "tests" / "goldens" / "plans"
+
+
+def load_plan_file(path: pathlib.Path) -> KernelPlan:
+    """Deserialize one plan file, unwrapping a plan-cache header."""
+    payload = json.loads(path.read_text())
+    if "plan" in payload and "schema" not in payload:
+        payload = payload["plan"]
+    return KernelPlan.from_dict(payload)
+
+
+def lint_target(target: str, sizes,
+                budget=None) -> tuple[str, list[Diagnostic]]:
+    """Resolve one CLI target to ``(label, diagnostics)``."""
+    path = pathlib.Path(target)
+    if path.is_dir():
+        raise ValueError("directories are expanded by the caller")
+    if path.exists():
+        try:
+            kplan = load_plan_file(path)
+        except Exception as e:
+            return target, [Diagnostic(
+                "PC000", "error", path.stem, "",
+                f"plan failed to load: {type(e).__name__}: {e}")]
+        return target, check_plan(kplan, sizes=sizes, budget=budget)
+    from repro.core.programs import ALL_PROGRAMS
+    build = ALL_PROGRAMS.get(target)
+    if build is None:
+        return target, [Diagnostic(
+            "PC000", "error", target, "",
+            f"no such file, directory, or program "
+            f"(known programs: {', '.join(sorted(ALL_PROGRAMS))})")]
+    from repro.core import plan_pallas
+    from repro.core.dataflow import build_dataflow
+    from repro.core.fusion import fuse_inest_dag
+    from repro.core.infer import infer
+    from repro.core.reuse import analyze_storage
+    idag = infer(build())
+    kplan = plan_pallas(
+        analyze_storage(fuse_inest_dag(build_dataflow(idag))), idag)
+    return target, check_plan(kplan, sizes=sizes, budget=budget)
+
+
+def parse_sizes(spec):
+    """``"Nj=64,Ni=512"`` -> ``{"Nj": 64, "Ni": 512}`` (None stays None)."""
+    if not spec:
+        return None
+    sizes = {}
+    for part in spec.split(","):
+        sym, _, val = part.partition("=")
+        if not val:
+            raise SystemExit(f"--sizes: expected SYM=INT, got {part!r}")
+        sizes[sym.strip()] = int(val)
+    return sizes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Lint KernelPlans (programs by name, serialized plan "
+                    "files, or whole plan-cache/golden directories) with "
+                    "the repro.core.plancheck static analyzer.")
+    ap.add_argument("targets", nargs="*",
+                    help="program names, plan files, or directories "
+                         "(default: the golden corpus + ALL_PROGRAMS)")
+    ap.add_argument("--sizes", default=None, metavar="Nj=64,Ni=512",
+                    help="concrete dim sizes enabling the VMEM budget "
+                         "check (PC003)")
+    ap.add_argument("--vmem-budget", type=int, default=None, metavar="BYTES",
+                    help="VMEM budget for PC003 (default: "
+                         "REPRO_VMEM_BUDGET_BYTES or ~16 MiB)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero on warnings too")
+    ap.add_argument("-q", "--quiet", action="store_true",
+                    help="print findings only, no per-target OK lines")
+    args = ap.parse_args(argv)
+    sizes = parse_sizes(args.sizes)
+
+    targets: list[str] = []
+    for t in args.targets or [str(GOLDEN_DIR)]:
+        path = pathlib.Path(t)
+        if path.is_dir():
+            targets.extend(sorted(str(p) for p in path.glob("*.json")))
+        else:
+            targets.append(t)
+    if not args.targets:
+        from repro.core.programs import ALL_PROGRAMS
+        targets.extend(sorted(ALL_PROGRAMS))
+
+    n_err = n_warn = 0
+    for target in targets:
+        label, diags = lint_target(target, sizes, args.vmem_budget)
+        errs = [d for d in diags if d.severity == "error"]
+        warns = [d for d in diags if d.severity != "error"]
+        n_err += len(errs)
+        n_warn += len(warns)
+        if not diags:
+            if not args.quiet:
+                print(f"  {label}: OK")
+            continue
+        print(f"  {label}: {len(errs)} error(s), {len(warns)} warning(s)")
+        for d in diags:
+            print(f"    {d}")
+    print(f"plan_lint: {len(targets)} target(s), {n_err} error(s), "
+          f"{n_warn} warning(s)")
+    if n_err or (args.strict and n_warn):
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -14,8 +14,14 @@
 # whole-suite floor.  (The container image may lack pytest-cov; the
 # suite then runs without the coverage gate rather than failing on a
 # missing dep.)
+#
+# The static gates (ruff, when installed, and the golden-plan lint —
+# scripts/lint.sh) run first: a plan or lint regression fails fast,
+# before the ~4-minute suite.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+scripts/lint.sh
 
 COV_ARGS=()
 if [ "$#" -eq 0 ] && python -c "import pytest_cov" >/dev/null 2>&1; then

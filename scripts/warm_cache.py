@@ -33,6 +33,7 @@ from repro.core.dataflow import build_dataflow  # noqa: E402
 from repro.core.fusion import fuse_inest_dag  # noqa: E402
 from repro.core.infer import infer  # noqa: E402
 from repro.core.plancache import PlanCache, program_plan_key  # noqa: E402
+from repro.core.plancheck import check_plan, has_errors  # noqa: E402
 from repro.core.programs import ALL_PROGRAMS  # noqa: E402
 from repro.core.reuse import analyze_storage  # noqa: E402
 
@@ -64,9 +65,23 @@ def main(argv=None) -> int:
     cache = PlanCache(args.cache_dir) if args.cache_dir else None
     if args.goldens:
         GOLDEN_DIR.mkdir(parents=True, exist_ok=True)
+    refused = 0
     for name, build in sorted(ALL_PROGRAMS.items()):
         program, kplan = plan_program(build)
         what = []
+        # gate every persisted plan on the static analyzer: a poisoned
+        # cache entry or golden propagates to every warm process
+        diags = check_plan(kplan)
+        if has_errors(diags):
+            refused += 1
+            print(f"  {name:24s} REFUSED: "
+                  f"{sum(d.severity == 'error' for d in diags)} "
+                  f"error-severity finding(s)")
+            for d in diags:
+                print(f"      {d}")
+            continue
+        for d in diags:
+            print(f"      {d}")
         if cache is not None:
             stored = cache.put(program_plan_key(program), kplan)
             what.append("cached" if stored else "NOT SERIALIZABLE")
@@ -80,6 +95,10 @@ def main(argv=None) -> int:
         print(f"warmed {args.cache_dir}: {len(cache)} entr(y/ies)")
     if args.goldens:
         print(f"wrote goldens to {GOLDEN_DIR.relative_to(ROOT)}")
+    if refused:
+        print(f"refused to persist {refused} plan(s) with error-severity "
+              f"findings (see scripts/plan_lint.py)")
+        return 1
     return 0
 
 

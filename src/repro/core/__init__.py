@@ -3,7 +3,7 @@
 #: Build stamp folded into on-disk plan-cache keys and entry headers
 #: (repro.core.plancache): bump alongside behavior changes that should
 #: invalidate persisted plans without a schema change.
-__version__ = "0.5.0"
+__version__ = "0.6.0"
 
 from .codegen_jax import Generated
 from .codegen_pallas import PallasGenerated, generate_pallas, plan_pallas
@@ -18,14 +18,20 @@ from .plan import (SCHEMA_VERSION, CallPlan, KernelPlan, PallasUnsupported,
                    PlanSerializationError, fn_key, register_step_builder,
                    unregister_step_builder)
 from .plancache import PlanCache, program_plan_key
+from .plancheck import (Diagnostic, PlanCheckError, PlanCheckWarning,
+                        check_plan, has_errors, sizes_from_arrays,
+                        vmem_bytes, vmem_report)
 from .reuse import analyze_storage, reuse_graph, reuse_order
 from .rules import Extent, KernelRule, Program, axiom, goal, kernel
 from .terms import Term, parse_term, unify_term
 
 __all__ = [
-    "BACKENDS", "CallPlan", "Generated", "KernelPlan", "PallasGenerated",
-    "PallasUnsupported", "PlanCache", "PlanSerializationError",
-    "SCHEMA_VERSION", "clear_compile_cache", "compile_cache_size",
+    "BACKENDS", "CallPlan", "Diagnostic", "Generated", "KernelPlan",
+    "PallasGenerated", "PallasUnsupported", "PlanCache", "PlanCheckError",
+    "PlanCheckWarning", "PlanSerializationError",
+    "SCHEMA_VERSION", "check_plan", "clear_compile_cache",
+    "compile_cache_size", "has_errors", "sizes_from_arrays", "vmem_bytes",
+    "vmem_report",
     "compile_program", "fn_key", "generate_pallas",
     "pallas_auto_viable", "plan_cache_cap", "plan_cache_size", "plan_pallas",
     "program_plan_key", "program_signature", "register_pallas_split_win",

@@ -43,6 +43,8 @@ the loaded IR and never invokes the analysis pipeline at all.
 """
 from __future__ import annotations
 
+import os
+import warnings
 from collections import OrderedDict
 from typing import Optional, Union
 
@@ -56,10 +58,16 @@ from .fusion import fuse_inest_dag
 from .infer import infer
 from .plan import KernelPlan
 from .plan import fn_key as _fn_key
+from .plancheck import (PlanCheckError, PlanCheckWarning, check_plan,
+                        has_errors, render_vmem, resolve_check_mode,
+                        vmem_bytes, vmem_budget, vmem_report)
 from .reuse import StoragePlan, analyze_storage
 from .rules import Program
 
 BACKENDS = ("auto", "jax", "pallas")
+
+#: Environment default for ``compile_program(plan_cache_dir=...)``.
+PLAN_CACHE_DIR_ENV = "REPRO_PLAN_CACHE_DIR"
 
 _CACHE: dict = {}
 _PLAN_CACHE: "OrderedDict" = OrderedDict()
@@ -183,14 +191,42 @@ def pallas_auto_viable(plan: StoragePlan) -> bool:
     return plan.schedule.program.name in PALLAS_SPLIT_WINS
 
 
+def _run_plancheck(kplan: KernelPlan, mode: str, *, dtype, double_buffer,
+                   dim_sizes=None) -> None:
+    """Gate a plan on the static analyzer (:mod:`repro.core.plancheck`)
+    per the resolved ``check_plans`` mode: ``"error"`` raises
+    :class:`~repro.core.plancheck.PlanCheckError` on error-severity
+    findings, ``"warn"`` turns every finding into a
+    :class:`~repro.core.plancheck.PlanCheckWarning`, ``"off"`` skips
+    the analyses entirely.  ``dim_sizes`` (``{size symbol: int}``)
+    additionally enables the VMEM budget check."""
+    if mode == "off":
+        return
+    diags = check_plan(kplan, sizes=dict(dim_sizes) if dim_sizes else None,
+                       dtype_bytes=jnp.dtype(dtype).itemsize,
+                       double_buffer=double_buffer, validate=False)
+    if not diags:
+        return
+    if mode == "error" and has_errors(diags):
+        raise PlanCheckError(
+            f"plan {kplan.program!r} failed static analysis:\n" +
+            "\n".join(f"  {d}" for d in diags), diags)
+    for d in diags:
+        warnings.warn(str(d), PlanCheckWarning, stacklevel=3)
+
+
 def _emit_plan(kplan: KernelPlan, plan: Optional[StoragePlan], *, dtype,
-               interpret, double_buffer, use_cache=True) -> PallasGenerated:
+               interpret, double_buffer, use_cache=True, check="warn",
+               dim_sizes=None) -> PallasGenerated:
     """Build (or fetch) the interpreter for a finished kernel plan.
 
     Memoized on :meth:`KernelPlan.cache_key` plus the execution flags
     (LRU-bounded, :func:`set_plan_cache_cap`), so programs lowering to
     structurally equal plans share one compiled executor — whether the
-    plan came from the planner or from the on-disk cache."""
+    plan came from the planner or from the on-disk cache.  Static
+    analysis (``check``, a resolved ``check_plans`` mode) runs at build
+    time, covering both the fresh-plan and disk-restored paths; a
+    plan-cache hit is a plan that already passed."""
     pkey = (kplan.cache_key(), jnp.dtype(dtype).name, bool(interpret),
             bool(double_buffer))
     if use_cache:
@@ -203,6 +239,8 @@ def _emit_plan(kplan: KernelPlan, plan: Optional[StoragePlan], *, dtype,
                 # shared artifact so .schedule works everywhere
                 hit.plan = plan
             return hit
+    _run_plancheck(kplan, check, dtype=dtype, double_buffer=double_buffer,
+                   dim_sizes=dim_sizes)
     # imported here: the interpreter module imports the plan IR from
     # repro.core, so a module-level import would be circular
     from ..kernels.stencil2d.kernel import execute_plan
@@ -217,7 +255,8 @@ def _emit_plan(kplan: KernelPlan, plan: Optional[StoragePlan], *, dtype,
 
 
 def _emit_pallas(plan, idag, *, dtype, interpret, double_buffer,
-                 use_cache=True) -> PallasGenerated:
+                 use_cache=True, check="warn",
+                 dim_sizes=None) -> PallasGenerated:
     """Plan, then interpret — through the plan-level cache.
 
     The planner runs unconditionally (it is cheap and raises
@@ -225,7 +264,8 @@ def _emit_pallas(plan, idag, *, dtype, interpret, double_buffer,
     construction is memoized by :func:`_emit_plan`."""
     kplan = plan_pallas(plan, idag)
     return _emit_plan(kplan, plan, dtype=dtype, interpret=interpret,
-                      double_buffer=double_buffer, use_cache=use_cache)
+                      double_buffer=double_buffer, use_cache=use_cache,
+                      check=check, dim_sizes=dim_sizes)
 
 
 def _load_plan_from_disk(program: Program, backend: str,
@@ -265,19 +305,33 @@ def _store_plan_to_disk(program: Program, kplan: KernelPlan,
 
 
 def _pallas_auto_probe(plan, idag, *, dtype, interpret, double_buffer,
-                       use_cache=True):
+                       use_cache=True, check="warn", dim_sizes=None):
     """The single auto-routing probe shared by :func:`compile_program`
     and :func:`explain`: build the Pallas execution if the plan is
-    viable, return None (fall back to JAX) if it is not or the planner
-    raises :class:`PallasUnsupported`.  Keeping one probe guarantees
-    ``explain`` reports exactly the backend ``compile_program`` would
-    pick for the same flags."""
+    viable, return None (fall back to JAX) if it is not, the planner
+    raises :class:`PallasUnsupported`, the static analyzer rejects the
+    plan under ``check="error"``, or — when concrete ``dim_sizes`` are
+    known — the estimated resident VMEM exceeds the budget
+    (``REPRO_VMEM_BUDGET_BYTES``): a nest that cannot hold its windows
+    in VMEM is better served by XLA than by a thrashing stencil
+    pipeline."""
     if not pallas_auto_viable(plan):
         return None
     try:
-        return _emit_pallas(plan, idag, dtype=dtype, interpret=interpret,
-                            double_buffer=double_buffer, use_cache=use_cache)
+        kplan = plan_pallas(plan, idag)
     except PallasUnsupported:
+        return None
+    if dim_sizes:
+        est = vmem_bytes(kplan, dict(dim_sizes),
+                         dtype_bytes=jnp.dtype(dtype).itemsize,
+                         double_buffer=double_buffer)
+        if est > vmem_budget(None):
+            return None
+    try:
+        return _emit_plan(kplan, plan, dtype=dtype, interpret=interpret,
+                          double_buffer=double_buffer, use_cache=use_cache,
+                          check=check, dim_sizes=dim_sizes)
+    except PlanCheckError:
         return None
 
 
@@ -290,6 +344,8 @@ def compile_program(
     double_buffer: bool = False,
     use_cache: bool = True,
     plan_cache_dir=None,
+    check_plans: Optional[str] = None,
+    dim_sizes=None,
 ) -> Union[Generated, PallasGenerated]:
     """Compile ``program`` through the HFAV pipeline onto a backend.
 
@@ -306,14 +362,35 @@ def compile_program(
     :meth:`KernelPlan.validate`) — and freshly-planned programs are
     persisted back, so a second process compiles warm.  Pre-populate
     with ``scripts/warm_cache.py``; ``use_cache`` governs only the
-    in-memory caches."""
+    in-memory caches.  When ``plan_cache_dir`` is omitted the
+    ``REPRO_PLAN_CACHE_DIR`` environment variable supplies the default.
+
+    ``check_plans`` gates every Pallas-bound plan on the static
+    analyzer (:mod:`repro.core.plancheck`): ``"warn"`` (the default,
+    overridable via ``REPRO_CHECK_PLANS``) reports findings as
+    :class:`~repro.core.plancheck.PlanCheckWarning`, ``"error"`` raises
+    :class:`~repro.core.plancheck.PlanCheckError` on error-severity
+    findings (``backend="auto"`` falls back to JAX instead), ``"off"``
+    skips analysis.  Plans are analyzed when built; in-memory cache
+    hits return the already-vetted artifact without re-linting.
+
+    ``dim_sizes`` (``{size symbol: int}``, e.g. ``{"Nj": 512}``)
+    declares the intended problem size: it enables the VMEM budget
+    diagnostic (PC003) and lets ``backend="auto"`` route nests whose
+    estimated resident footprint exceeds ``REPRO_VMEM_BUDGET_BYTES``
+    (default ~16 MiB) to the JAX backend."""
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; expected {BACKENDS}")
+    check = resolve_check_mode(check_plans)
+    if plan_cache_dir is None:
+        plan_cache_dir = os.environ.get(PLAN_CACHE_DIR_ENV) or None
+    sizes_key = tuple(sorted(dim_sizes.items())) if dim_sizes else None
     # double_buffer is a Pallas streaming mode: normalize it out of the
     # key for pure-JAX compilations so they aren't cached twice
     key = (program_signature(program), backend, jnp.dtype(dtype).name,
            bool(interpret),
-           bool(double_buffer) and backend != "jax")
+           bool(double_buffer) and backend != "jax",
+           sizes_key)
     if use_cache:
         hit = _CACHE.get(key)
         if hit is not None:
@@ -337,7 +414,8 @@ def compile_program(
         if kplan is not None:
             gen = _emit_plan(kplan, None, dtype=dtype, interpret=interpret,
                              double_buffer=double_buffer,
-                             use_cache=use_cache)
+                             use_cache=use_cache, check=check,
+                             dim_sizes=dim_sizes)
             if use_cache:
                 _CACHE[dkey] = gen
             return gen
@@ -346,11 +424,13 @@ def compile_program(
         gen: Union[Generated, PallasGenerated] = generate(plan, idag)
     elif backend == "pallas":
         gen = _emit_pallas(plan, idag, dtype=dtype, interpret=interpret,
-                           double_buffer=double_buffer, use_cache=use_cache)
+                           double_buffer=double_buffer, use_cache=use_cache,
+                           check=check, dim_sizes=dim_sizes)
     else:
         gen = _pallas_auto_probe(plan, idag, dtype=dtype, interpret=interpret,
                                  double_buffer=double_buffer,
-                                 use_cache=use_cache)
+                                 use_cache=use_cache, check=check,
+                                 dim_sizes=dim_sizes)
         if gen is None:
             gen = generate(plan, idag)
     if plan_cache_dir is not None and isinstance(gen, PallasGenerated):
@@ -360,30 +440,35 @@ def compile_program(
         if key[4] and isinstance(gen, Generated):
             # double_buffer had no effect (auto fell back to JAX): alias
             # the normalized key so neither flag value recompiles
-            _CACHE[key[:4] + (False,)] = gen
+            _CACHE[key[:4] + (False,) + key[5:]] = gen
     return gen
 
 
 def explain(program: Program, *, dtype=jnp.float32, interpret: bool = True,
-            double_buffer: bool = False, verbose: bool = False) -> str:
+            double_buffer: bool = False, verbose: bool = False,
+            dim_sizes=None) -> str:
     """Human-readable transformation report (the paper's debugging output).
 
     The keyword flags mirror :func:`compile_program` and feed the same
     shared probe (:func:`_pallas_auto_probe`), so the reported
     ``auto backend`` is exactly what ``backend="auto"`` would pick for a
-    compilation with those flags — including split-win routing and
-    non-default ``double_buffer``/``dtype``.
+    compilation with those flags — including split-win routing,
+    non-default ``double_buffer``/``dtype``, and (when ``dim_sizes``
+    is given) the VMEM-budget consult.
 
     ``verbose=True`` appends the rendered
     :class:`~repro.core.plan.KernelPlan` (grid ranges, window and
     accumulator plans, per-step reads/writes, output trim rules) when
     the probe lowered one — the declarative contract the interpreter
-    will execute."""
+    will execute — followed by the estimated resident-VMEM footprint:
+    symbolic per-buffer formulas always, concrete per-nest byte totals
+    when ``dim_sizes`` (``{size symbol: int}``) resolves them."""
     idag, plan = _build_plan(program)
     schedule = plan.schedule
     dag = schedule.dag
     gen = _pallas_auto_probe(plan, idag, dtype=dtype, interpret=interpret,
-                             double_buffer=double_buffer)
+                             double_buffer=double_buffer,
+                             dim_sizes=dim_sizes)
     backend = "pallas" if gen is not None else "jax"
     lines = [
         f"program: {program.name}",
@@ -399,6 +484,17 @@ def explain(program: Program, *, dtype=jnp.float32, interpret: bool = True,
         lines.append("--- kernel plan ---")
         if gen is not None:
             lines.append(gen.kernel_plan.render())
+            itemsize = jnp.dtype(dtype).itemsize
+            lines.append("--- vmem estimate ---")
+            lines.extend(render_vmem(gen.kernel_plan, dtype_bytes=itemsize))
+            if dim_sizes:
+                rep = vmem_report(gen.kernel_plan, dict(dim_sizes),
+                                  dtype_bytes=itemsize,
+                                  double_buffer=double_buffer)
+                for nest, r in rep.items():
+                    lines.append(
+                        f"  {nest}: {r['total']} B resident "
+                        f"(budget {vmem_budget(None)} B)")
         else:
             lines.append("(auto picked the JAX backend: no stencil plan)")
     return "\n".join(lines)

@@ -39,6 +39,13 @@ Design points:
 * **Bounded with LRU eviction** — at most ``max_entries`` files;
   `get` refreshes an entry's mtime and `put` evicts the
   oldest-touched entries beyond the bound.
+* **Cross-process write locking** — ``put`` (the write + the eviction
+  sweep) runs under an advisory ``flock`` on a ``.lock`` file in the
+  cache directory, so concurrent warmers never interleave an eviction
+  scan with another process's fill and over-evict.  On platforms
+  without :mod:`fcntl` the lock degrades to a no-op — the atomic
+  rename still guarantees entries are never torn, only the LRU bound
+  becomes approximate under races.
 
 Wired into :func:`repro.core.engine.compile_program` via
 ``plan_cache_dir=...`` (see docs/BACKENDS.md); pre-populate with
@@ -46,6 +53,7 @@ Wired into :func:`repro.core.engine.compile_program` via
 """
 from __future__ import annotations
 
+import contextlib
 import hashlib
 import json
 import marshal
@@ -58,6 +66,11 @@ from typing import Optional
 import jax
 
 from .plan import SCHEMA_VERSION, KernelPlan
+
+try:
+    import fcntl
+except ImportError:  # non-POSIX: writes stay atomic, locking no-ops
+    fcntl = None
 
 #: Default bound on the number of on-disk entries per cache directory.
 DEFAULT_MAX_ENTRIES = 256
@@ -134,6 +147,27 @@ class PlanCache:
     def _path(self, key: str) -> pathlib.Path:
         return self.root / f"{key}.json"
 
+    @contextlib.contextmanager
+    def _write_lock(self):
+        """Advisory cross-process lock serializing ``put`` (write +
+        eviction) against other writers of the same directory.  A
+        failure to acquire — missing :mod:`fcntl`, unwritable lock
+        file — degrades to unlocked operation: atomic renames keep
+        entries untorn; only the eviction bound goes approximate."""
+        if fcntl is None:
+            yield
+            return
+        try:
+            fd = os.open(self.root / ".lock", os.O_CREAT | os.O_RDWR, 0o644)
+        except OSError:
+            yield
+            return
+        try:
+            fcntl.flock(fd, fcntl.LOCK_EX)
+            yield
+        finally:
+            os.close(fd)  # closing the fd releases the flock
+
     def __len__(self) -> int:
         """Number of entries currently on disk."""
         return len(list(self.root.glob("*.json")))
@@ -202,16 +236,17 @@ class PlanCache:
             return False
         path = self._path(key)
         tmp = path.with_name(f".{path.name}.{os.getpid()}.tmp")
-        try:
-            tmp.write_text(payload)
-            os.replace(tmp, path)
-        except OSError:
+        with self._write_lock():
             try:
-                tmp.unlink()
+                tmp.write_text(payload)
+                os.replace(tmp, path)
             except OSError:
-                pass
-            return False
-        self._evict()
+                try:
+                    tmp.unlink()
+                except OSError:
+                    pass
+                return False
+            self._evict()
         return True
 
     def _evict(self) -> None:

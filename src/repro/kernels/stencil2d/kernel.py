@@ -91,6 +91,62 @@ def _mod(pos, stages: int):
     return jax.lax.rem(jax.lax.rem(pos, stages) + stages, stages)
 
 
+def _require_hazard_free(call: CallPlan) -> None:
+    """Reject the hazards the interpreter cannot execute meaningfully.
+
+    This duplicates only the *certain* subset of the static analyzer
+    (:mod:`repro.core.plancheck`) — reads whose mod-``stages`` slot
+    arithmetic is guaranteed to alias a different row/plane, and local
+    reads with no preceding write (a ``KeyError`` inside the traced
+    kernel body otherwise).  The full analyzer additionally proves
+    halo coverage and warm-up validity; run ``scripts/plan_lint.py``
+    or ``compile_program(check_plans="error")`` for those."""
+    if not call.has_grid:
+        return
+    windows = {w.name: w for w in call.windows}
+    inputs = {f"in_{i.name}": i for i in call.inputs if not i.scalar}
+    produced_lead: dict[str, int] = {}
+    local_seen: set[str] = set()
+    for step in call.steps:
+        for rd in step.reads:
+            if rd.src.startswith("local:"):
+                if rd.src[6:] not in local_seen:
+                    raise ValueError(
+                        f"call {call.name}: step {step.op} reads "
+                        f"{rd.src} before any step writes it "
+                        f"(PlanCheck PC001)")
+                continue
+            lead = stages = None
+            ispec = inputs.get(rd.src)
+            if ispec is not None and not ispec.plane:
+                lead, stages = ispec.lead, ispec.stages
+            elif ispec is not None and rd.p_off != ispec.p_lead:
+                if not (ispec.p_lead - ispec.p_stages
+                        < rd.p_off <= ispec.p_lead):
+                    raise ValueError(
+                        f"call {call.name}: step {step.op} reads plane "
+                        f"p{rd.p_off:+d} of {rd.src}; the mod-slot "
+                        f"arithmetic aliases it outside "
+                        f"(p{ispec.p_lead - ispec.p_stages:+d}, "
+                        f"p{ispec.p_lead:+d}] (PlanCheck PC002/PC005)")
+            w = windows.get(rd.src)
+            if w is not None and not w.plane and rd.src in produced_lead:
+                lead, stages = produced_lead[rd.src], w.stages
+            if lead is not None and not (lead - stages < rd.j_off <= lead):
+                raise ValueError(
+                    f"call {call.name}: step {step.op} reads row "
+                    f"j{rd.j_off:+d} of {rd.src}; the mod-slot "
+                    f"arithmetic aliases it outside "
+                    f"(j{lead - stages:+d}, j{lead:+d}] "
+                    f"(PlanCheck PC002/PC005)")
+        for targets in step.writes:
+            for kind, tgt in targets:
+                if kind == "local":
+                    local_seen.add(str(tgt))
+                elif kind == "buf":
+                    produced_lead.setdefault(str(tgt), step.lead)
+
+
 def build_call(call: CallPlan, sizes: tuple[int, ...], dtype,
                interpret: bool = False, double_buffer: bool = False):
     """Concretize one :class:`CallPlan` for a problem size and build the
@@ -124,6 +180,7 @@ def build_call(call: CallPlan, sizes: tuple[int, ...], dtype,
             f"but the fn table has {len(call.fns)} entries — a "
             f"deserialized plan must re-link its kernel callables "
             f"(KernelPlan.from_dict / repro.core.plan.fn_from_spec)")
+    _require_hazard_free(call)
     *outer_sizes, nj, ni = sizes
     o_lo = call.outer_lo
     o_hi = call.outer_hi_off

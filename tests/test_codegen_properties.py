@@ -17,6 +17,7 @@ import pytest
 
 from _progen import build_chain_program, random_chain, shrink_chain
 from repro.core import compile_program
+from repro.core.plancheck import check_plan, has_errors
 from repro.core.unfused import build_unfused
 
 try:
@@ -70,22 +71,31 @@ if HAVE_HYPOTHESIS:
 
 def _chain_disagreement(desc, shape=(9, 14)) -> str:
     """Run one chain on all three execution paths; return '' when they
-    agree, else a short tag naming the first disagreeing pair."""
+    agree (and the plan lints clean), else a short tag naming the first
+    disagreeing pair.
+
+    The static analyzer rides along as a fourth oracle: a chain whose
+    three execution paths agree is *known correct*, so any
+    error-severity PlanCheck finding on its plan is an analyzer false
+    positive — the fuzzer cross-validates analyzer verdicts against
+    ground-truth execution."""
     prog = build_chain_program(desc, name=f"fuzz_{desc['seed']}")
     rng = np.random.default_rng(desc["seed"])
     u = jnp.asarray(rng.standard_normal(shape), jnp.float32)
     ref = np.asarray(build_unfused(prog).fn(u=u)["out"])
     jx = np.asarray(
         compile_program(prog, backend="jax", use_cache=False).fn(u)["out"])
-    pl = np.asarray(
-        compile_program(prog, backend="pallas", interpret=True,
-                        use_cache=False).fn(u=u)["out"])
+    gen_pl = compile_program(prog, backend="pallas", interpret=True,
+                             use_cache=False)
+    pl = np.asarray(gen_pl.fn(u=u)["out"])
     if not np.allclose(jx, ref, atol=1e-4, rtol=1e-3):
         return "jax-vs-unfused"
     if not np.allclose(pl, ref, atol=1e-4, rtol=1e-3):
         return "pallas-vs-unfused"
     if not np.allclose(pl, jx, atol=1e-4, rtol=1e-3):
         return "pallas-vs-jax"
+    if has_errors(check_plan(gen_pl.kernel_plan)):
+        return "plancheck-false-positive"
     return ""
 
 

@@ -126,7 +126,10 @@ def test_atomic_write_leaves_no_temp_files(tmp_path):
     cache.put(program_plan_key(laplace5_program()),
               _plan_of(laplace5_program()))
     assert list(tmp_path.glob("*.tmp")) == []
-    assert len(list(tmp_path.glob("*"))) == 1
+    # exactly the entry plus the cross-process write-lock file
+    assert sorted(p.name for p in tmp_path.glob("*") if p.name != ".lock") \
+        == sorted(p.name for p in tmp_path.glob("*.json"))
+    assert len(list(tmp_path.glob("*.json"))) == 1
 
 
 # ---------------------------------------------------------------------------
@@ -262,7 +265,8 @@ def test_put_survives_filesystem_failures(tmp_path, monkeypatch):
     monkeypatch.setattr(os, "replace",
                         lambda *a: (_ for _ in ()).throw(OSError("ENOSPC")))
     assert cache.put(key, kplan) is False
-    assert list(tmp_path.glob("*")) == []  # tmp file cleaned up
+    # tmp file cleaned up; only the write-lock file may remain
+    assert [p.name for p in tmp_path.glob("*") if p.name != ".lock"] == []
 
 
 def test_evict_tolerates_racing_unlinks(tmp_path, monkeypatch):
