@@ -27,6 +27,14 @@ program as its in-row baseline:
 * ``subset_sum`` — reduction keeping a leading subset of outer dims
   (accumulator re-initialized per kept-prefix tile).
 
+The suite also sweeps the **plan-interpreter registry**
+(``interpreters`` legs): every registered interpreter
+(:mod:`repro.core.interpreters` — Pallas-interpret, the pure-JAX plan
+interpreter, future registrations) runs laplace5 and heat3d against
+the legacy fused-JAX emitter baseline, so the overhead of interpreting
+the declarative KernelPlan vs executing emitted source is tracked
+per PR.
+
 The suite also times the **AOT plan cache** (``plan_cache`` legs):
 cold-plan compiles (full analysis pipeline + planner) against
 warm-cache compiles (the serialized plan loaded from disk, analysis
@@ -137,6 +145,48 @@ def run(interpret: bool = True):
     return rows
 
 
+INTERP_CASES = [
+    ("laplace5", laplace5_program, "cell", "lap", (96, 256)),
+    ("heat3d", heat3d_program, "u", "heat", (6, 32, 256)),
+]
+
+
+def run_interpreters(interpret: bool = True):
+    """Per-interpreter legs: every registered plan interpreter runs the
+    same program, timed against the legacy fused-JAX emitter
+    (``backend="jax"``) as the in-suite baseline — the cost of
+    executing the declarative KernelPlan instead of emitted source.
+    New registrations get a leg automatically."""
+    from repro.core.interpreters import registered_interpreters
+
+    rng = np.random.default_rng(11)
+    legs = []
+    for case, build, arg, out, shape in INTERP_CASES:
+        prog = build()
+        u = mk(rng, shape)
+        ref = build_unfused(prog).fn(**{arg: u})[out]
+        gen_e = compile_program(prog, backend="jax")
+        emit_fn = jax.jit(lambda u, _g=gen_e: _g.fn(u)[out])
+        t_e, got = time_fn(emit_fn, u)
+        assert np.allclose(np.asarray(got), np.asarray(ref),
+                           atol=1e-4, rtol=1e-4), f"{case}/jax_emitter"
+        legs.append({"name": f"interp_{case}_jax_emitter",
+                     "interpreter": "jax_emitter",
+                     "us_per_call": t_e * 1e6,
+                     "vs_jax_emitter": 1.0})
+        for name in registered_interpreters():
+            gen = compile_program(prog, backend=name, interpret=interpret)
+            fn = jax.jit(lambda u, _g=gen, _a=arg: _g.fn(**{_a: u})[out])
+            t, got = time_fn(fn, u)
+            assert np.allclose(np.asarray(got), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4), f"{case}/{name}"
+            legs.append({"name": f"interp_{case}_{name}",
+                         "interpreter": name,
+                         "us_per_call": t * 1e6,
+                         "vs_jax_emitter": t / t_e})
+    return legs
+
+
 PLAN_CACHE_CASES = [("laplace5", laplace5_program),
                     ("heat3d", heat3d_program)]
 
@@ -183,6 +233,7 @@ def main(argv=None) -> None:
                     help="run with interpret=False (TPU runtimes only)")
     args = ap.parse_args(argv)
     rows = run(interpret=not args.no_interpret)
+    interp_legs = run_interpreters(interpret=not args.no_interpret)
     cache_legs = run_plan_cache()
     if args.json:
         legs = [{k: r[k] for k in ("name", "us_per_call", "backend",
@@ -200,12 +251,17 @@ def main(argv=None) -> None:
                            "jaxlib": jaxlib.__version__,
                            "python": platform.python_version()},
                    "legs": legs,
+                   "interpreters": interp_legs,
                    "plan_cache": cache_legs}, sys.stdout, indent=1)
         sys.stdout.write("\n")
         return
     print("name,us_per_call,derived")
     for r in rows:
         print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+    for leg in interp_legs:
+        print(f"{leg['name']},{leg['us_per_call']:.1f},"
+              f"interpreter={leg['interpreter']};"
+              f"vs_jax_emitter={leg['vs_jax_emitter']:.2f}x")
     for leg in cache_legs:
         print(f"{leg['name']},cold_plan_ms={leg['cold_plan_ms']:.2f},"
               f"warm_cache_ms={leg['warm_cache_ms']:.2f},"

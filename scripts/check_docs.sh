@@ -21,6 +21,11 @@
 #      must have a row in the docs/ARCHITECTURE.md diagnostic table,
 #      and every table row must correspond to a code the analyzer can
 #      actually emit — the live code table cannot drift either way.
+#   6. every interpreter in the plan-interpreter registry must have a
+#      row in the docs/BACKENDS.md "Interpreter registry" table, and
+#      every table row must name a registered interpreter — new
+#      registrations cannot land undocumented, and stale rows cannot
+#      outlive their interpreter.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -163,6 +168,24 @@ for code in sorted(documented - emitted):
     failures.append(f"docs/ARCHITECTURE.md: diagnostic {code} is documented "
                     f"but {pc_path} never emits it")
 
+# ---- 6. interpreter registry <-> BACKENDS.md registry table ---------------
+from repro.core.interpreters import registered_interpreters
+
+registered = set(registered_interpreters())
+reg_start = backends.find("## Interpreter registry")
+reg_end = backends.find("\n## ", reg_start + 1)
+reg_section = backends[reg_start:reg_end if reg_end != -1 else None]
+rows = set(re.findall(r"^\|\s*`([^`|]+)`\s*\|", reg_section, re.M))
+if reg_start == -1 or not rows:
+    failures.append("docs/BACKENDS.md: 'Interpreter registry' table missing "
+                    "(no | `name` | rows found)")
+for name in sorted(registered - rows):
+    failures.append(f"interpreter {name!r} is registered but has no row in "
+                    f"the docs/BACKENDS.md interpreter-registry table")
+for name in sorted(rows - registered):
+    failures.append(f"docs/BACKENDS.md: interpreter-registry row {name!r} "
+                    f"names no registered interpreter")
+
 if failures:
     print("check_docs: FAIL")
     for f in failures:
@@ -170,5 +193,5 @@ if failures:
     sys.exit(1)
 print("check_docs: OK (engine docstrings + docs/*.md code blocks + "
       "PallasUnsupported restriction table + plan-IR docstrings + "
-      "PlanCheck diagnostic table)")
+      "PlanCheck diagnostic table + interpreter-registry table)")
 PY

@@ -23,6 +23,19 @@ cd "$(dirname "$0")/.."
 
 scripts/lint.sh
 
+# Conformance surface for this run: every registered plan interpreter
+# is swept against the whole program corpus by
+# tests/test_interp_conformance.py — make the matrix visible up front
+# so a PR that (un)registers an interpreter shows its blast radius.
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python - <<'PY'
+from repro.core.interpreters import registered_interpreters
+from repro.core.programs import ALL_PROGRAMS
+interps = registered_interpreters()
+print(f"interpreter matrix: {len(interps)} interpreters "
+      f"({', '.join(interps)}) x {len(ALL_PROGRAMS)} programs "
+      f"x 2 streaming modes")
+PY
+
 COV_ARGS=()
 if [ "$#" -eq 0 ] && python -c "import pytest_cov" >/dev/null 2>&1; then
     COV_ARGS=(--cov=repro.core --cov-report=term --cov-fail-under=75)

@@ -3,7 +3,7 @@
 #: Build stamp folded into on-disk plan-cache keys and entry headers
 #: (repro.core.plancache): bump alongside behavior changes that should
 #: invalidate persisted plans without a schema change.
-__version__ = "0.6.0"
+__version__ = "0.7.0"
 
 from .codegen_jax import Generated
 from .codegen_pallas import PallasGenerated, generate_pallas, plan_pallas
@@ -14,9 +14,12 @@ from .engine import (BACKENDS, clear_compile_cache, compile_cache_size,
 from .fusion import FusedSchedule, Unfusable, fuse_inest_dag
 from .infer import IDAG, InferenceError, infer
 from .dataflow import build_dataflow
-from .plan import (SCHEMA_VERSION, CallPlan, KernelPlan, PallasUnsupported,
-                   PlanSerializationError, fn_key, register_step_builder,
-                   unregister_step_builder)
+from .interpreters import (InterpreterSpec, PlanUnsupported, execute_plan,
+                           get_interpreter, register_interpreter,
+                           registered_interpreters, unregister_interpreter)
+from .plan import (PLAN_FEATURES, SCHEMA_VERSION, CallPlan, KernelPlan,
+                   PallasUnsupported, PlanSerializationError, fn_key,
+                   register_step_builder, unregister_step_builder)
 from .plancache import PlanCache, program_plan_key
 from .plancheck import (Diagnostic, PlanCheckError, PlanCheckWarning,
                         check_plan, has_errors, sizes_from_arrays,
@@ -26,11 +29,15 @@ from .rules import Extent, KernelRule, Program, axiom, goal, kernel
 from .terms import Term, parse_term, unify_term
 
 __all__ = [
-    "BACKENDS", "CallPlan", "Diagnostic", "Generated", "KernelPlan",
+    "BACKENDS", "CallPlan", "Diagnostic", "Generated", "InterpreterSpec",
+    "KernelPlan",
     "PallasGenerated", "PallasUnsupported", "PlanCache", "PlanCheckError",
-    "PlanCheckWarning", "PlanSerializationError",
+    "PlanCheckWarning", "PlanSerializationError", "PlanUnsupported",
+    "PLAN_FEATURES",
     "SCHEMA_VERSION", "check_plan", "clear_compile_cache",
-    "compile_cache_size", "has_errors", "sizes_from_arrays", "vmem_bytes",
+    "compile_cache_size", "execute_plan", "get_interpreter", "has_errors",
+    "register_interpreter", "registered_interpreters", "sizes_from_arrays",
+    "unregister_interpreter", "vmem_bytes",
     "vmem_report",
     "compile_program", "fn_key", "generate_pallas",
     "pallas_auto_viable", "plan_cache_cap", "plan_cache_size", "plan_pallas",

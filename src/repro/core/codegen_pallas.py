@@ -577,11 +577,14 @@ class PallasGenerated:
     compilation ran the pipeline — and ``None`` when the kernel plan
     was restored from an on-disk AOT cache
     (:mod:`repro.core.plancache`), where the analysis never ran at
-    all."""
+    all.  ``interpreter`` names the registered plan interpreter
+    (:mod:`repro.core.interpreters`) whose ``build_call`` executes
+    ``kernel_plan`` inside ``fn``."""
 
     kernel_plan: KernelPlan
     fn: Callable
     plan: Optional[StoragePlan] = None
+    interpreter: str = "pallas"
 
     @property
     def calls(self) -> tuple[CallPlan, ...]:

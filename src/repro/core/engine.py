@@ -7,13 +7,18 @@ dispatches to a backend:
 
 * ``backend="jax"`` — emit fused, vectorized JAX source
   (:mod:`repro.core.codegen_jax`), returning :class:`Generated`;
-* ``backend="pallas"`` — lower the schedule to the declarative
-  :class:`~repro.core.plan.KernelPlan` IR
+* ``backend="<interpreter>"`` — any name in the **plan-interpreter
+  registry** (:mod:`repro.core.interpreters`): lower the schedule to
+  the declarative :class:`~repro.core.plan.KernelPlan` IR
   (:func:`repro.core.codegen_pallas.plan_pallas`, the planner) and hand
-  it to the stencil interpreter
-  (:func:`repro.kernels.stencil2d.kernel.execute_plan`), returning
+  it to that registered interpreter through the shared host half
+  (:func:`repro.core.interpreters.execute_plan`), returning
   :class:`PallasGenerated`; raises :class:`PallasUnsupported` for
-  programs outside the interpreter's shape;
+  programs outside the planner's shape and the typed
+  :class:`~repro.core.interpreters.PlanUnsupported` subclass for plans
+  outside the interpreter's declared capability set.  Built-ins:
+  ``"pallas"`` (the Pallas TPU stencil interpreter) and ``"interp_jax"``
+  (the pure-JAX plan interpreter, :mod:`repro.core.interp_jax`);
 * ``backend="auto"`` (default) — probe Pallas applicability and fall
   back to JAX.  Any single-nest schedule over a (row, vector) loop order
   — including reductions (carried, kept-prefix and row-kept), outer
@@ -31,10 +36,13 @@ The full routing rules, the cache keys, and the table of remaining
 ``PallasUnsupported`` shapes live in docs/BACKENDS.md.
 
 Compiled results are cached at two levels: a fast path keyed on
-(program signature, backend, dtype, interpret, double_buffer), and —
-for the Pallas backend — a **plan-level** cache keyed on
-:meth:`KernelPlan.cache_key`, so two differently-built programs that
-lower to structurally equal plans share one compiled interpreter.  The
+(program signature, backend, dtype, interpret, double_buffer) — with
+flags an interpreter declares it does not honor normalized out — and,
+for every registry backend, a **plan-level** cache keyed on
+(interpreter name, :meth:`KernelPlan.cache_key`), so two
+differently-built programs that lower to structurally equal plans
+share one compiled interpreter while two interpreters executing the
+*same* plan never collide.  The
 plan-level cache is LRU-bounded (:func:`set_plan_cache_cap`) and, when
 ``plan_cache_dir=...`` is passed, becomes the L1 over a durable
 on-disk L2 (:mod:`repro.core.plancache`): a process that finds its
@@ -56,6 +64,7 @@ from .codegen_pallas import (PallasGenerated, PallasUnsupported,
 from .dataflow import build_dataflow
 from .fusion import fuse_inest_dag
 from .infer import infer
+from .interpreters import get_interpreter, registered_interpreters
 from .plan import KernelPlan
 from .plan import fn_key as _fn_key
 from .plancheck import (PlanCheckError, PlanCheckWarning, check_plan,
@@ -64,6 +73,10 @@ from .plancheck import (PlanCheckError, PlanCheckWarning, check_plan,
 from .reuse import StoragePlan, analyze_storage
 from .rules import Program
 
+#: The built-in backend names.  ``compile_program`` additionally
+#: accepts any name in the plan-interpreter registry
+#: (:func:`repro.core.interpreters.registered_interpreters`), so this
+#: tuple is the static floor, not the full set.
 BACKENDS = ("auto", "jax", "pallas")
 
 #: Environment default for ``compile_program(plan_cache_dir=...)``.
@@ -215,20 +228,27 @@ def _run_plancheck(kplan: KernelPlan, mode: str, *, dtype, double_buffer,
         warnings.warn(str(d), PlanCheckWarning, stacklevel=3)
 
 
-def _emit_plan(kplan: KernelPlan, plan: Optional[StoragePlan], *, dtype,
-               interpret, double_buffer, use_cache=True, check="warn",
+def _emit_plan(kplan: KernelPlan, plan: Optional[StoragePlan], *,
+               interpreter, dtype, interpret, double_buffer,
+               use_cache=True, check="warn",
                dim_sizes=None) -> PallasGenerated:
-    """Build (or fetch) the interpreter for a finished kernel plan.
+    """Build (or fetch) the named registered interpreter for a finished
+    kernel plan.
 
-    Memoized on :meth:`KernelPlan.cache_key` plus the execution flags
-    (LRU-bounded, :func:`set_plan_cache_cap`), so programs lowering to
-    structurally equal plans share one compiled executor — whether the
-    plan came from the planner or from the on-disk cache.  Static
+    Memoized on the interpreter name, :meth:`KernelPlan.cache_key` and
+    the execution flags the interpreter declares it honors (un-honored
+    flags are normalized out; LRU-bounded,
+    :func:`set_plan_cache_cap`), so programs lowering to structurally
+    equal plans share one compiled executor per interpreter — whether
+    the plan came from the planner or from the on-disk cache — and two
+    interpreters executing the same plan never collide.  Static
     analysis (``check``, a resolved ``check_plans`` mode) runs at build
     time, covering both the fresh-plan and disk-restored paths; a
     plan-cache hit is a plan that already passed."""
-    pkey = (kplan.cache_key(), jnp.dtype(dtype).name, bool(interpret),
-            bool(double_buffer))
+    spec = get_interpreter(interpreter)
+    pkey = (interpreter, kplan.cache_key(), jnp.dtype(dtype).name,
+            bool(interpret) and "interpret" in spec.flags,
+            bool(double_buffer) and "double_buffer" in spec.flags)
     if use_cache:
         hit = _PLAN_CACHE.get(pkey)
         if hit is not None:
@@ -241,12 +261,13 @@ def _emit_plan(kplan: KernelPlan, plan: Optional[StoragePlan], *, dtype,
             return hit
     _run_plancheck(kplan, check, dtype=dtype, double_buffer=double_buffer,
                    dim_sizes=dim_sizes)
-    # imported here: the interpreter module imports the plan IR from
-    # repro.core, so a module-level import would be circular
-    from ..kernels.stencil2d.kernel import execute_plan
-    fn = execute_plan(kplan, dtype=dtype, interpret=interpret,
-                      double_buffer=double_buffer)
-    gen = PallasGenerated(kplan, fn, plan)
+    # the shared host half resolves the interpreter's build_call through
+    # the registry (and runs the capability check, raising the typed
+    # PlanUnsupported for plans outside the declared feature set)
+    from .interpreters import execute_plan
+    fn = execute_plan(kplan, interpreter=interpreter, dtype=dtype,
+                      interpret=interpret, double_buffer=double_buffer)
+    gen = PallasGenerated(kplan, fn, plan, interpreter=interpreter)
     if use_cache:
         _PLAN_CACHE[pkey] = gen
         while len(_PLAN_CACHE) > _PLAN_CACHE_CAP:
@@ -254,8 +275,8 @@ def _emit_plan(kplan: KernelPlan, plan: Optional[StoragePlan], *, dtype,
     return gen
 
 
-def _emit_pallas(plan, idag, *, dtype, interpret, double_buffer,
-                 use_cache=True, check="warn",
+def _emit_pallas(plan, idag, *, interpreter, dtype, interpret,
+                 double_buffer, use_cache=True, check="warn",
                  dim_sizes=None) -> PallasGenerated:
     """Plan, then interpret — through the plan-level cache.
 
@@ -263,9 +284,9 @@ def _emit_pallas(plan, idag, *, dtype, interpret, double_buffer,
     :class:`PallasUnsupported` for unsupported shapes); interpreter
     construction is memoized by :func:`_emit_plan`."""
     kplan = plan_pallas(plan, idag)
-    return _emit_plan(kplan, plan, dtype=dtype, interpret=interpret,
-                      double_buffer=double_buffer, use_cache=use_cache,
-                      check=check, dim_sizes=dim_sizes)
+    return _emit_plan(kplan, plan, interpreter=interpreter, dtype=dtype,
+                      interpret=interpret, double_buffer=double_buffer,
+                      use_cache=use_cache, check=check, dim_sizes=dim_sizes)
 
 
 def _load_plan_from_disk(program: Program, backend: str,
@@ -328,9 +349,10 @@ def _pallas_auto_probe(plan, idag, *, dtype, interpret, double_buffer,
         if est > vmem_budget(None):
             return None
     try:
-        return _emit_plan(kplan, plan, dtype=dtype, interpret=interpret,
-                          double_buffer=double_buffer, use_cache=use_cache,
-                          check=check, dim_sizes=dim_sizes)
+        return _emit_plan(kplan, plan, interpreter="pallas", dtype=dtype,
+                          interpret=interpret, double_buffer=double_buffer,
+                          use_cache=use_cache, check=check,
+                          dim_sizes=dim_sizes)
     except PlanCheckError:
         return None
 
@@ -379,17 +401,28 @@ def compile_program(
     diagnostic (PC003) and lets ``backend="auto"`` route nests whose
     estimated resident footprint exceeds ``REPRO_VMEM_BUDGET_BYTES``
     (default ~16 MiB) to the JAX backend."""
-    if backend not in BACKENDS:
-        raise ValueError(f"unknown backend {backend!r}; expected {BACKENDS}")
+    if backend in ("auto", "jax"):
+        spec = None
+    else:
+        try:
+            spec = get_interpreter(backend)
+        except ValueError:
+            raise ValueError(
+                f"unknown backend {backend!r}; expected 'auto', 'jax' or a "
+                f"registered interpreter: {registered_interpreters()}"
+            ) from None
     check = resolve_check_mode(check_plans)
     if plan_cache_dir is None:
         plan_cache_dir = os.environ.get(PLAN_CACHE_DIR_ENV) or None
     sizes_key = tuple(sorted(dim_sizes.items())) if dim_sizes else None
-    # double_buffer is a Pallas streaming mode: normalize it out of the
-    # key for pure-JAX compilations so they aren't cached twice
+    # flags an interpreter does not honor are normalized out of the key
+    # (a pure-JAX interpreter compiles identically either way); for the
+    # legacy "jax" emitter only double_buffer is moot, matching the
+    # pre-registry key shape exactly
     key = (program_signature(program), backend, jnp.dtype(dtype).name,
-           bool(interpret),
-           bool(double_buffer) and backend != "jax",
+           bool(interpret) and (spec is None or "interpret" in spec.flags),
+           bool(double_buffer) and backend != "jax"
+           and (spec is None or "double_buffer" in spec.flags),
            sizes_key)
     if use_cache:
         hit = _CACHE.get(key)
@@ -401,7 +434,7 @@ def compile_program(
                 _store_plan_to_disk(program, hit.kernel_plan,
                                     plan_cache_dir, only_if_missing=True)
             return hit
-    if plan_cache_dir is not None and backend in ("pallas", "auto"):
+    if plan_cache_dir is not None and backend != "jax":
         # disk-restored artifacts carry no StoragePlan, so they live
         # under a marked key: a later compile *without* plan_cache_dir
         # must rebuild the full artifact, not inherit the degraded one
@@ -412,7 +445,10 @@ def compile_program(
                 return hit
         kplan = _load_plan_from_disk(program, backend, plan_cache_dir)
         if kplan is not None:
-            gen = _emit_plan(kplan, None, dtype=dtype, interpret=interpret,
+            gen = _emit_plan(kplan, None,
+                             interpreter="pallas" if backend == "auto"
+                             else backend,
+                             dtype=dtype, interpret=interpret,
                              double_buffer=double_buffer,
                              use_cache=use_cache, check=check,
                              dim_sizes=dim_sizes)
@@ -422,17 +458,18 @@ def compile_program(
     idag, plan = _build_plan(program)
     if backend == "jax":
         gen: Union[Generated, PallasGenerated] = generate(plan, idag)
-    elif backend == "pallas":
-        gen = _emit_pallas(plan, idag, dtype=dtype, interpret=interpret,
-                           double_buffer=double_buffer, use_cache=use_cache,
-                           check=check, dim_sizes=dim_sizes)
-    else:
+    elif backend == "auto":
         gen = _pallas_auto_probe(plan, idag, dtype=dtype, interpret=interpret,
                                  double_buffer=double_buffer,
                                  use_cache=use_cache, check=check,
                                  dim_sizes=dim_sizes)
         if gen is None:
             gen = generate(plan, idag)
+    else:
+        gen = _emit_pallas(plan, idag, interpreter=backend, dtype=dtype,
+                           interpret=interpret, double_buffer=double_buffer,
+                           use_cache=use_cache, check=check,
+                           dim_sizes=dim_sizes)
     if plan_cache_dir is not None and isinstance(gen, PallasGenerated):
         _store_plan_to_disk(program, gen.kernel_plan, plan_cache_dir)
     if use_cache:

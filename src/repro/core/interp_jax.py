@@ -1,0 +1,306 @@
+"""Pure-JAX plan interpreter: the KernelPlan semantics without Pallas.
+
+This is the second registered interpreter behind the registry seam
+(:mod:`repro.core.interpreters`), executing the *same validated
+KernelPlan* the Pallas stencil interpreter runs — a transliteration of
+:func:`repro.kernels.stencil2d.kernel.build_call` onto plain
+``jax.lax`` primitives, replacing the legacy hand-written
+``codegen_jax`` emitter on the plan-covered path (the emitter survives
+only as the ``backend="jax"`` fallback for shapes the planner rejects).
+
+The Pallas grid becomes one ``lax.fori_loop`` over the linearized step
+count; the linear index is decomposed by the same odometer the
+double-buffer DMA pipeline uses (last dimension fastest — the fused
+nest's traversal order), and all VMEM scratch becomes loop-carried
+state: rolling row windows ``(stages, width)``, streamed and producer
+plane windows ``(p_stages, rows, width)``, accumulator rows, and the
+padded outputs themselves.  Every mechanism keeps the reference
+semantics exactly — clamped row/plane streaming (edge rows repeat
+during warm-up/drain), floor-mod slot rotation, predicated accumulator
+combines over rows *and* outer tiles, predicated absolute-row seating
+of producer planes, identity-filled output rows — so the output
+contract matches the Pallas ``build_call`` bit-for-bit in shape:
+row outputs ``(*grid, steps_j, ni)``, carried accumulators
+``(1, width)``, kept-prefix accumulators ``(*grid[:n_kept], width)``,
+and the shared host half
+(:func:`repro.core.interpreters.execute_plan`) assembles them with the
+identical trim/seat rules.
+
+``interpret`` and ``double_buffer`` are accepted and ignored (there is
+no kernel to interpret and no DMA to stage); the registry spec declares
+an empty flag set so the engine normalizes both out of its cache keys.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from .interpreters import (InterpreterSpec, register_interpreter,
+                           require_hazard_free, require_linked_fns)
+from .plan import PLAN_FEATURES, CallPlan, WindowPlan
+
+
+def _mod(pos, stages: int):
+    """Floor-mod slot rotation (robust to negative priming positions)."""
+    return jnp.mod(pos, stages)
+
+
+def build_call(call: CallPlan, sizes: tuple[int, ...], dtype,
+               interpret: bool = False, double_buffer: bool = False):
+    """Concretize one :class:`CallPlan` as a jitted-JAX callable.
+
+    Mirrors the Pallas ``build_call`` contract: ``sizes`` is
+    ``(*outer_sizes, Nj, Ni)``, the result is ``(fn, steps_j)``, and
+    ``fn`` maps the call's input arrays (scalars as ``(1, 1)``) to one
+    padded output per ``call.outputs`` entry (a list when several).
+    ``interpret``/``double_buffer`` are ignored — see module docstring.
+    """
+    n_out = call.n_outer
+    if len(sizes) != n_out + 2:
+        raise ValueError(
+            f"call {call.name} has n_outer={n_out} but got sizes {sizes}"
+        )
+    require_linked_fns(call)
+    require_hazard_free(call)
+    *outer_sizes, nj, ni = sizes
+    o_lo = call.outer_lo
+    o_hi = call.outer_hi_off
+    gsz = [outer_sizes[d] + o_hi[d] - o_lo[d] for d in range(n_out)]
+    steps_j = (nj + call.x_hi_off) - call.x_lo
+    total_steps = steps_j
+    for s in gsz:
+        total_steps *= s
+
+    arr_ins = [i for i in call.inputs if not i.scalar]
+    row_ins = [i for i in arr_ins if not i.plane]
+    plane_ins = [i for i in arr_ins if i.plane]
+    roll_wins = [WindowPlan(f"in_{i.name}", i.stages, i.i_lo, i.i_hi)
+                 for i in row_ins] + [w for w in call.windows if not w.plane]
+    plane_wins = [w for w in call.windows if w.plane]
+    bwidth = {w.name: ni + (w.i_hi - w.i_lo) for w in roll_wins + plane_wins}
+    win_h = {w.name: nj + (w.j_hi - w.j_lo) for w in plane_wins}
+    acc_w = {a.name: ni + a.w_off for a in call.accs}
+    ref_idx = {ispec.name: k for k, ispec in enumerate(call.inputs)}
+    ispec_of = {i.name: i for i in arr_ins}
+    in_h = {i.name: nj + (i.j_hi - i.j_lo) for i in arr_ins}
+    in_w = {i.name: ni + (i.i_hi - i.i_lo) for i in arr_ins}
+    roll_of = {w.name: w for w in roll_wins}
+    acc_of = {a.name: a for a in call.accs}
+    pwin_of = {w.name: w for w in plane_wins}
+
+    def _row_pos(ispec, x):
+        """Source row index of ``ispec`` for canonical position ``x``
+        (clamped: edge rows repeat during warm-up/drain)."""
+        return jnp.clip(x + ispec.lead - ispec.j_lo, 0, in_h[ispec.name] - 1)
+
+    def _outer_src(ispec, pos):
+        """Source indices for the input's own outer dims at canonical
+        outer positions ``pos`` (plane dim runs ``p_lead`` ahead; all
+        clamped so warm-up/drain tiles fetch edge planes)."""
+        a_out = ispec.n_outer
+        ilos = ispec.outer_los or (0,) * a_out
+        ihis = ispec.outer_his or (0,) * a_out
+        idxs = []
+        for li, d in enumerate(range(n_out - a_out, n_out)):
+            n_planes = outer_sizes[d] + ihis[li] - ilos[li]
+            p = pos[d]
+            if ispec.plane and d == n_out - 1:
+                p = p + ispec.p_lead
+            idxs.append(jnp.clip(p - ilos[li], 0, n_planes - 1))
+        return idxs
+
+    def fn(*args):
+        st0 = {}
+        for w in roll_wins:
+            st0[("win", w.name)] = jnp.zeros((w.stages, bwidth[w.name]),
+                                             dtype)
+        for i in plane_ins:
+            st0[("plane", i.name)] = jnp.zeros(
+                (i.p_stages, in_h[i.name], in_w[i.name]), dtype)
+        for w in plane_wins:
+            st0[("pwin", w.name)] = jnp.zeros(
+                (w.p_stages, win_h[w.name], bwidth[w.name]), dtype)
+        for a in call.accs:
+            st0[("acc", a.name)] = jnp.full((acc_w[a.name],), a.init, dtype)
+        for oi, out in enumerate(call.outputs):
+            if out.acc is not None:
+                a = acc_of[out.acc]
+                wa = acc_w[out.acc]
+                shape = (*gsz[:a.n_kept], wa) if a.n_kept else (1, wa)
+            else:
+                shape = (*gsz, steps_j, ni)
+            st0[("out", oi)] = jnp.zeros(shape, dtype)
+
+        def body(lin, st):
+            st = dict(st)
+            jid = lin % steps_j
+            rest = lin // steps_j
+            outer_ids = [None] * n_out
+            for d in reversed(range(n_out)):
+                outer_ids[d] = rest % gsz[d]
+                rest = rest // gsz[d]
+            opos = [outer_ids[d] + o_lo[d] for d in range(n_out)]
+            x = jid + call.x_lo
+
+            # 0. identity-initialize accumulators (carried: first grid
+            # step; kept-prefix: first step of every kept tile)
+            for a in call.accs:
+                first = jid == 0
+                for d in range(a.n_kept, n_out):
+                    first = first & (outer_ids[d] == 0)
+                cur = st[("acc", a.name)]
+                st[("acc", a.name)] = jnp.where(
+                    first, jnp.full_like(cur, a.init), cur)
+
+            # 1. stream one new row per array input into its window
+            for ispec in arr_ins:
+                src = args[ref_idx[ispec.name]]
+                a_out = ispec.n_outer
+                starts = tuple(_outer_src(ispec, opos)) \
+                    + (_row_pos(ispec, x), 0)
+                row = lax.dynamic_slice(
+                    src, starts,
+                    (1,) * (a_out + 1) + (in_w[ispec.name],)
+                ).reshape(in_w[ispec.name])
+                if ispec.plane:
+                    slot = _mod(opos[n_out - 1] + ispec.p_lead,
+                                ispec.p_stages)
+                    st[("plane", ispec.name)] = lax.dynamic_update_slice(
+                        st[("plane", ispec.name)], row[None, None, :],
+                        (slot, _row_pos(ispec, x), 0))
+                else:
+                    st[("win", f"in_{ispec.name}")] = \
+                        lax.dynamic_update_slice(
+                            st[("win", f"in_{ispec.name}")], row[None, :],
+                            (_mod(x + ispec.lead, ispec.stages), 0))
+
+            # 2. fused steps, in dataflow order, at their leads
+            local: dict[str, jnp.ndarray] = {}
+            for step in call.steps:
+                ins = []
+                cur = None
+                if step.acc is not None:
+                    cur = st[("acc", step.acc)]
+                    ins.append(cur)
+                for rd in step.reads:
+                    w = ni + rd.w_off
+                    if rd.src.startswith("local:"):
+                        lrow = local[rd.src[6:]]
+                        ins.append(lrow[rd.col0:rd.col0 + w])
+                    elif rd.src.startswith("scalar:"):
+                        ins.append(args[ref_idx[rd.src[7:]]][0, 0])
+                    elif rd.src.startswith("in_") and \
+                            ispec_of.get(rd.src[3:]) is not None and \
+                            ispec_of[rd.src[3:]].plane:
+                        # streamed plane-window read: mod-stage plane
+                        # slot, absolute row inside it
+                        ispec = ispec_of[rd.src[3:]]
+                        slot = _mod(opos[n_out - 1] + rd.p_off,
+                                    ispec.p_stages)
+                        r_idx = jnp.clip(x + rd.j_off - ispec.j_lo, 0,
+                                         in_h[ispec.name] - 1)
+                        ins.append(lax.dynamic_slice(
+                            st[("plane", ispec.name)],
+                            (slot, r_idx, rd.col0 - ispec.i_lo),
+                            (1, 1, w)).reshape(w))
+                    elif rd.src in pwin_of:
+                        # producer plane-window read: older planes
+                        # resident, rows addressed absolutely
+                        pw = pwin_of[rd.src]
+                        slot = _mod(opos[n_out - 1] + rd.p_off,
+                                    pw.p_stages)
+                        r_idx = jnp.clip(x + rd.j_off - pw.j_lo, 0,
+                                         win_h[pw.name] - 1)
+                        ins.append(lax.dynamic_slice(
+                            st[("pwin", pw.name)],
+                            (slot, r_idx, rd.col0 - pw.i_lo),
+                            (1, 1, w)).reshape(w))
+                    else:
+                        b = roll_of[rd.src]
+                        ins.append(lax.dynamic_slice(
+                            st[("win", b.name)],
+                            (_mod(x + rd.j_off, b.stages),
+                             rd.col0 - b.i_lo),
+                            (1, w)).reshape(w))
+                vals = call.fns[step.fn_idx](*ins)
+                if step.acc is not None:
+                    # predicated combine: warm-up/drain rows and tiles
+                    # must not pollute
+                    lo, hi = step.valid
+                    pos = x + step.lead
+                    ok = (pos >= lo) & (pos < nj + hi)
+                    for d, (vlo, vhi) in enumerate(step.valid_outer):
+                        ok &= (opos[d] >= vlo) \
+                            & (opos[d] < outer_sizes[d] + vhi)
+                    st[("acc", step.acc)] = jnp.where(ok, vals, cur)
+                    continue
+                if len(step.writes) == 1:
+                    vals = (vals,)
+                for targets, val in zip(step.writes, vals):
+                    for wkind, wtgt in targets:
+                        if wkind == "local":
+                            local[str(wtgt)] = val
+                        elif wkind == "buf" and str(wtgt) in pwin_of:
+                            # producer plane window: newest slot, absolute
+                            # row seating, predicated to the row extent
+                            pw = pwin_of[str(wtgt)]
+                            slot = _mod(opos[n_out - 1] + pw.p_lead,
+                                        pw.p_stages)
+                            r_idx = x + step.lead - pw.j_lo
+                            old = st[("pwin", pw.name)]
+                            seated = lax.dynamic_update_slice(
+                                old, val[None, None, :].astype(dtype),
+                                (slot, r_idx, step.out_col0 - pw.i_lo))
+                            inside = (r_idx >= 0) & (r_idx < win_h[pw.name])
+                            st[("pwin", pw.name)] = jnp.where(
+                                inside, seated, old)
+                        elif wkind == "buf":
+                            b = roll_of[str(wtgt)]
+                            st[("win", b.name)] = lax.dynamic_update_slice(
+                                st[("win", b.name)],
+                                val[None, :].astype(dtype),
+                                (_mod(x + step.lead, b.stages),
+                                 step.out_col0 - b.i_lo))
+                        else:  # 3. one output row for this grid step
+                            oi = int(wtgt)
+                            out_row = jnp.full(
+                                (ni,), call.outputs[oi].fill, dtype)
+                            out_row = lax.dynamic_update_slice(
+                                out_row, val.astype(dtype),
+                                (step.out_col0,))
+                            st[("out", oi)] = lax.dynamic_update_slice(
+                                st[("out", oi)],
+                                out_row.reshape((1,) * (n_out + 1) + (ni,)),
+                                tuple(outer_ids) + (jid, 0))
+
+            # 3b. dump accumulators into their revisited output blocks
+            for oi, out in enumerate(call.outputs):
+                if out.acc is not None:
+                    a = acc_of[out.acc]
+                    row = st[("acc", out.acc)]
+                    wa = acc_w[out.acc]
+                    if a.n_kept:
+                        st[("out", oi)] = lax.dynamic_update_slice(
+                            st[("out", oi)],
+                            row.reshape((1,) * a.n_kept + (wa,)),
+                            tuple(outer_ids[:a.n_kept]) + (0,))
+                    else:
+                        st[("out", oi)] = lax.dynamic_update_slice(
+                            st[("out", oi)], row.reshape(1, wa), (0, 0))
+            return st
+
+        st = lax.fori_loop(0, total_steps, body, st0)
+        padded = [st[("out", oi)] for oi in range(len(call.outputs))]
+        return padded if len(padded) > 1 else padded[0]
+
+    return fn, steps_j
+
+
+register_interpreter(InterpreterSpec(
+    name="interp_jax",
+    build_call=build_call,
+    capabilities=PLAN_FEATURES,
+    flags=frozenset(),
+    description="pure-JAX plan interpreter (lax.fori_loop over the "
+                "linearized grid; loop-carried windows/accumulators)",
+))

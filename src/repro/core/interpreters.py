@@ -1,0 +1,379 @@
+"""The plan-interpreter registry: N executors behind one KernelPlan IR.
+
+HFAV's core claim is that one declarative kernel description lowers to
+multiple efficient executable forms (the cjit emu/avx2/avx512 shape).
+This module is that seam for the KernelPlan IR: an interpreter is a
+**pluggable registration** — a name mapped to an
+:class:`InterpreterSpec` carrying a declared *capability set* (which
+:data:`~repro.core.plan.PLAN_FEATURES` tags it can execute), the
+execution *flags* it honors, and a ``build_call`` that concretizes one
+:class:`~repro.core.plan.CallPlan` for a problem size.  The engine's
+backend dispatch (:func:`repro.core.engine.compile_program`) resolves
+any non-``"jax"``/``"auto"`` backend name through
+:func:`get_interpreter`, so new executors (Pallas-Triton, compiled TPU
+variants) drop in as one registration — and the golden corpus,
+round-trip suite, differential fuzzer, and conformance sweep
+(``tests/test_interp_conformance.py``) cover them automatically.
+
+Two interpreters self-register on first use:
+
+* ``"pallas"`` — the Pallas TPU stencil interpreter
+  (:mod:`repro.kernels.stencil2d.kernel`): VMEM scratch windows,
+  BlockSpec or double-buffered DMA row streaming;
+* ``"interp_jax"`` — the pure-JAX plan interpreter
+  (:mod:`repro.core.interp_jax`): the same plan semantics transliterated
+  onto a ``lax.fori_loop`` over the linearized grid, replacing the
+  legacy hand-written ``codegen_jax`` emitter on the plan-covered path.
+
+Every ``build_call`` must honor the **output contract** of the Pallas
+reference implementation — row outputs ``(*grid, steps_j, ni)``,
+carried accumulators ``(1, width)``, kept-prefix accumulators
+``(*grid[:n_kept], width)`` — because the host half here
+(:func:`execute_plan`: size resolution through axiom shape contracts,
+environment threading, and the :func:`_assemble` trim/seat/lane-reduce
+rules) is shared by every interpreter verbatim.
+
+Capability mismatches raise the typed :class:`PlanUnsupported` (a
+:class:`~repro.core.plan.PallasUnsupported` subclass, so existing
+``auto``-fallback handling applies unchanged); unknown names raise
+``ValueError`` listing what *is* registered.
+"""
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax.numpy as jnp
+
+from .plan import (PLAN_FEATURES, CallPlan, KernelPlan, OutputPlan,
+                   PallasUnsupported)
+from .runtime import lane_reduce
+
+
+class PlanUnsupported(PallasUnsupported):
+    """A validated plan demands features outside an interpreter's
+    declared capability set — a typed refusal (never a miscompile),
+    raised by :func:`check_capabilities` before anything builds."""
+
+
+@dataclass(frozen=True)
+class InterpreterSpec:
+    """One registered plan interpreter.
+
+    ``build_call(call, sizes, dtype, interpret=..., double_buffer=...)``
+    concretizes a :class:`~repro.core.plan.CallPlan` to
+    ``(fn, steps_j)`` under the shared padded-output contract (see the
+    module docstring).  ``capabilities`` is the subset of
+    :data:`~repro.core.plan.PLAN_FEATURES` the interpreter executes;
+    ``flags`` names the execution flags it actually honors (subset of
+    ``{"interpret", "double_buffer"}``) so the engine can normalize
+    un-honored flags out of its cache keys."""
+
+    name: str
+    build_call: Callable = field(compare=False)
+    capabilities: frozenset = frozenset()
+    flags: frozenset = frozenset()
+    description: str = ""
+
+
+_REGISTRY: dict[str, InterpreterSpec] = {}
+
+#: Modules that register the built-in interpreters at import time,
+#: loaded lazily on first registry use (module-level imports here would
+#: be circular: the Pallas interpreter imports the plan IR from
+#: repro.core).
+_BUILTIN_MODULES = ("repro.kernels.stencil2d.kernel",
+                    "repro.core.interp_jax")
+_builtins_loaded = False
+
+
+def _ensure_builtins() -> None:
+    global _builtins_loaded
+    if _builtins_loaded:
+        return
+    _builtins_loaded = True
+    for mod in _BUILTIN_MODULES:
+        importlib.import_module(mod)
+
+
+def register_interpreter(spec: InterpreterSpec) -> None:
+    """Register (or replace) a plan interpreter under ``spec.name``.
+
+    Unknown capability tags are rejected immediately — a typo'd tag
+    would otherwise silently widen what the capability check lets
+    through."""
+    bad = spec.capabilities - PLAN_FEATURES
+    if bad:
+        raise ValueError(
+            f"interpreter {spec.name!r} declares unknown capability "
+            f"tags {sorted(bad)}; known tags: {sorted(PLAN_FEATURES)}")
+    _REGISTRY[spec.name] = spec
+
+
+def unregister_interpreter(name: str) -> None:
+    """Remove a registered interpreter (test isolation helper)."""
+    _REGISTRY.pop(name, None)
+
+
+def registered_interpreters() -> tuple[str, ...]:
+    """Sorted names of every registered interpreter (built-ins are
+    loaded on first call)."""
+    _ensure_builtins()
+    return tuple(sorted(_REGISTRY))
+
+
+def get_interpreter(name: str) -> InterpreterSpec:
+    """Resolve a registered interpreter by name; unknown names raise
+    ``ValueError`` listing what is registered."""
+    _ensure_builtins()
+    spec = _REGISTRY.get(name)
+    if spec is None:
+        raise ValueError(
+            f"unknown plan interpreter {name!r}; registered: "
+            f"{registered_interpreters()}")
+    return spec
+
+
+def check_capabilities(spec: InterpreterSpec, kplan: KernelPlan) -> None:
+    """Raise :class:`PlanUnsupported` when ``kplan`` demands feature
+    tags outside ``spec.capabilities`` (see
+    :meth:`~repro.core.plan.KernelPlan.features`)."""
+    missing = kplan.features() - spec.capabilities
+    if missing:
+        raise PlanUnsupported(
+            f"plan {kplan.program!r} requires features {sorted(missing)} "
+            f"outside interpreter {spec.name!r} capabilities")
+
+
+# ---------------------------------------------------------------------------
+# Shared build-time plan checks (every interpreter's build_call prologue)
+# ---------------------------------------------------------------------------
+
+def require_linked_fns(call: CallPlan) -> None:
+    """Reject a call whose step/host/reduce fn indices point past its
+    fn table — the signature of a deserialized plan that was never
+    re-linked to its kernel callables."""
+    fn_refs = [s.fn_idx for s in call.steps]
+    fn_refs += [h.fn_idx for h in call.host_pre + call.host_post]
+    fn_refs += [o.reduce_idx for o in call.outputs
+                if o.reduce_idx is not None]
+    if fn_refs and max(fn_refs) >= len(call.fns):
+        raise ValueError(
+            f"call {call.name}: plan references fn index {max(fn_refs)} "
+            f"but the fn table has {len(call.fns)} entries — a "
+            f"deserialized plan must re-link its kernel callables "
+            f"(KernelPlan.from_dict / repro.core.plan.fn_from_spec)")
+
+
+def require_hazard_free(call: CallPlan) -> None:
+    """Reject the hazards no interpreter can execute meaningfully.
+
+    This duplicates only the *certain* subset of the static analyzer
+    (:mod:`repro.core.plancheck`) — reads whose mod-``stages`` slot
+    arithmetic is guaranteed to alias a different row/plane, and local
+    reads with no preceding write (a ``KeyError`` inside the traced
+    kernel body otherwise).  The full analyzer additionally proves
+    halo coverage and warm-up validity; run ``scripts/plan_lint.py``
+    or ``compile_program(check_plans="error")`` for those."""
+    if not call.has_grid:
+        return
+    windows = {w.name: w for w in call.windows}
+    inputs = {f"in_{i.name}": i for i in call.inputs if not i.scalar}
+    produced_lead: dict[str, int] = {}
+    local_seen: set[str] = set()
+    for step in call.steps:
+        for rd in step.reads:
+            if rd.src.startswith("local:"):
+                if rd.src[6:] not in local_seen:
+                    raise ValueError(
+                        f"call {call.name}: step {step.op} reads "
+                        f"{rd.src} before any step writes it "
+                        f"(PlanCheck PC001)")
+                continue
+            lead = stages = None
+            ispec = inputs.get(rd.src)
+            if ispec is not None and not ispec.plane:
+                lead, stages = ispec.lead, ispec.stages
+            elif ispec is not None and rd.p_off != ispec.p_lead:
+                if not (ispec.p_lead - ispec.p_stages
+                        < rd.p_off <= ispec.p_lead):
+                    raise ValueError(
+                        f"call {call.name}: step {step.op} reads plane "
+                        f"p{rd.p_off:+d} of {rd.src}; the mod-slot "
+                        f"arithmetic aliases it outside "
+                        f"(p{ispec.p_lead - ispec.p_stages:+d}, "
+                        f"p{ispec.p_lead:+d}] (PlanCheck PC002/PC005)")
+            w = windows.get(rd.src)
+            if w is not None and not w.plane and rd.src in produced_lead:
+                lead, stages = produced_lead[rd.src], w.stages
+            if lead is not None and not (lead - stages < rd.j_off <= lead):
+                raise ValueError(
+                    f"call {call.name}: step {step.op} reads row "
+                    f"j{rd.j_off:+d} of {rd.src}; the mod-slot "
+                    f"arithmetic aliases it outside "
+                    f"(j{lead - stages:+d}, j{lead:+d}] "
+                    f"(PlanCheck PC002/PC005)")
+        for targets in step.writes:
+            for kind, tgt in targets:
+                if kind == "local":
+                    local_seen.add(str(tgt))
+                elif kind == "buf":
+                    produced_lead.setdefault(str(tgt), step.lead)
+
+
+# ---------------------------------------------------------------------------
+# The shared host half: size resolution, environment threading, output
+# assembly (the plan's trim/seat rules) — identical for every
+# interpreter because every build_call honors the same output contract.
+# ---------------------------------------------------------------------------
+
+def _run_host(call: CallPlan, hs, env: dict) -> None:
+    vals = call.fns[hs.fn_idx](*[env[n] for n in hs.reads])
+    if len(hs.writes) == 1:
+        vals = (vals,)
+    for name, val in zip(hs.writes, vals):
+        env[name] = val
+
+
+def _outer_trim(out: OutputPlan, call: CallPlan, n_outs: tuple[int, ...],
+                n_dims: int) -> tuple[slice, ...]:
+    """Slices dropping warm-up/drain tiles of the first ``n_dims`` outer
+    grid dims, keeping the output's canonical extent ``[lo, N_d + hi)``
+    (a producer running ``outer_lead`` tiles ahead wrote its blocks that
+    many tiles early)."""
+    o_lo = call.outer_lo
+    idx = []
+    for d in range(n_dims):
+        lead = out.outer_lead[d] if out.outer_lead else 0
+        s0 = out.outer_lo[d] - lead - o_lo[d]
+        cnt = n_outs[d] + out.outer_hi[d] - out.outer_lo[d]
+        idx.append(slice(s0, s0 + cnt))
+    return tuple(idx)
+
+
+def _outer_seat(out: OutputPlan, n_outs: tuple[int, ...],
+                n_dims: int) -> tuple[slice, ...]:
+    """Slices seating a trimmed value at its goal origin inside
+    full-size ``[0, N_d)`` outer dims."""
+    return tuple(
+        slice(out.outer_lo[d], n_outs[d] + out.outer_hi[d])
+        for d in range(n_dims)
+    )
+
+
+def _assemble(call: CallPlan, out: OutputPlan, padded, nj: int, ni: int,
+              n_outs: tuple[int, ...], dtype):
+    """Map one padded device output back to its environment array: trim
+    warm-up/drain rows and tiles, re-seat goal origins, lane-reduce
+    accumulators whose vector dim was folded."""
+    n_out = call.n_outer
+    reduce_fn = call.fns[out.reduce_idx] if out.reduce_idx is not None \
+        else None
+    if out.kind == "acc":
+        if out.n_kept:
+            # (*kept grid tiles, width): one combined row per kept tile
+            part = padded[_outer_trim(out, call, n_outs, out.n_kept)]
+            if reduce_fn is not None:
+                part = lane_reduce(reduce_fn,
+                                   jnp.moveaxis(part, -1, 0),
+                                   out.reduce_init)
+            kept_exact = all(
+                out.outer_lo[d] == 0 and out.outer_hi[d] == 0
+                for d in range(out.n_kept))
+            if kept_exact:
+                return part
+            shape = tuple(n_outs[:out.n_kept]) + part.shape[out.n_kept:]
+            seat = _outer_seat(out, n_outs, out.n_kept) \
+                + (slice(None),) * (part.ndim - out.n_kept)
+            return jnp.zeros(shape, dtype).at[seat].set(part)
+        row = padded[0]
+        if reduce_fn is not None:
+            return lane_reduce(reduce_fn, row, out.reduce_init)
+        return row
+    t0 = out.j_lo - (call.x_lo + out.lead)
+    nrows = nj + out.j_hi - out.j_lo
+    otrim = _outer_trim(out, call, n_outs, n_out)
+    if out.kind == "acc_rows":
+        # one identity-padded partial-accumulator row per grid step:
+        # trim, fold the lanes, seat at the goal origin
+        part = padded[otrim + (slice(t0, t0 + nrows), slice(None))]
+        vals = lane_reduce(reduce_fn, jnp.moveaxis(part, -1, 0),
+                           out.reduce_init)
+        res = jnp.zeros((*n_outs, nj), dtype)
+        return res.at[_outer_seat(out, n_outs, n_out)
+                      + (slice(out.j_lo, nj + out.j_hi),)].set(vals)
+    if out.kind == "external":
+        jlo, jhi = out.j_lo, nj + out.j_hi
+        res = jnp.zeros((*n_outs, nj, ni), dtype)
+        return res.at[_outer_seat(out, n_outs, n_out)
+                      + (slice(jlo, jhi), slice(None))].set(
+            padded[otrim + (slice(t0, t0 + nrows), slice(None))])
+    w = ni + out.i_hi - out.i_lo
+    return padded[otrim + (slice(t0, t0 + nrows),
+                           slice(out.i_lo, out.i_lo + w))]
+
+
+def execute_plan(kplan: KernelPlan, *, interpreter: str = "pallas",
+                 dtype=jnp.float32, interpret: bool = True,
+                 double_buffer: bool = False):
+    """Build the host callable executing a full :class:`KernelPlan` on
+    the named registered interpreter.
+
+    The returned function takes the program's external arrays as keyword
+    arguments and returns ``{store name: array}`` for every goal.  It
+    resolves runtime dim sizes through the plan's axiom shape contracts,
+    runs each :class:`CallPlan` (host prologue, the interpreter's
+    ``build_call``, output assembly, host epilogue) in order, and
+    threads intermediate arrays through the environment.  The capability
+    check runs here, so a plan outside the interpreter's declared
+    feature set raises :class:`PlanUnsupported` before anything builds.
+    ``interpret``/``double_buffer`` are forwarded to ``build_call``;
+    interpreters that don't honor a flag accept and ignore it."""
+    spec = get_interpreter(interpreter)
+    check_capabilities(spec, kplan)
+    dim_sym = dict(kplan.dim_sizes)
+    inner = kplan.loop_order[-1]
+    jdim = kplan.loop_order[-2]
+    outer_dims = kplan.loop_order[:-2]
+    input_names = sorted({ax.array for ax in kplan.axioms})
+
+    def fn(**arrays):
+        sizes: dict[str, int] = {}
+        for ax in kplan.axioms:
+            arr = arrays[ax.array]
+            ext = {d: (sym, lo, hi) for d, sym, lo, hi in ax.extents}
+            for axis, d in enumerate(ax.dims):
+                e = ext.get(d)
+                if e is not None and e[0] not in sizes:
+                    sizes[e[0]] = arr.shape[axis] - (e[2] - e[1])
+        nj = sizes[dim_sym[jdim]]
+        ni = sizes[dim_sym[inner]]
+        n_outs = tuple(sizes[dim_sym[d]] for d in outer_dims)
+        env: dict[str, jnp.ndarray] = {
+            name: arrays[name] for name in input_names
+        }
+        for cp in kplan.calls:
+            for hs in cp.host_pre:
+                _run_host(cp, hs, env)
+            if cp.has_grid:
+                pcall, _ = spec.build_call(cp, (*n_outs, nj, ni), dtype,
+                                           interpret=interpret,
+                                           double_buffer=double_buffer)
+                args = []
+                for ispec in cp.inputs:
+                    v = jnp.asarray(env[ispec.name], dtype)
+                    if ispec.scalar:
+                        v = v.reshape((1, 1))
+                    args.append(v)
+                padded = pcall(*args)
+                if not isinstance(padded, (list, tuple)):
+                    padded = [padded]
+                for out, pout in zip(cp.outputs, padded):
+                    env[out.name] = _assemble(cp, out, pout, nj, ni,
+                                              n_outs, dtype)
+            for hs in cp.host_post:
+                _run_host(cp, hs, env)
+        return {store: env[var] for store, var in kplan.goal_outputs}
+
+    return fn

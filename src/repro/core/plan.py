@@ -646,6 +646,32 @@ class CallPlan:
         )
 
 
+#: The feature-tag universe for per-interpreter capability validation
+#: (:meth:`KernelPlan.features` computes a plan's subset; an
+#: :class:`~repro.core.interpreters.InterpreterSpec` declares the
+#: subset it can execute).  A tag names one execution mechanism a plan
+#: may demand of its interpreter; a plan whose feature set is not
+#: contained in an interpreter's capability set raises
+#: :class:`~repro.core.interpreters.PlanUnsupported` instead of
+#: miscompiling.  Keep this in sync with ``KernelPlan.features`` and
+#: the capability table in docs/ARCHITECTURE.md.
+PLAN_FEATURES = frozenset({
+    "multi_call",               # > 1 stencil call (split schedule)
+    "host_steps",               # host prologue/epilogue steps
+    "scalar_inputs",            # (1, 1) scalar operands
+    "outer_grid",               # leading outer grid dims (n_outer >= 1)
+    "rolling_input_windows",    # streamed inputs with > 1 resident row
+    "plane_window_inputs",      # streamed multi-plane windows (u[k-1])
+    "rolling_windows",          # produced-var rolling row windows
+    "producer_plane_windows",   # produced-var plane windows
+    "acc_carried",              # whole-grid carried accumulators
+    "acc_kept_prefix",          # accumulators re-init per kept tile
+    "acc_rows",                 # row-kept partial-accumulator outputs
+    "lane_reduce",              # host-side lane fold of folded accs
+    "local_rows",               # same-step local row values
+})
+
+
 @dataclass(frozen=True)
 class KernelPlan:
     """A complete, declarative execution plan for one program on the
@@ -661,6 +687,44 @@ class KernelPlan:
     axioms: tuple[AxiomPlan, ...]
     goal_outputs: tuple[tuple[str, str], ...]
     calls: tuple[CallPlan, ...]
+
+    def features(self) -> frozenset:
+        """The subset of :data:`PLAN_FEATURES` this plan demands of an
+        interpreter — the plan side of the per-interpreter capability
+        check (:func:`repro.core.interpreters.check_capabilities`)."""
+        tags = set()
+        if len([c for c in self.calls if c.has_grid]) > 1:
+            tags.add("multi_call")
+        for c in self.calls:
+            if c.host_pre or c.host_post:
+                tags.add("host_steps")
+            if any(i.scalar for i in c.inputs):
+                tags.add("scalar_inputs")
+            if not c.has_grid:
+                continue
+            if c.n_outer:
+                tags.add("outer_grid")
+            for i in c.inputs:
+                if i.scalar:
+                    continue
+                if i.plane:
+                    tags.add("plane_window_inputs")
+                elif i.stages > 1:
+                    tags.add("rolling_input_windows")
+            for w in c.windows:
+                tags.add("producer_plane_windows" if w.plane
+                         else "rolling_windows")
+            for a in c.accs:
+                tags.add("acc_kept_prefix" if a.n_kept else "acc_carried")
+            for o in c.outputs:
+                if o.kind == "acc_rows":
+                    tags.add("acc_rows")
+                if o.reduce_idx is not None:
+                    tags.add("lane_reduce")
+            if any(kind == "local" for s in c.steps
+                   for targets in s.writes for kind, _ in targets):
+                tags.add("local_rows")
+        return frozenset(tags)
 
     def validate(self) -> "KernelPlan":
         """Re-run the restriction checks expressible over the finished

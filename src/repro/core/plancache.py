@@ -11,6 +11,11 @@ structural identity, so a fresh process compiles a known program
 without ever invoking the planner — the analysis pipeline
 (inference → dataflow → fusion → storage → plan) is skipped entirely
 and the stencil interpreter is built straight from the loaded IR.
+Entries are interpreter-agnostic: keys name the *program*, not a
+backend, so one warmed plan re-links into whichever registered plan
+interpreter (:mod:`repro.core.interpreters`) the loading process asks
+for — the engine keys its in-memory executor cache per interpreter on
+top of this shared L2.
 
 Design points:
 

@@ -55,6 +55,8 @@ PC005  error    lead/lag mismatch (reading data the stream or
                 producer has not yet made resident)
 PC006  error    output trim outside the device buffer
 PC007  warning  accumulator never combined or never emitted
+PC008  error    plan needs features outside the target interpreter's
+                declared capability set (registry mismatch)
 ====== ======== =====================================================
 
 Entry points: :func:`check_plan` (analyzer), :func:`check_call`
@@ -70,7 +72,7 @@ import os
 from dataclasses import dataclass
 from typing import Optional, Sequence
 
-from .plan import CallPlan, KernelPlan, OutputPlan, StepPlan, WindowPlan
+from .plan import CallPlan, KernelPlan, StepPlan, WindowPlan
 
 #: Default VMEM budget for PC003: ~16 MiB/core (TPU v4/v5 VMEM size).
 DEFAULT_VMEM_BUDGET = 16 * 1024 * 1024
@@ -844,8 +846,8 @@ def _check_vmem(kplan: KernelPlan, sizes: dict, dtype_bytes: int,
 
 def check_plan(kplan: KernelPlan, *, sizes: Optional[dict] = None,
                dtype_bytes: int = 4, double_buffer: bool = False,
-               budget: Optional[int] = None,
-               validate: bool = True) -> list[Diagnostic]:
+               budget: Optional[int] = None, validate: bool = True,
+               interpreter: Optional[str] = None) -> list[Diagnostic]:
     """Run every analysis over a :class:`KernelPlan` and return the
     diagnostics (empty list = hazard-free).
 
@@ -855,7 +857,14 @@ def check_plan(kplan: KernelPlan, *, sizes: Optional[dict] = None,
     on a malformed plan.  ``sizes`` (``{size symbol: int}``) enables
     the VMEM budget check (PC003) against ``budget`` /
     ``REPRO_VMEM_BUDGET_BYTES`` / :data:`DEFAULT_VMEM_BUDGET`; without
-    sizes the footprint is symbolic and PC003 is skipped."""
+    sizes the footprint is symbolic and PC003 is skipped.
+    ``interpreter`` names a registered plan interpreter
+    (:mod:`repro.core.interpreters`): the plan's feature set
+    (:meth:`KernelPlan.features`) is checked against that
+    interpreter's declared capabilities, and each missing feature
+    becomes a ``PC008`` error — the static-analysis twin of the typed
+    :class:`~repro.core.interpreters.PlanUnsupported` raised at build
+    time."""
     if validate:
         try:
             kplan.validate()
@@ -863,6 +872,14 @@ def check_plan(kplan: KernelPlan, *, sizes: Optional[dict] = None,
             return [Diagnostic("PC000", "error", kplan.program, "",
                                f"plan failed validation: {e}")]
     diags: list[Diagnostic] = []
+    if interpreter is not None:
+        from .interpreters import get_interpreter
+        spec = get_interpreter(interpreter)
+        for feat in sorted(kplan.features() - spec.capabilities):
+            diags.append(Diagnostic(
+                "PC008", "error", feat, "",
+                f"plan requires feature {feat!r} outside interpreter "
+                f"{spec.name!r} declared capabilities"))
     for call in kplan.calls:
         diags.extend(check_call(call))
     diags.extend(_check_dead_cross_call(kplan))

@@ -21,9 +21,9 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
-from .dataflow import DataflowDAG, Group, Var
+from .dataflow import Var
 from .fusion import FusedSchedule
-from .inest import Body, INest, Node, walk_bodies
+from .inest import Node, walk_bodies
 from .terms import Term
 
 

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from .dataflow import DataflowDAG, Group, build_dataflow
-from .infer import IDAG, LOAD, STORE, infer
+from .infer import IDAG, infer
 from .rules import Extent, Program
 from .terms import Term
 

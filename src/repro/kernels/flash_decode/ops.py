@@ -1,8 +1,6 @@
 """Decode-attention front door: pallas kernel or chunked-scan fallback."""
 from __future__ import annotations
 
-import jax.numpy as jnp
-
 from ..flash_attention.ops import chunked_attention
 from .kernel import flash_decode
 from .ref import dense_decode

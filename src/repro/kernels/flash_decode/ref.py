@@ -1,8 +1,6 @@
 """Oracle: dense decode attention over the cache with length masking."""
 from __future__ import annotations
 
-import jax.numpy as jnp
-
 from ..flash_attention.ref import dense_attention
 
 

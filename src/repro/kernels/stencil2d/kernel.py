@@ -76,8 +76,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from ...core.plan import CallPlan, KernelPlan, OutputPlan, WindowPlan
-from ...core.runtime import lane_reduce
+from ...core.interpreters import (InterpreterSpec, register_interpreter,
+                                  require_hazard_free, require_linked_fns)
+from ...core.plan import PLAN_FEATURES, CallPlan, KernelPlan, WindowPlan
 
 LANE = 128
 
@@ -89,62 +90,6 @@ def _pad_to_lane(w: int) -> int:
 def _mod(pos, stages: int):
     """Floor-mod robust to negative pipeline-priming positions."""
     return jax.lax.rem(jax.lax.rem(pos, stages) + stages, stages)
-
-
-def _require_hazard_free(call: CallPlan) -> None:
-    """Reject the hazards the interpreter cannot execute meaningfully.
-
-    This duplicates only the *certain* subset of the static analyzer
-    (:mod:`repro.core.plancheck`) — reads whose mod-``stages`` slot
-    arithmetic is guaranteed to alias a different row/plane, and local
-    reads with no preceding write (a ``KeyError`` inside the traced
-    kernel body otherwise).  The full analyzer additionally proves
-    halo coverage and warm-up validity; run ``scripts/plan_lint.py``
-    or ``compile_program(check_plans="error")`` for those."""
-    if not call.has_grid:
-        return
-    windows = {w.name: w for w in call.windows}
-    inputs = {f"in_{i.name}": i for i in call.inputs if not i.scalar}
-    produced_lead: dict[str, int] = {}
-    local_seen: set[str] = set()
-    for step in call.steps:
-        for rd in step.reads:
-            if rd.src.startswith("local:"):
-                if rd.src[6:] not in local_seen:
-                    raise ValueError(
-                        f"call {call.name}: step {step.op} reads "
-                        f"{rd.src} before any step writes it "
-                        f"(PlanCheck PC001)")
-                continue
-            lead = stages = None
-            ispec = inputs.get(rd.src)
-            if ispec is not None and not ispec.plane:
-                lead, stages = ispec.lead, ispec.stages
-            elif ispec is not None and rd.p_off != ispec.p_lead:
-                if not (ispec.p_lead - ispec.p_stages
-                        < rd.p_off <= ispec.p_lead):
-                    raise ValueError(
-                        f"call {call.name}: step {step.op} reads plane "
-                        f"p{rd.p_off:+d} of {rd.src}; the mod-slot "
-                        f"arithmetic aliases it outside "
-                        f"(p{ispec.p_lead - ispec.p_stages:+d}, "
-                        f"p{ispec.p_lead:+d}] (PlanCheck PC002/PC005)")
-            w = windows.get(rd.src)
-            if w is not None and not w.plane and rd.src in produced_lead:
-                lead, stages = produced_lead[rd.src], w.stages
-            if lead is not None and not (lead - stages < rd.j_off <= lead):
-                raise ValueError(
-                    f"call {call.name}: step {step.op} reads row "
-                    f"j{rd.j_off:+d} of {rd.src}; the mod-slot "
-                    f"arithmetic aliases it outside "
-                    f"(j{lead - stages:+d}, j{lead:+d}] "
-                    f"(PlanCheck PC002/PC005)")
-        for targets in step.writes:
-            for kind, tgt in targets:
-                if kind == "local":
-                    local_seen.add(str(tgt))
-                elif kind == "buf":
-                    produced_lead.setdefault(str(tgt), step.lead)
 
 
 def build_call(call: CallPlan, sizes: tuple[int, ...], dtype,
@@ -170,17 +115,8 @@ def build_call(call: CallPlan, sizes: tuple[int, ...], dtype,
         raise ValueError(
             f"call {call.name} has n_outer={n_out} but got sizes {sizes}"
         )
-    fn_refs = [s.fn_idx for s in call.steps]
-    fn_refs += [h.fn_idx for h in call.host_pre + call.host_post]
-    fn_refs += [o.reduce_idx for o in call.outputs
-                if o.reduce_idx is not None]
-    if fn_refs and max(fn_refs) >= len(call.fns):
-        raise ValueError(
-            f"call {call.name}: plan references fn index {max(fn_refs)} "
-            f"but the fn table has {len(call.fns)} entries — a "
-            f"deserialized plan must re-link its kernel callables "
-            f"(KernelPlan.from_dict / repro.core.plan.fn_from_spec)")
-    _require_hazard_free(call)
+    require_linked_fns(call)
+    require_hazard_free(call)
     *outer_sizes, nj, ni = sizes
     o_lo = call.outer_lo
     o_hi = call.outer_hi_off
@@ -542,150 +478,34 @@ def build_call(call: CallPlan, sizes: tuple[int, ...], dtype,
 
 
 # ---------------------------------------------------------------------------
-# Host half of the interpreter: size resolution, environment threading,
-# output assembly (the plan's trim/seat rules).
+# Host half + registration: size resolution, environment threading and
+# output assembly are the interpreter-agnostic host half shared through
+# the registry seam (repro.core.interpreters); this module contributes
+# only the Pallas build_call.
 # ---------------------------------------------------------------------------
-
-def _run_host(call: CallPlan, hs, env: dict) -> None:
-    vals = call.fns[hs.fn_idx](*[env[n] for n in hs.reads])
-    if len(hs.writes) == 1:
-        vals = (vals,)
-    for name, val in zip(hs.writes, vals):
-        env[name] = val
-
-
-def _outer_trim(out: OutputPlan, call: CallPlan, n_outs: tuple[int, ...],
-                n_dims: int) -> tuple[slice, ...]:
-    """Slices dropping warm-up/drain tiles of the first ``n_dims`` outer
-    grid dims, keeping the output's canonical extent ``[lo, N_d + hi)``
-    (a producer running ``outer_lead`` tiles ahead wrote its blocks that
-    many tiles early)."""
-    o_lo = call.outer_lo
-    idx = []
-    for d in range(n_dims):
-        lead = out.outer_lead[d] if out.outer_lead else 0
-        s0 = out.outer_lo[d] - lead - o_lo[d]
-        cnt = n_outs[d] + out.outer_hi[d] - out.outer_lo[d]
-        idx.append(slice(s0, s0 + cnt))
-    return tuple(idx)
-
-
-def _outer_seat(out: OutputPlan, n_outs: tuple[int, ...],
-                n_dims: int) -> tuple[slice, ...]:
-    """Slices seating a trimmed value at its goal origin inside
-    full-size ``[0, N_d)`` outer dims."""
-    return tuple(
-        slice(out.outer_lo[d], n_outs[d] + out.outer_hi[d])
-        for d in range(n_dims)
-    )
-
-
-def _assemble(call: CallPlan, out: OutputPlan, padded, nj: int, ni: int,
-              n_outs: tuple[int, ...], dtype):
-    """Map one padded device output back to its environment array: trim
-    warm-up/drain rows and tiles, re-seat goal origins, lane-reduce
-    accumulators whose vector dim was folded."""
-    n_out = call.n_outer
-    reduce_fn = call.fns[out.reduce_idx] if out.reduce_idx is not None \
-        else None
-    if out.kind == "acc":
-        if out.n_kept:
-            # (*kept grid tiles, width): one combined row per kept tile
-            part = padded[_outer_trim(out, call, n_outs, out.n_kept)]
-            if reduce_fn is not None:
-                part = lane_reduce(reduce_fn,
-                                   jnp.moveaxis(part, -1, 0),
-                                   out.reduce_init)
-            kept_exact = all(
-                out.outer_lo[d] == 0 and out.outer_hi[d] == 0
-                for d in range(out.n_kept))
-            if kept_exact:
-                return part
-            shape = tuple(n_outs[:out.n_kept]) + part.shape[out.n_kept:]
-            seat = _outer_seat(out, n_outs, out.n_kept) \
-                + (slice(None),) * (part.ndim - out.n_kept)
-            return jnp.zeros(shape, dtype).at[seat].set(part)
-        row = padded[0]
-        if reduce_fn is not None:
-            return lane_reduce(reduce_fn, row, out.reduce_init)
-        return row
-    t0 = out.j_lo - (call.x_lo + out.lead)
-    nrows = nj + out.j_hi - out.j_lo
-    otrim = _outer_trim(out, call, n_outs, n_out)
-    if out.kind == "acc_rows":
-        # one identity-padded partial-accumulator row per grid step:
-        # trim, fold the lanes, seat at the goal origin
-        part = padded[otrim + (slice(t0, t0 + nrows), slice(None))]
-        vals = lane_reduce(reduce_fn, jnp.moveaxis(part, -1, 0),
-                           out.reduce_init)
-        res = jnp.zeros((*n_outs, nj), dtype)
-        return res.at[_outer_seat(out, n_outs, n_out)
-                      + (slice(out.j_lo, nj + out.j_hi),)].set(vals)
-    if out.kind == "external":
-        jlo, jhi = out.j_lo, nj + out.j_hi
-        res = jnp.zeros((*n_outs, nj, ni), dtype)
-        return res.at[_outer_seat(out, n_outs, n_out)
-                      + (slice(jlo, jhi), slice(None))].set(
-            padded[otrim + (slice(t0, t0 + nrows), slice(None))])
-    w = ni + out.i_hi - out.i_lo
-    return padded[otrim + (slice(t0, t0 + nrows),
-                           slice(out.i_lo, out.i_lo + w))]
-
 
 def execute_plan(kplan: KernelPlan, *, dtype=jnp.float32,
                  interpret: bool = True, double_buffer: bool = False):
-    """Build the host callable executing a full :class:`KernelPlan`.
+    """Build the host callable executing a full :class:`KernelPlan` on
+    the Pallas stencil interpreter.
 
-    The returned function takes the program's external arrays as keyword
-    arguments and returns ``{store name: array}`` for every goal.  It
-    resolves runtime dim sizes through the plan's axiom shape contracts,
-    runs each :class:`CallPlan` (host prologue, stencil call, output
-    assembly, host epilogue) in order, and threads intermediate arrays
-    through the environment.  ``interpret=True`` runs kernel bodies on
-    CPU for validation; ``double_buffer=True`` selects the explicit
-    two-slot async-DMA input pipeline."""
-    dim_sym = dict(kplan.dim_sizes)
-    inner = kplan.loop_order[-1]
-    jdim = kplan.loop_order[-2]
-    outer_dims = kplan.loop_order[:-2]
-    input_names = sorted({ax.array for ax in kplan.axioms})
+    A thin wrapper over the shared host half
+    (:func:`repro.core.interpreters.execute_plan` with
+    ``interpreter="pallas"``): the returned function takes the
+    program's external arrays as keyword arguments and returns
+    ``{store name: array}`` for every goal.  ``interpret=True`` runs
+    kernel bodies on CPU for validation; ``double_buffer=True`` selects
+    the explicit two-slot async-DMA input pipeline."""
+    from ...core.interpreters import execute_plan as _execute_plan
+    return _execute_plan(kplan, interpreter="pallas", dtype=dtype,
+                         interpret=interpret, double_buffer=double_buffer)
 
-    def fn(**arrays):
-        sizes: dict[str, int] = {}
-        for ax in kplan.axioms:
-            arr = arrays[ax.array]
-            ext = {d: (sym, lo, hi) for d, sym, lo, hi in ax.extents}
-            for axis, d in enumerate(ax.dims):
-                e = ext.get(d)
-                if e is not None and e[0] not in sizes:
-                    sizes[e[0]] = arr.shape[axis] - (e[2] - e[1])
-        nj = sizes[dim_sym[jdim]]
-        ni = sizes[dim_sym[inner]]
-        n_outs = tuple(sizes[dim_sym[d]] for d in outer_dims)
-        env: dict[str, jnp.ndarray] = {
-            name: arrays[name] for name in input_names
-        }
-        for cp in kplan.calls:
-            for hs in cp.host_pre:
-                _run_host(cp, hs, env)
-            if cp.has_grid:
-                pcall, _ = build_call(cp, (*n_outs, nj, ni), dtype,
-                                      interpret=interpret,
-                                      double_buffer=double_buffer)
-                args = []
-                for ispec in cp.inputs:
-                    v = jnp.asarray(env[ispec.name], dtype)
-                    if ispec.scalar:
-                        v = v.reshape((1, 1))
-                    args.append(v)
-                padded = pcall(*args)
-                if not isinstance(padded, (list, tuple)):
-                    padded = [padded]
-                for out, pout in zip(cp.outputs, padded):
-                    env[out.name] = _assemble(cp, out, pout, nj, ni,
-                                              n_outs, dtype)
-            for hs in cp.host_post:
-                _run_host(cp, hs, env)
-        return {store: env[var] for store, var in kplan.goal_outputs}
 
-    return fn
+register_interpreter(InterpreterSpec(
+    name="pallas",
+    build_call=build_call,
+    capabilities=PLAN_FEATURES,
+    flags=frozenset({"interpret", "double_buffer"}),
+    description="Pallas TPU stencil interpreter (VMEM windows, "
+                "BlockSpec or double-buffered DMA row streaming)",
+))

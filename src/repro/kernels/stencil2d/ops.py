@@ -1,7 +1,6 @@
 """Jitted wrapper for the fused stencil executor."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 

@@ -3,11 +3,13 @@
 
 * fusion + contraction is semantics-preserving on the JAX backend
   (hypothesis, skipped when hypothesis is absent);
-* **differential fuzzing** across every execution path — the Pallas
-  stencil interpreter (interpret mode), the fused JAX backend, and the
-  unfused reference must agree on the same random program.  Failures
-  shrink structurally (drop one stencil offset at a time) and report
-  the minimal failing chain descriptor as a copy-pasteable dump.
+* **N-way differential fuzzing** across every execution path — every
+  interpreter in the plan-interpreter registry (Pallas-interpret, the
+  pure-JAX plan interpreter, any future registration), the fused JAX
+  emitter, and the unfused reference must agree on the same random
+  program.  Failures shrink structurally (drop one stencil offset at a
+  time) and report the minimal failing chain descriptor as a
+  copy-pasteable dump tagged with the disagreeing pair.
 """
 import json
 
@@ -17,6 +19,7 @@ import pytest
 
 from _progen import build_chain_program, random_chain, shrink_chain
 from repro.core import compile_program
+from repro.core.interpreters import registered_interpreters
 from repro.core.plancheck import check_plan, has_errors
 from repro.core.unfused import build_unfused
 
@@ -66,35 +69,45 @@ if HAVE_HYPOTHESIS:
 
 
 # ---------------------------------------------------------------------------
-# Differential fuzzing: Pallas-interpret vs JAX vs unfused reference
+# N-way differential fuzzing: every registered interpreter vs the fused
+# JAX emitter vs the unfused reference
 # ---------------------------------------------------------------------------
 
 def _chain_disagreement(desc, shape=(9, 14)) -> str:
-    """Run one chain on all three execution paths; return '' when they
-    agree (and the plan lints clean), else a short tag naming the first
-    disagreeing pair.
+    """Run one chain on every execution path — the unfused reference,
+    the fused JAX emitter, and each interpreter in the registry —
+    return '' when all agree (and the plan lints clean), else a short
+    tag naming the first disagreeing pair.
 
-    The static analyzer rides along as a fourth oracle: a chain whose
-    three execution paths agree is *known correct*, so any
-    error-severity PlanCheck finding on its plan is an analyzer false
-    positive — the fuzzer cross-validates analyzer verdicts against
-    ground-truth execution."""
+    The static analyzer rides along as one more oracle: a chain whose
+    execution paths all agree is *known correct*, so any error-severity
+    PlanCheck finding on its plan is an analyzer false positive — the
+    fuzzer cross-validates analyzer verdicts against ground-truth
+    execution.  With the two built-in interpreters that is at least
+    four oracles per chain (unfused, jax emitter, pallas, interp_jax)
+    plus the analyzer."""
     prog = build_chain_program(desc, name=f"fuzz_{desc['seed']}")
     rng = np.random.default_rng(desc["seed"])
     u = jnp.asarray(rng.standard_normal(shape), jnp.float32)
     ref = np.asarray(build_unfused(prog).fn(u=u)["out"])
     jx = np.asarray(
         compile_program(prog, backend="jax", use_cache=False).fn(u)["out"])
-    gen_pl = compile_program(prog, backend="pallas", interpret=True,
-                             use_cache=False)
-    pl = np.asarray(gen_pl.fn(u=u)["out"])
     if not np.allclose(jx, ref, atol=1e-4, rtol=1e-3):
         return "jax-vs-unfused"
-    if not np.allclose(pl, ref, atol=1e-4, rtol=1e-3):
-        return "pallas-vs-unfused"
-    if not np.allclose(pl, jx, atol=1e-4, rtol=1e-3):
-        return "pallas-vs-jax"
-    if has_errors(check_plan(gen_pl.kernel_plan)):
+    results = {"jax": jx}
+    kernel_plan = None
+    for name in registered_interpreters():
+        gen = compile_program(prog, backend=name, interpret=True,
+                              use_cache=False)
+        kernel_plan = gen.kernel_plan
+        got = np.asarray(gen.fn(u=u)["out"])
+        if not np.allclose(got, ref, atol=1e-4, rtol=1e-3):
+            return f"{name}-vs-unfused"
+        for other, val in results.items():
+            if not np.allclose(got, val, atol=1e-4, rtol=1e-3):
+                return f"{name}-vs-{other}"
+        results[name] = got
+    if has_errors(check_plan(kernel_plan)):
         return "plancheck-false-positive"
     return ""
 

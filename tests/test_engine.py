@@ -331,6 +331,65 @@ def test_plan_cache_lru_eviction():
         clear_compile_cache()
 
 
+def test_plan_cache_isolated_per_interpreter():
+    """Two interpreters compiling the SAME program must never collide in
+    the plan-level cache: the key carries the interpreter name, so each
+    gets its own executor artifact tagged with its own name."""
+    from repro.core import clear_compile_cache, compile_program
+    from repro.core import engine
+    from repro.core.engine import plan_cache_size
+
+    prog = _plan_cache_prog(2.0, "iso_interp")
+    clear_compile_cache()
+    try:
+        gp = compile_program(prog, backend="pallas")
+        gj = compile_program(prog, backend="interp_jax")
+        assert plan_cache_size() == 2
+        assert gp is not gj
+        assert gp.interpreter == "pallas"
+        assert gj.interpreter == "interp_jax"
+        # each backend hits its OWN entry, not the other's
+        engine._CACHE.clear()  # bypass the signature-level L1
+        assert compile_program(prog, backend="pallas") is gp
+        assert compile_program(prog, backend="interp_jax") is gj
+        # flags an interpreter does not honor are normalized out of its
+        # key: a pure-JAX compile with double_buffer=True is the same
+        # cache entry, while pallas (which honors the flag) is not
+        engine._CACHE.clear()
+        assert compile_program(prog, backend="interp_jax",
+                               double_buffer=True) is gj
+        assert compile_program(prog, backend="pallas",
+                               double_buffer=True) is not gp
+    finally:
+        clear_compile_cache()
+
+
+def test_plan_cache_lru_evicts_across_interpreters():
+    """LRU eviction treats per-interpreter entries as ordinary
+    citizens: filling the cap with a second interpreter's entries
+    evicts the first interpreter's stale ones, and a re-compile then
+    yields a fresh artifact."""
+    from repro.core import (clear_compile_cache, compile_program,
+                            set_plan_cache_cap)
+    from repro.core import engine
+
+    prog = _plan_cache_prog(3.0, "lru_interp")
+    clear_compile_cache()
+    old = set_plan_cache_cap(2)
+    try:
+        gp = compile_program(prog, backend="pallas")
+        gj = compile_program(prog, backend="interp_jax")
+        # pallas is now the LRU victim: one more distinct entry (a new
+        # pallas flag combination) evicts it
+        compile_program(prog, backend="pallas", double_buffer=True)
+        engine._CACHE.clear()
+        assert compile_program(prog, backend="interp_jax") is gj
+        assert compile_program(prog, backend="pallas") is not gp
+    finally:
+        set_plan_cache_cap(old)
+        clear_compile_cache()
+
+
 def test_plan_cache_cap_validation():
     """A cap below 1 is rejected; the setter returns the previous cap."""
     import pytest as _pytest

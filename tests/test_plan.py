@@ -8,12 +8,15 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _interp_utils import arrays_for
 from repro.core import (KernelPlan, clear_compile_cache, compile_program,
                         plan_pallas)
 from repro.core.dataflow import build_dataflow
 from repro.core.engine import plan_cache_size
 from repro.core.fusion import fuse_inest_dag
 from repro.core.infer import infer
+from repro.core.interpreters import execute_plan as registry_execute_plan
+from repro.core.interpreters import registered_interpreters
 from repro.core.plan import (CallPlan, GridDim, InputPlan, OutputPlan,
                              PallasUnsupported, ReadPlan, StepPlan)
 from repro.core.programs import (ALL_PROGRAMS, heat3d_program,
@@ -21,6 +24,7 @@ from repro.core.programs import (ALL_PROGRAMS, heat3d_program,
                                  normalization_program)
 from repro.core.reuse import analyze_storage
 from repro.core.rules import Program, axiom, goal, kernel
+from repro.core.unfused import build_unfused
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 
@@ -97,6 +101,25 @@ def test_golden_plan_corpus(name):
     restored = KernelPlan.from_dict(want).validate()
     assert restored == kplan
     assert restored.cache_key() == kplan.cache_key()
+
+
+@pytest.mark.parametrize("interp", registered_interpreters())
+@pytest.mark.parametrize("name", sorted(ALL_PROGRAMS))
+def test_golden_corpus_executes_on_every_interpreter(name, interp):
+    """The checked-in serialized corpus is executable on every
+    registered plan interpreter and agrees with the unfused reference —
+    the goldens pin not just the planner's output but the portability
+    of the IR across executors."""
+    kplan = KernelPlan.from_dict(
+        json.loads((GOLDEN_DIR / f"{name}.json").read_text()))
+    rng = np.random.default_rng(11)
+    arrs = arrays_for(kplan, rng)
+    got = registry_execute_plan(kplan, interpreter=interp)(**arrs)
+    ref = build_unfused(ALL_PROGRAMS[name]()).fn(**arrs)
+    for k in ref:
+        np.testing.assert_allclose(
+            np.asarray(got[k]), np.asarray(ref[k]), atol=2e-4, rtol=1e-3,
+            err_msg=f"{interp}/{name}:{k}")
 
 
 def test_plan_is_serializable():

@@ -223,7 +223,8 @@ def _hazard_plan() -> KernelPlan:
 
 def test_emit_plan_error_mode_rejects_hazard():
     with pytest.raises(PlanCheckError) as ei:
-        _emit_plan(_hazard_plan(), None, dtype=jnp.float32, interpret=True,
+        _emit_plan(_hazard_plan(), None, interpreter="pallas",
+                   dtype=jnp.float32, interpret=True,
                    double_buffer=False, use_cache=False, check="error")
     assert any(d.code == "PC005" for d in ei.value.diagnostics)
 
@@ -234,7 +235,8 @@ def test_emit_plan_warn_mode_warns_then_off_is_silent():
     # either outcome after the warning is recorded)
     with pytest.warns(PlanCheckWarning, match="PC005"):
         try:
-            _emit_plan(_hazard_plan(), None, dtype=jnp.float32,
+            _emit_plan(_hazard_plan(), None, interpreter="pallas",
+                       dtype=jnp.float32,
                        interpret=True, double_buffer=False,
                        use_cache=False, check="warn")
         except ValueError:
@@ -243,7 +245,8 @@ def test_emit_plan_warn_mode_warns_then_off_is_silent():
     with warnings.catch_warnings():
         warnings.simplefilter("error", PlanCheckWarning)
         try:
-            _emit_plan(_hazard_plan(), None, dtype=jnp.float32,
+            _emit_plan(_hazard_plan(), None, interpreter="pallas",
+                       dtype=jnp.float32,
                        interpret=True, double_buffer=False,
                        use_cache=False, check="off")
         except ValueError:
@@ -308,6 +311,30 @@ def _run_lint(*args):
 
 
 @pytest.mark.slow
+def test_pc008_interpreter_capability_mismatch():
+    """check_plan(interpreter=...) is the static twin of the registry's
+    build-time capability gate: each plan feature outside the target
+    interpreter's declared set becomes one PC008 error."""
+    from repro.core.interpreters import (InterpreterSpec,
+                                         register_interpreter,
+                                         unregister_interpreter)
+
+    kp = load_golden("heat3d")
+    # both built-ins declare full capabilities: no PC008
+    assert "PC008" not in codes(kp, interpreter="pallas")
+    assert "PC008" not in codes(kp, interpreter="interp_jax")
+    register_interpreter(InterpreterSpec(
+        name="_pc008_tiny", build_call=lambda *a, **k: None,
+        capabilities=frozenset(), flags=frozenset()))
+    try:
+        diags = [d for d in check_plan(kp, interpreter="_pc008_tiny")
+                 if d.code == "PC008"]
+        assert diags and all(d.severity == "error" for d in diags)
+        assert {d.var for d in diags} == kp.features()
+    finally:
+        unregister_interpreter("_pc008_tiny")
+
+
 def test_cli_goldens_exit_zero():
     res = _run_lint(str(GOLDEN_DIR), "-q")
     assert res.returncode == 0, res.stdout + res.stderr
