@@ -41,6 +41,13 @@ warm-cache compiles (the serialized plan loaded from disk, analysis
 skipped entirely) for the laplace5 and heat3d programs — the
 "decide ahead of time, replay cheaply" claim in wall-clock form.
 
+Every Pallas leg also records the vectorization analyzer's summary
+(:func:`repro.core.vecscan.scan_plan` at the leg's concrete shape —
+predicted redundant-load ratio, lane occupancy, modeled bytes moved
+vs needed) beside the measured wall time, so the static model's
+predictions can be compared against reality PR over PR
+(``scripts/bench_trend.py`` prints that trajectory).
+
 Off-TPU the legs run in interpret mode on bounded sizes (the grid
 unrolls at trace time); pass ``interpret=False`` on a TPU runtime for
 real timings, and feed measured split-schedule wins back into
@@ -65,7 +72,7 @@ import time
 import jax
 import numpy as np
 
-from repro.core import (clear_compile_cache, compile_program,
+from repro.core import (clear_compile_cache, compile_program, scan_plan,
                         sizes_from_arrays, vmem_bytes)
 from repro.core.codegen_jax import CodegenError
 from repro.core.programs import (cosmo_program, energy3d_program,
@@ -124,15 +131,20 @@ def run(interpret: bool = True):
         # the static analyzer's resident-VMEM estimate for this leg's
         # concrete shape (peak across nests; mirrors build_call scratch)
         kplan = gen.kernel_plan
-        vmem = vmem_bytes(kplan, sizes_from_arrays(kplan, {"u": shape}),
-                          dtype_bytes=4, double_buffer=dbuf)
+        sizes = sizes_from_arrays(kplan, {"u": shape})
+        vmem = vmem_bytes(kplan, sizes, dtype_bytes=4, double_buffer=dbuf)
+        # the vectorization analyzer's prediction for the same concrete
+        # shape, recorded beside the measured wall time so the model
+        # can be judged against reality PR over PR
+        vsum = scan_plan(kplan, sizes=sizes).summary()
         rows.append({
             "name": f"lifted_{name}_{'x'.join(map(str, shape))}",
             "us_per_call": t_p * 1e6,
             "derived": (
                 f"backend=pallas;interpret={interpret};"
                 f"double_buffer={dbuf};{base}"
-                f"Mcells_s={cells / t_p / 1e6:.0f};vmem_B={vmem}"
+                f"Mcells_s={cells / t_p / 1e6:.0f};vmem_B={vmem};"
+                f"vec_ratio={vsum['vec_redundant_load_ratio']:.2f}"
             ),
             # structured fields for the --json trajectory record
             "backend": "pallas",
@@ -141,6 +153,7 @@ def run(interpret: bool = True):
             "jax_us_per_call": jax_us,
             "mcells_per_s": cells / t_p / 1e6,
             "vmem_bytes": vmem,
+            **vsum,
         })
     return rows
 
@@ -164,6 +177,7 @@ def run_interpreters(interpret: bool = True):
     for case, build, arg, out, shape in INTERP_CASES:
         prog = build()
         u = mk(rng, shape)
+        cells = int(np.prod(shape))
         ref = build_unfused(prog).fn(**{arg: u})[out]
         gen_e = compile_program(prog, backend="jax")
         emit_fn = jax.jit(lambda u, _g=gen_e: _g.fn(u)[out])
@@ -173,6 +187,7 @@ def run_interpreters(interpret: bool = True):
         legs.append({"name": f"interp_{case}_jax_emitter",
                      "interpreter": "jax_emitter",
                      "us_per_call": t_e * 1e6,
+                     "mcells_per_s": cells / t_e / 1e6,
                      "vs_jax_emitter": 1.0})
         for name in registered_interpreters():
             gen = compile_program(prog, backend=name, interpret=interpret)
@@ -180,10 +195,16 @@ def run_interpreters(interpret: bool = True):
             t, got = time_fn(fn, u)
             assert np.allclose(np.asarray(got), np.asarray(ref),
                                atol=1e-4, rtol=1e-4), f"{case}/{name}"
+            kplan = gen.kernel_plan
+            vsum = scan_plan(
+                kplan, sizes=sizes_from_arrays(kplan, {arg: shape})
+            ).summary()
             legs.append({"name": f"interp_{case}_{name}",
                          "interpreter": name,
                          "us_per_call": t * 1e6,
-                         "vs_jax_emitter": t / t_e})
+                         "mcells_per_s": cells / t / 1e6,
+                         "vs_jax_emitter": t / t_e,
+                         **vsum})
     return legs
 
 
@@ -239,7 +260,11 @@ def main(argv=None) -> None:
         legs = [{k: r[k] for k in ("name", "us_per_call", "backend",
                                    "interpret", "double_buffer",
                                    "jax_us_per_call", "mcells_per_s",
-                                   "vmem_bytes")}
+                                   "vmem_bytes",
+                                   "vec_redundant_load_ratio",
+                                   "vec_lane_occupancy",
+                                   "vec_bytes_moved", "vec_bytes_needed",
+                                   "vec_classes", "vec_diagnostics")}
                 for r in rows]
         # environment stamp: perf numbers are only comparable across
         # PRs when the runtime that produced them is auditable
@@ -261,6 +286,7 @@ def main(argv=None) -> None:
     for leg in interp_legs:
         print(f"{leg['name']},{leg['us_per_call']:.1f},"
               f"interpreter={leg['interpreter']};"
+              f"Mcells_s={leg['mcells_per_s']:.0f};"
               f"vs_jax_emitter={leg['vs_jax_emitter']:.2f}x")
     for leg in cache_legs:
         print(f"{leg['name']},cold_plan_ms={leg['cold_plan_ms']:.2f},"

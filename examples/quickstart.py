@@ -19,7 +19,9 @@ def plan_dump(prog):
     interpreter — `explain(prog, verbose=True)` appends it after the
     schedule and storage plan.  Doctested so the plan rendering (grid
     ranges, streaming windows, per-step reads at their leads, output
-    trim rules) cannot silently rot:
+    trim rules) and the vectorization analysis (access classes, the
+    redundant-load ratio of the overlapping 5-point reads, PV
+    diagnostics, layout hints) cannot silently rot:
 
     >>> from repro.core.programs import laplace5_program
     >>> print(plan_dump(laplace5_program()))
@@ -34,6 +36,24 @@ in_cell[j+1], in_cell[j+0], in_cell[j+0]] -> out:0
     --- vmem estimate ---
       laplace5_n0:
         in_cell: 3 x pad(Ni+0) x 4B
+    --- vectorization ---
+      access classes: aligned=2 shifted=4
+      redundant-load ratio: 1.67
+      window in_cell [laplace5_n0]: reuse 3/3 rows
+      PV002 warning [laplace5_n0] in_cell: step laplace5 row j-1: no \
+read of this group is lane-aligned (origins [1]) — every load crosses \
+lanes
+      PV002 warning [laplace5_n0] in_cell: step laplace5 row j+1: no \
+read of this group is lane-aligned (origins [1]) — every load crosses \
+lanes
+      PV005 warning [laplace5_n0] laplace5: 5 contiguous reads over 3 \
+resident row(s): overlapping shifted loads move 1.67x the unique \
+elements
+      hint realign_origin [laplace5_n0] in_cell: re-origin the \
+resident window so the group gains an aligned anchor load
+      hint shift_reuse [laplace5_n0] in_cell: replace overlapping \
+loads of one resident row with one widened load plus in-register \
+shifts
     """
     report = explain(prog, verbose=True)
     return report.split("--- kernel plan ---\n", 1)[1]

@@ -1,0 +1,141 @@
+#!/usr/bin/env python
+"""Print the cross-PR benchmark trajectory from ``BENCH_<pr>.json``.
+
+Every PR's ``scripts/bench.sh`` run leaves a ``BENCH_<pr>.json`` record
+at the repo root (the ``benchmarks.lifted --json`` output).  This tool
+lines those records up into one table per suite section so the
+trajectory — wall time per leg, throughput, interpreter overhead,
+plan-cache speedup, and (from PR 8 on) the vectorization analyzer's
+predicted redundant-load ratio — is readable at a glance::
+
+    python scripts/bench_trend.py                # all BENCH_*.json
+    python scripts/bench_trend.py BENCH_6.json BENCH_8.json
+    python scripts/bench_trend.py --metric mcells_per_s
+
+Cells print ``-`` where a record predates the leg or the field.  The
+``vec`` column comes from the newest record carrying the analyzer's
+summary, so model predictions sit beside every measured trend row.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def discover() -> list[pathlib.Path]:
+    """All ``BENCH_<n>.json`` at the repo root, ordered by PR number."""
+    found = []
+    for p in ROOT.glob("BENCH_*.json"):
+        m = re.fullmatch(r"BENCH_(\d+)\.json", p.name)
+        if m:
+            found.append((int(m.group(1)), p))
+    return [p for _, p in sorted(found)]
+
+
+def load(paths) -> list[tuple[str, dict]]:
+    records = []
+    for p in paths:
+        p = pathlib.Path(p)
+        label = re.sub(r"^BENCH_(\d+)\.json$", r"PR\1", p.name)
+        records.append((label, json.loads(p.read_text())))
+    return records
+
+
+def _fmt(val, nd=1):
+    if val is None:
+        return "-"
+    if isinstance(val, float):
+        return f"{val:.{nd}f}"
+    return str(val)
+
+
+def _table(title, rows, headers):
+    """Render one aligned text table (headers + rows of strings)."""
+    widths = [max(len(h), *(len(r[i]) for r in rows)) if rows else len(h)
+              for i, h in enumerate(headers)]
+    print(f"== {title} ==")
+    print("  " + "  ".join(h.ljust(w) for h, w in zip(headers, widths)))
+    for r in rows:
+        print("  " + "  ".join(c.rjust(w) if i else c.ljust(w)
+                               for i, (c, w) in enumerate(zip(r, widths))))
+    print()
+
+
+def _leg_names(records, section):
+    """Union of leg names across records, in order of first appearance."""
+    names: list[str] = []
+    for _, rec in records:
+        for leg in rec.get(section, ()):
+            if leg["name"] not in names:
+                names.append(leg["name"])
+    return names
+
+
+def _cell(rec, section, name, metric, nd):
+    by_name = {leg["name"]: leg for leg in rec.get(section, ())}
+    leg = by_name.get(name)
+    return _fmt(leg.get(metric) if leg else None, nd)
+
+
+def trend(records, section, metric, nd=1, extra=None):
+    """Rows: one per leg, one metric column per record.
+
+    ``extra`` is an optional ``(header, field, nd)`` trailing column
+    filled from the newest record that carries the field."""
+    names = _leg_names(records, section)
+    if not names:
+        return
+    headers = ["leg"] + [label for label, _ in records]
+    rows = []
+    for name in names:
+        row = [name] + [_cell(rec, section, name, metric, nd)
+                        for _, rec in records]
+        if extra:
+            xh, field, xnd = extra
+            val = None
+            for _, rec in reversed(records):
+                leg = {g["name"]: g for g in rec.get(section, ())}.get(name)
+                if leg and leg.get(field) is not None:
+                    val = leg[field]
+                    break
+            row.append(_fmt(val, xnd))
+        rows.append(row)
+    if extra:
+        headers.append(extra[0])
+    _table(f"{section}: {metric}", rows, headers)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Cross-PR benchmark trajectory from BENCH_<pr>.json "
+                    "records.")
+    ap.add_argument("records", nargs="*",
+                    help="BENCH_<pr>.json files (default: every one at "
+                         "the repo root, ordered by PR number)")
+    ap.add_argument("--metric", default="us_per_call",
+                    choices=("us_per_call", "mcells_per_s"),
+                    help="which lifted-leg metric to tabulate "
+                         "(default: us_per_call)")
+    args = ap.parse_args(argv)
+
+    paths = args.records or discover()
+    if not paths:
+        print("bench_trend: no BENCH_<pr>.json records found",
+              file=sys.stderr)
+        return 1
+    records = load(paths)
+
+    trend(records, "legs", args.metric, nd=1,
+          extra=("vec_ratio", "vec_redundant_load_ratio", 2))
+    trend(records, "interpreters", "us_per_call", nd=1)
+    trend(records, "plan_cache", "speedup", nd=1)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -26,6 +26,11 @@
 #      every table row must name a registered interpreter — new
 #      registrations cannot land undocumented, and stale rows cannot
 #      outlive their interpreter.
+#   7. every PV<nnn> diagnostic code emitted in repro.core.vecscan
+#      must have a row in the docs/ARCHITECTURE.md vectorization
+#      table, and every table row must correspond to a code the
+#      analyzer can actually emit — same bidirectional contract as
+#      the PC table (guard 5).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -168,6 +173,20 @@ for code in sorted(documented - emitted):
     failures.append(f"docs/ARCHITECTURE.md: diagnostic {code} is documented "
                     f"but {pc_path} never emits it")
 
+# ---- 5b. vecscan PV codes <-> ARCHITECTURE.md vectorization table ---------
+pv_path = pathlib.Path("src/repro/core/vecscan.py")
+pv_emitted = set(re.findall(r"(PV\d{3})", pv_path.read_text()))
+pv_documented = set(re.findall(r"^\|\s*`?(PV\d{3})`?\s*\|", arch, re.M))
+if not pv_documented:
+    failures.append("docs/ARCHITECTURE.md: vectorization diagnostic table "
+                    "missing (no | PVnnn | rows found)")
+for code in sorted(pv_emitted - pv_documented):
+    failures.append(f"{pv_path}: diagnostic {code} is emitted but has no "
+                    f"row in the docs/ARCHITECTURE.md vectorization table")
+for code in sorted(pv_documented - pv_emitted):
+    failures.append(f"docs/ARCHITECTURE.md: diagnostic {code} is documented "
+                    f"but {pv_path} never emits it")
+
 # ---- 6. interpreter registry <-> BACKENDS.md registry table ---------------
 from repro.core.interpreters import registered_interpreters
 
@@ -193,5 +212,6 @@ if failures:
     sys.exit(1)
 print("check_docs: OK (engine docstrings + docs/*.md code blocks + "
       "PallasUnsupported restriction table + plan-IR docstrings + "
-      "PlanCheck diagnostic table + interpreter-registry table)")
+      "PlanCheck diagnostic table + VecScan diagnostic table + "
+      "interpreter-registry table)")
 PY

@@ -7,7 +7,11 @@
 #      image may not carry requirements-dev.txt);
 #   2. scripts/plan_lint.py over the golden-plan corpus — every
 #      checked-in plan must pass the KernelPlan static analyzer
-#      (repro.core.plancheck) with zero error-severity findings.
+#      (repro.core.plancheck) with zero error-severity findings;
+#   3. the same corpus through `plan_lint.py --vec --format json`
+#      (plancheck + the repro.core.vecscan vectorization analyzer),
+#      gated on error-severity regressions against the checked-in
+#      baseline tests/goldens/vec_lint_baseline.json.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -19,3 +23,34 @@ fi
 
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python scripts/plan_lint.py tests/goldens/plans -q
+
+vec_json="$(mktemp)"
+trap 'rm -f "$vec_json"' EXIT
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python scripts/plan_lint.py tests/goldens/plans --vec --format json \
+    > "$vec_json"
+python - "$vec_json" <<'PY'
+import json, pathlib, sys
+
+baseline = json.loads(pathlib.Path(
+    "tests/goldens/vec_lint_baseline.json").read_text())["errors"]
+bad = []
+seen = set()
+for line in pathlib.Path(sys.argv[1]).read_text().splitlines():
+    r = json.loads(line)
+    name = pathlib.Path(r["target"]).name
+    seen.add(name)
+    if r["errors"] > baseline.get(name, 0):
+        bad.append(f"{name}: {r['errors']} error(s) vs baseline "
+                   f"{baseline.get(name, 0)}")
+missing = sorted(set(baseline) - seen)
+if missing:
+    bad.append(f"baseline plans never linted: {', '.join(missing)}")
+if bad:
+    print("lint.sh: vec-lint regression against "
+          "tests/goldens/vec_lint_baseline.json:")
+    for b in bad:
+        print(f"  {b}")
+    sys.exit(1)
+print(f"vec lint: {len(seen)} golden plan(s), no error regression")
+PY

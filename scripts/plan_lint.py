@@ -1,5 +1,5 @@
 #!/usr/bin/env python
-"""Lint KernelPlans with the static analyzer (repro.core.plancheck).
+"""Lint KernelPlans with the static analyzers (plancheck + vecscan).
 
 Targets — freely mixed, any number of them::
 
@@ -19,13 +19,20 @@ Targets — freely mixed, any number of them::
 
 A file that fails to load or validate is reported as ``PC000``.  With
 ``--sizes Nj=64,Ni=512`` the VMEM budget check (PC003) runs against
-``--vmem-budget`` / ``REPRO_VMEM_BUDGET_BYTES``.  Exit status is
-non-zero iff any target carries an **error**-severity finding
-(warnings alone exit 0; add ``--strict`` to fail on those too).
+``--vmem-budget`` / ``REPRO_VMEM_BUDGET_BYTES``.  ``--vec``
+additionally runs the vectorization analyzer
+(:mod:`repro.core.vecscan`) and merges its ``PV`` diagnostics in.
+``--format json`` emits one JSON object per analyzed plan (a JSON
+line: target, diagnostics, and — under ``--vec`` — the
+vector-efficiency summary) for CI and the autotuner to consume
+without scraping text.  Exit status is non-zero iff any target
+carries an **error**-severity finding (warnings alone exit 0; add
+``--strict`` to fail on those too) — identical in both formats.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import pathlib
 import sys
@@ -48,36 +55,51 @@ def load_plan_file(path: pathlib.Path) -> KernelPlan:
     return KernelPlan.from_dict(payload)
 
 
-def lint_target(target: str, sizes,
-                budget=None) -> tuple[str, list[Diagnostic]]:
-    """Resolve one CLI target to ``(label, diagnostics)``."""
+def _resolve_plan(target: str):
+    """One CLI target to ``(kplan, load-failure Diagnostic or None)``."""
     path = pathlib.Path(target)
     if path.is_dir():
         raise ValueError("directories are expanded by the caller")
     if path.exists():
         try:
-            kplan = load_plan_file(path)
+            return load_plan_file(path), None
         except Exception as e:
-            return target, [Diagnostic(
+            return None, Diagnostic(
                 "PC000", "error", path.stem, "",
-                f"plan failed to load: {type(e).__name__}: {e}")]
-        return target, check_plan(kplan, sizes=sizes, budget=budget)
+                f"plan failed to load: {type(e).__name__}: {e}")
     from repro.core.programs import ALL_PROGRAMS
     build = ALL_PROGRAMS.get(target)
     if build is None:
-        return target, [Diagnostic(
+        return None, Diagnostic(
             "PC000", "error", target, "",
             f"no such file, directory, or program "
-            f"(known programs: {', '.join(sorted(ALL_PROGRAMS))})")]
+            f"(known programs: {', '.join(sorted(ALL_PROGRAMS))})")
     from repro.core import plan_pallas
     from repro.core.dataflow import build_dataflow
     from repro.core.fusion import fuse_inest_dag
     from repro.core.infer import infer
     from repro.core.reuse import analyze_storage
     idag = infer(build())
-    kplan = plan_pallas(
-        analyze_storage(fuse_inest_dag(build_dataflow(idag))), idag)
-    return target, check_plan(kplan, sizes=sizes, budget=budget)
+    return plan_pallas(
+        analyze_storage(fuse_inest_dag(build_dataflow(idag))), idag), None
+
+
+def lint_target(target: str, sizes, budget=None, *, vec: bool = False):
+    """Resolve one CLI target to ``(label, diagnostics, vec summary)``.
+
+    The vec summary (:meth:`repro.core.vecscan.VecReport.summary`) is
+    ``None`` unless ``vec=True`` and the plan loaded."""
+    kplan, failure = _resolve_plan(target)
+    if failure is not None:
+        return target, [failure], None
+    diags = check_plan(kplan, sizes=sizes, budget=budget)
+    summary = None
+    if vec and not has_errors(diags):
+        from repro.core.vecscan import scan_plan
+        rep = scan_plan(kplan, sizes=sizes)
+        diags = list(diags) + list(rep.diagnostics)
+        summary = rep.summary()
+    return target, diags, summary
 
 
 def parse_sizes(spec):
@@ -97,20 +119,29 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description="Lint KernelPlans (programs by name, serialized plan "
                     "files, or whole plan-cache/golden directories) with "
-                    "the repro.core.plancheck static analyzer.")
+                    "the repro.core.plancheck static analyzer and, under "
+                    "--vec, the repro.core.vecscan vectorization "
+                    "analyzer.")
     ap.add_argument("targets", nargs="*",
                     help="program names, plan files, or directories "
                          "(default: the golden corpus + ALL_PROGRAMS)")
     ap.add_argument("--sizes", default=None, metavar="Nj=64,Ni=512",
                     help="concrete dim sizes enabling the VMEM budget "
-                         "check (PC003)")
+                         "check (PC003) and the concrete vec model")
     ap.add_argument("--vmem-budget", type=int, default=None, metavar="BYTES",
                     help="VMEM budget for PC003 (default: "
                          "REPRO_VMEM_BUDGET_BYTES or ~16 MiB)")
+    ap.add_argument("--vec", action="store_true",
+                    help="also run the vectorization analyzer (PV "
+                         "diagnostic family, repro.core.vecscan)")
+    ap.add_argument("--format", choices=("text", "json"), default="text",
+                    help="output format: human-readable text (default) "
+                         "or one JSON object per analyzed plan")
     ap.add_argument("--strict", action="store_true",
                     help="exit non-zero on warnings too")
     ap.add_argument("-q", "--quiet", action="store_true",
-                    help="print findings only, no per-target OK lines")
+                    help="print findings only, no per-target OK lines "
+                         "(text format)")
     args = ap.parse_args(argv)
     sizes = parse_sizes(args.sizes)
 
@@ -127,11 +158,23 @@ def main(argv=None) -> int:
 
     n_err = n_warn = 0
     for target in targets:
-        label, diags = lint_target(target, sizes, args.vmem_budget)
+        label, diags, summary = lint_target(target, sizes,
+                                            args.vmem_budget, vec=args.vec)
         errs = [d for d in diags if d.severity == "error"]
         warns = [d for d in diags if d.severity != "error"]
         n_err += len(errs)
         n_warn += len(warns)
+        if args.format == "json":
+            record = {
+                "target": label,
+                "errors": len(errs),
+                "warnings": len(warns),
+                "diagnostics": [dataclasses.asdict(d) for d in diags],
+            }
+            if summary is not None:
+                record["vec"] = summary
+            print(json.dumps(record, sort_keys=True))
+            continue
         if not diags:
             if not args.quiet:
                 print(f"  {label}: OK")
@@ -139,8 +182,9 @@ def main(argv=None) -> int:
         print(f"  {label}: {len(errs)} error(s), {len(warns)} warning(s)")
         for d in diags:
             print(f"    {d}")
-    print(f"plan_lint: {len(targets)} target(s), {n_err} error(s), "
-          f"{n_warn} warning(s)")
+    if args.format != "json":
+        print(f"plan_lint: {len(targets)} target(s), {n_err} error(s), "
+              f"{n_warn} warning(s)")
     if n_err or (args.strict and n_warn):
         return 1
     return 0

@@ -3,7 +3,7 @@
 #: Build stamp folded into on-disk plan-cache keys and entry headers
 #: (repro.core.plancache): bump alongside behavior changes that should
 #: invalidate persisted plans without a schema change.
-__version__ = "0.7.0"
+__version__ = "0.8.0"
 
 from .codegen_jax import Generated
 from .codegen_pallas import PallasGenerated, generate_pallas, plan_pallas
@@ -18,25 +18,31 @@ from .interpreters import (InterpreterSpec, PlanUnsupported, execute_plan,
                            get_interpreter, register_interpreter,
                            registered_interpreters, unregister_interpreter)
 from .plan import (PLAN_FEATURES, SCHEMA_VERSION, CallPlan, KernelPlan,
-                   PallasUnsupported, PlanSerializationError, fn_key,
-                   register_step_builder, unregister_step_builder)
+                   LayoutHint, PallasUnsupported, PlanSerializationError,
+                   fn_key, register_step_builder, unregister_step_builder)
 from .plancache import PlanCache, program_plan_key
 from .plancheck import (Diagnostic, PlanCheckError, PlanCheckWarning,
-                        check_plan, has_errors, sizes_from_arrays,
-                        vmem_bytes, vmem_report)
+                        check_plan, has_errors, pad_to_lane,
+                        sizes_from_arrays, vmem_bytes, vmem_report)
+from .vecscan import (ACCESS_CLASSES, AccessSite, VecReport,
+                      attach_layout_hints, auto_vec_reject, render_vec,
+                      scan_plan)
 from .reuse import analyze_storage, reuse_graph, reuse_order
 from .rules import Extent, KernelRule, Program, axiom, goal, kernel
 from .terms import Term, parse_term, unify_term
 
 __all__ = [
+    "ACCESS_CLASSES", "AccessSite",
     "BACKENDS", "CallPlan", "Diagnostic", "Generated", "InterpreterSpec",
-    "KernelPlan",
+    "KernelPlan", "LayoutHint",
     "PallasGenerated", "PallasUnsupported", "PlanCache", "PlanCheckError",
     "PlanCheckWarning", "PlanSerializationError", "PlanUnsupported",
     "PLAN_FEATURES",
-    "SCHEMA_VERSION", "check_plan", "clear_compile_cache",
+    "SCHEMA_VERSION", "VecReport", "attach_layout_hints",
+    "auto_vec_reject", "check_plan", "clear_compile_cache",
     "compile_cache_size", "execute_plan", "get_interpreter", "has_errors",
-    "register_interpreter", "registered_interpreters", "sizes_from_arrays",
+    "pad_to_lane", "register_interpreter", "registered_interpreters",
+    "render_vec", "scan_plan", "sizes_from_arrays",
     "unregister_interpreter", "vmem_bytes",
     "vmem_report",
     "compile_program", "fn_key", "generate_pallas",

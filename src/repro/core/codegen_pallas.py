@@ -565,7 +565,14 @@ def plan_pallas(plan: StoragePlan, idag: IDAG) -> KernelPlan:
         goal_outputs=goal_outputs,
         calls=calls,
     )
-    return kplan.validate()
+    kplan = kplan.validate()
+    # annotate with the vectorization analyzer's advisory layout hints
+    # (compare=False: identity, hashes and cache keys are unchanged;
+    # serialization carries them to the AOT cache and the PR-9 layout
+    # pass).  Imported lazily — vecscan walks the plan IR this module
+    # produces.
+    from .vecscan import attach_layout_hints
+    return attach_layout_hints(kplan)
 
 
 @dataclass
@@ -579,12 +586,16 @@ class PallasGenerated:
     (:mod:`repro.core.plancache`), where the analysis never ran at
     all.  ``interpreter`` names the registered plan interpreter
     (:mod:`repro.core.interpreters`) whose ``build_call`` executes
-    ``kernel_plan`` inside ``fn``."""
+    ``kernel_plan`` inside ``fn``.  ``vec_report`` holds the
+    vectorization analyzer's :class:`~repro.core.vecscan.VecReport`
+    when the compilation asked for one
+    (``compile_program(vec_report=True)``), else ``None``."""
 
     kernel_plan: KernelPlan
     fn: Callable
     plan: Optional[StoragePlan] = None
     interpreter: str = "pallas"
+    vec_report: Optional[object] = None
 
     @property
     def calls(self) -> tuple[CallPlan, ...]:

@@ -72,6 +72,7 @@ from .plancheck import (PlanCheckError, PlanCheckWarning, check_plan,
                         vmem_bytes, vmem_budget, vmem_report)
 from .reuse import StoragePlan, analyze_storage
 from .rules import Program
+from .vecscan import auto_vec_reject, scan_plan
 
 #: The built-in backend names.  ``compile_program`` additionally
 #: accepts any name in the plan-interpreter registry
@@ -333,8 +334,12 @@ def _pallas_auto_probe(plan, idag, *, dtype, interpret, double_buffer,
     raises :class:`PallasUnsupported`, the static analyzer rejects the
     plan under ``check="error"``, or — when concrete ``dim_sizes`` are
     known — the estimated resident VMEM exceeds the budget
-    (``REPRO_VMEM_BUDGET_BYTES``): a nest that cannot hold its windows
-    in VMEM is better served by XLA than by a thrashing stencil
+    (``REPRO_VMEM_BUDGET_BYTES``) or the vectorization model rejects
+    the shape (:func:`repro.core.vecscan.auto_vec_reject`: lane
+    occupancy under ``REPRO_VEC_MIN_OCCUPANCY``, redundant-load ratio
+    over the opt-in ``REPRO_VEC_AUTO_MAX_RATIO``): a nest that cannot
+    hold its windows in VMEM, or that wastes most of every padded
+    lane, is better served by XLA than by a thrashing stencil
     pipeline."""
     if not pallas_auto_viable(plan):
         return None
@@ -348,6 +353,9 @@ def _pallas_auto_probe(plan, idag, *, dtype, interpret, double_buffer,
                          double_buffer=double_buffer)
         if est > vmem_budget(None):
             return None
+        if auto_vec_reject(kplan, dict(dim_sizes),
+                           dtype_bytes=jnp.dtype(dtype).itemsize):
+            return None
     try:
         return _emit_plan(kplan, plan, interpreter="pallas", dtype=dtype,
                           interpret=interpret, double_buffer=double_buffer,
@@ -355,6 +363,20 @@ def _pallas_auto_probe(plan, idag, *, dtype, interpret, double_buffer,
                           dim_sizes=dim_sizes)
     except PlanCheckError:
         return None
+
+
+def _attach_vec_report(gen, want: bool, dim_sizes, dtype):
+    """Annotate a plan-backed artifact with its
+    :class:`~repro.core.vecscan.VecReport` when the compilation asked
+    for one.  A no-op for the legacy JAX emitter (no kernel plan
+    exists); recomputed per request so a later call carrying concrete
+    ``dim_sizes`` upgrades a cached artifact's symbolic report."""
+    if want and isinstance(gen, PallasGenerated):
+        gen.vec_report = scan_plan(
+            gen.kernel_plan,
+            sizes=dict(dim_sizes) if dim_sizes else None,
+            dtype_bytes=jnp.dtype(dtype).itemsize)
+    return gen
 
 
 def compile_program(
@@ -368,6 +390,7 @@ def compile_program(
     plan_cache_dir=None,
     check_plans: Optional[str] = None,
     dim_sizes=None,
+    vec_report: bool = False,
 ) -> Union[Generated, PallasGenerated]:
     """Compile ``program`` through the HFAV pipeline onto a backend.
 
@@ -398,9 +421,17 @@ def compile_program(
 
     ``dim_sizes`` (``{size symbol: int}``, e.g. ``{"Nj": 512}``)
     declares the intended problem size: it enables the VMEM budget
-    diagnostic (PC003) and lets ``backend="auto"`` route nests whose
+    diagnostic (PC003), lets ``backend="auto"`` route nests whose
     estimated resident footprint exceeds ``REPRO_VMEM_BUDGET_BYTES``
-    (default ~16 MiB) to the JAX backend."""
+    (default ~16 MiB) to the JAX backend, and arms the vectorization
+    tiebreaker (:func:`repro.core.vecscan.auto_vec_reject`).
+
+    ``vec_report=True`` attaches the vectorization analyzer's
+    :class:`~repro.core.vecscan.VecReport`
+    (:func:`repro.core.vecscan.scan_plan`, concrete when ``dim_sizes``
+    is given) to the returned artifact's ``.vec_report`` — plan-backed
+    backends only; the legacy JAX emitter has no kernel plan to
+    analyze."""
     if backend in ("auto", "jax"):
         spec = None
     else:
@@ -433,7 +464,7 @@ def compile_program(
                 # dir: back-fill the L2 so the next process runs warm
                 _store_plan_to_disk(program, hit.kernel_plan,
                                     plan_cache_dir, only_if_missing=True)
-            return hit
+            return _attach_vec_report(hit, vec_report, dim_sizes, dtype)
     if plan_cache_dir is not None and backend != "jax":
         # disk-restored artifacts carry no StoragePlan, so they live
         # under a marked key: a later compile *without* plan_cache_dir
@@ -442,7 +473,8 @@ def compile_program(
         if use_cache:
             hit = _CACHE.get(dkey)
             if hit is not None:
-                return hit
+                return _attach_vec_report(hit, vec_report, dim_sizes,
+                                          dtype)
         kplan = _load_plan_from_disk(program, backend, plan_cache_dir)
         if kplan is not None:
             gen = _emit_plan(kplan, None,
@@ -454,7 +486,7 @@ def compile_program(
                              dim_sizes=dim_sizes)
             if use_cache:
                 _CACHE[dkey] = gen
-            return gen
+            return _attach_vec_report(gen, vec_report, dim_sizes, dtype)
     idag, plan = _build_plan(program)
     if backend == "jax":
         gen: Union[Generated, PallasGenerated] = generate(plan, idag)
@@ -478,7 +510,7 @@ def compile_program(
             # double_buffer had no effect (auto fell back to JAX): alias
             # the normalized key so neither flag value recompiles
             _CACHE[key[:4] + (False,) + key[5:]] = gen
-    return gen
+    return _attach_vec_report(gen, vec_report, dim_sizes, dtype)
 
 
 def explain(program: Program, *, dtype=jnp.float32, interpret: bool = True,
@@ -499,7 +531,11 @@ def explain(program: Program, *, dtype=jnp.float32, interpret: bool = True,
     the probe lowered one — the declarative contract the interpreter
     will execute — followed by the estimated resident-VMEM footprint:
     symbolic per-buffer formulas always, concrete per-nest byte totals
-    when ``dim_sizes`` (``{size symbol: int}``) resolves them."""
+    when ``dim_sizes`` (``{size symbol: int}``) resolves them — and
+    the vectorization analysis
+    (:func:`repro.core.vecscan.scan_plan`: access-class counts,
+    redundant-load ratio, window reuse distances, PV diagnostics and
+    layout hints)."""
     idag, plan = _build_plan(program)
     schedule = plan.schedule
     dag = schedule.dag
@@ -532,6 +568,11 @@ def explain(program: Program, *, dtype=jnp.float32, interpret: bool = True,
                     lines.append(
                         f"  {nest}: {r['total']} B resident "
                         f"(budget {vmem_budget(None)} B)")
+            lines.append("--- vectorization ---")
+            vrep = scan_plan(gen.kernel_plan,
+                             sizes=dict(dim_sizes) if dim_sizes else None,
+                             dtype_bytes=itemsize)
+            lines.extend(vrep.render())
         else:
             lines.append("(auto picked the JAX backend: no stencil plan)")
     return "\n".join(lines)

@@ -299,7 +299,9 @@ def build_call(call: CallPlan, sizes: tuple[int, ...], dtype,
 register_interpreter(InterpreterSpec(
     name="interp_jax",
     build_call=build_call,
-    capabilities=PLAN_FEATURES,
+    # unit-stride lane slicing only, like the Pallas interpreter: a
+    # plan with non-unit ReadPlan.i_stride must refuse, not miscompile
+    capabilities=PLAN_FEATURES - frozenset({"strided_reads"}),
     flags=frozenset(),
     description="pure-JAX plan interpreter (lax.fori_loop over the "
                 "linearized grid; loop-carried windows/accumulators)",

@@ -68,13 +68,18 @@ class InterpreterSpec:
     :data:`~repro.core.plan.PLAN_FEATURES` the interpreter executes;
     ``flags`` names the execution flags it actually honors (subset of
     ``{"interpret", "double_buffer"}``) so the engine can normalize
-    un-honored flags out of its cache keys."""
+    un-honored flags out of its cache keys.  ``layout_aware`` declares
+    that ``build_call`` consults the plan's advisory
+    :attr:`~repro.core.plan.KernelPlan.layout_hints` section
+    (:mod:`repro.core.vecscan`); layout-oblivious interpreters — all
+    built-ins today — execute hinted plans unchanged."""
 
     name: str
     build_call: Callable = field(compare=False)
     capabilities: frozenset = frozenset()
     flags: frozenset = frozenset()
     description: str = ""
+    layout_aware: bool = False
 
 
 _REGISTRY: dict[str, InterpreterSpec] = {}

@@ -56,7 +56,9 @@ from typing import Callable, Optional, Union
 #: dataclass fields, the function-spec format, or their meaning — the
 #: on-disk plan cache treats entries from other versions as misses and
 #: the golden corpus must be regenerated (scripts/warm_cache.py).
-SCHEMA_VERSION = 1
+#: v2: ``ReadPlan.i_stride`` and the advisory ``KernelPlan.layout_hints``
+#: section (:class:`LayoutHint`, written by ``repro.core.vecscan``).
+SCHEMA_VERSION = 2
 
 
 class PallasUnsupported(Exception):
@@ -421,13 +423,23 @@ class ReadPlan:
     ``j_off`` is the total row offset (consumer lead + stencil offset),
     ``p_off`` the total plane position (consumer plane lead + stencil
     offset) for plane-window sources; the read covers columns
-    ``[col0, col0 + Ni + w_off)`` in iteration-space positions."""
+    ``[col0, col0 + Ni + w_off)`` in iteration-space positions.
+
+    ``i_stride`` is the lane-dim element stride (every ``i_stride``-th
+    column).  The planner only emits unit-stride reads today; the field
+    makes down-sampling stencils *expressible* in the IR — no built-in
+    interpreter declares the ``strided_reads`` capability yet, so a
+    non-unit stride is a typed refusal
+    (:class:`~repro.core.interpreters.PlanUnsupported` / PC008), never
+    a miscompile, and ``repro.core.vecscan`` classifies such sites as
+    ``strided``."""
 
     src: str
     j_off: int
     col0: int
     w_off: int
     p_off: int = 0
+    i_stride: int = 1
 
     def to_dict(self) -> dict:
         """JSON-native form (schema :data:`SCHEMA_VERSION`)."""
@@ -437,7 +449,8 @@ class ReadPlan:
     def from_dict(cls, d: dict) -> "ReadPlan":
         """Rebuild from :meth:`to_dict` output."""
         return cls(str(d["src"]), int(d["j_off"]), int(d["col0"]),
-                   int(d["w_off"]), int(d["p_off"]))
+                   int(d["w_off"]), int(d["p_off"]),
+                   int(d.get("i_stride", 1)))
 
 
 @dataclass(frozen=True)
@@ -646,6 +659,50 @@ class CallPlan:
         )
 
 
+@dataclass(frozen=True)
+class LayoutHint:
+    """One advisory layout transformation recommended by the static
+    vectorization analyzer (:mod:`repro.core.vecscan`).
+
+    Hints are **advisory**: interpreters that don't understand them
+    execute the plan unchanged (the
+    :class:`~repro.core.interpreters.InterpreterSpec.layout_aware` flag
+    says whether a ``build_call`` consults them), they are excluded
+    from structural plan equality and the compile-cache key, and they
+    round-trip through plan serialization so the PR-9 layout pass can
+    consume them from cached plans.  ``kind`` names the transformation
+    (``shift_reuse`` — replace overlapping shifted loads of one
+    resident row with one widened load plus in-register shifts;
+    ``realign_origin`` — re-origin a window so a row group gains an
+    aligned anchor load; ``layout_transform`` — a lane-dim data-layout
+    transform for gather/strided access; ``acc_lane_block`` — block a
+    row-kept accumulator over lanes to avoid the per-row cross-lane
+    fold), ``call`` the owning nest, ``target`` the source / output it
+    applies to, ``params`` sorted ``(key, value)`` pairs quantifying
+    the opportunity, and ``note`` the human-readable rationale."""
+
+    kind: str
+    call: str
+    target: str
+    params: tuple = ()
+    note: str = ""
+
+    def to_dict(self) -> dict:
+        """JSON-native form (schema :data:`SCHEMA_VERSION`)."""
+        return _jsonable(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "LayoutHint":
+        """Rebuild from :meth:`to_dict` output (numeric param values
+        keep their JSON type; JSON arrays come back as tuples)."""
+        def untuple(v):
+            return tuple(untuple(x) for x in v) \
+                if isinstance(v, (list, tuple)) else v
+        return cls(str(d["kind"]), str(d["call"]), str(d["target"]),
+                   tuple((str(k), untuple(v)) for k, v in d["params"]),
+                   str(d["note"]))
+
+
 #: The feature-tag universe for per-interpreter capability validation
 #: (:meth:`KernelPlan.features` computes a plan's subset; an
 #: :class:`~repro.core.interpreters.InterpreterSpec` declares the
@@ -669,6 +726,7 @@ PLAN_FEATURES = frozenset({
     "acc_rows",                 # row-kept partial-accumulator outputs
     "lane_reduce",              # host-side lane fold of folded accs
     "local_rows",               # same-step local row values
+    "strided_reads",            # non-unit lane-dim read strides
 })
 
 
@@ -679,7 +737,12 @@ class KernelPlan:
 
     ``dim_sizes`` maps every loop identifier to its runtime size symbol;
     ``goal_outputs`` pairs each goal's store name with the environment
-    variable holding it after the final call."""
+    variable holding it after the final call.  ``layout_hints`` is the
+    advisory :class:`LayoutHint` section written by the vectorization
+    analyzer (:mod:`repro.core.vecscan`) — like the per-call fn tables
+    it is excluded from structural equality (and therefore from
+    :meth:`cache_key`), but unlike them it serializes by value and
+    survives the on-disk plan cache."""
 
     program: str
     loop_order: tuple[str, ...]
@@ -687,6 +750,7 @@ class KernelPlan:
     axioms: tuple[AxiomPlan, ...]
     goal_outputs: tuple[tuple[str, str], ...]
     calls: tuple[CallPlan, ...]
+    layout_hints: tuple = field(default=(), compare=False)
 
     def features(self) -> frozenset:
         """The subset of :data:`PLAN_FEATURES` this plan demands of an
@@ -724,6 +788,8 @@ class KernelPlan:
             if any(kind == "local" for s in c.steps
                    for targets in s.writes for kind, _ in targets):
                 tags.add("local_rows")
+            if any(rd.i_stride != 1 for s in c.steps for rd in s.reads):
+                tags.add("strided_reads")
         return frozenset(tags)
 
     def validate(self) -> "KernelPlan":
@@ -768,6 +834,11 @@ class KernelPlan:
                             f"unresolved source {rd.src!r}")
                     if rd.p_off and rd.src not in plane_srcs:
                         require_plane_window_read(rd.src, rd.p_off)
+                    if rd.i_stride < 1:
+                        raise ValueError(
+                            f"call {call.name}: step {s.op} reads "
+                            f"{rd.src} with non-positive lane stride "
+                            f"{rd.i_stride}")
                 for targets in s.writes:
                     for kind, tgt in targets:
                         if kind == "out" and not (
@@ -830,7 +901,9 @@ class KernelPlan:
             for s in call.steps:
                 rd = ", ".join(
                     f"{r.src}[{('p%+d ' % r.p_off) if r.p_off else ''}"
-                    f"j{r.j_off:+d}]" for r in s.reads)
+                    f"j{r.j_off:+d}"
+                    f"{(':%d' % r.i_stride) if r.i_stride != 1 else ''}]"
+                    for r in s.reads)
                 wr = "; ".join(
                     ",".join(f"{k}:{t}" for k, t in targets)
                     for targets in s.writes) or (f"acc:{s.acc}")
@@ -882,6 +955,8 @@ class KernelPlan:
             axioms=tuple(AxiomPlan.from_dict(a) for a in d["axioms"]),
             goal_outputs=_pairs(d["goal_outputs"]),
             calls=tuple(CallPlan.from_dict(c) for c in d["calls"]),
+            layout_hints=tuple(LayoutHint.from_dict(h)
+                               for h in d.get("layout_hints", ())),
         )
 
     def to_json(self) -> str:

@@ -180,8 +180,14 @@ def _iv_clamp(iv, lo: int, hi: int):
     return None if iv is None else (max(iv[0], lo), min(iv[1], hi))
 
 
-def _pad_to_lane(w: int) -> int:
+def pad_to_lane(w: int) -> int:
+    """Lane-pad one row width: the interpreter allocates every resident
+    row at a multiple of :data:`LANE` elements (minimum one lane).
+    Shared with :mod:`repro.core.vecscan`'s occupancy model."""
     return max(LANE, ((w + LANE - 1) // LANE) * LANE)
+
+
+_pad_to_lane = pad_to_lane
 
 
 # ---------------------------------------------------------------------------

@@ -504,7 +504,9 @@ def execute_plan(kplan: KernelPlan, *, dtype=jnp.float32,
 register_interpreter(InterpreterSpec(
     name="pallas",
     build_call=build_call,
-    capabilities=PLAN_FEATURES,
+    # the interpreter issues unit-stride lane slices only: a plan with
+    # non-unit ReadPlan.i_stride must refuse, not miscompile
+    capabilities=PLAN_FEATURES - frozenset({"strided_reads"}),
     flags=frozenset({"interpret", "double_buffer"}),
     description="Pallas TPU stencil interpreter (VMEM windows, "
                 "BlockSpec or double-buffered DMA row streaming)",

@@ -7,7 +7,6 @@ shapes from the plan's own axiom shape contracts
 ``size + hi - lo``) rather than hard-coding per-program shapes.
 """
 import jax.numpy as jnp
-import numpy as np
 
 #: Concrete sizes for the loop dims the test programs use.  Deliberately
 #: small, mutually distinct, and non-multiples of each other so grid

@@ -1,14 +1,10 @@
 """Infrastructure: checkpoint atomicity + exact resume, data determinism,
 heartbeats/stragglers, optimizer behaviour, sharding rules."""
-import json
 import os
-import subprocess
-import sys
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.ckpt.checkpoint import latest_step, prune, restore, save
 from repro.configs import ARCHS, smoke
@@ -101,7 +97,6 @@ def test_microbatch_grad_equivalence(rng):
     from repro.train.step import make_train_step
 
     cfg = smoke(ARCHS["minitron-4b"])
-    params = init_params = None
     from repro.models import init_params as ip
     params = ip(jax.random.PRNGKey(0), cfg)
     opt = init_opt_state(params)
@@ -126,7 +121,6 @@ def test_param_specs_structure():
 
     cfg = smoke(ARCHS["minitron-4b"])
     params = init_params(jax.random.PRNGKey(0), cfg)
-    import os
     mesh = make_host_mesh()
     specs = param_specs(params, mesh)
     # structurally identical trees

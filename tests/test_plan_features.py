@@ -1,0 +1,138 @@
+"""KernelPlan.features() and the capability contract: every
+PLAN_FEATURES tag is derivable from a minimal hand-built plan, and the
+static mirror (check_plan's PC008) always agrees with the registry's
+typed build-time refusal (PlanUnsupported) — for every registered
+interpreter, over hand-built and golden plans alike."""
+import json
+import pathlib
+
+import pytest
+
+from repro.core import (KernelPlan, PlanUnsupported, check_plan,
+                        execute_plan, registered_interpreters)
+from repro.core.plan import (PLAN_FEATURES, AccPlan, CallPlan, GridDim,
+                             HostStepPlan, InputPlan, OutputPlan,
+                             ReadPlan, StepPlan, WindowPlan)
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+GOLDEN_DIR = ROOT / "tests" / "goldens" / "plans"
+
+
+def _call(**overrides) -> CallPlan:
+    base = dict(
+        name="feat_n0",
+        grid=(GridDim("j", 0, 0),),
+        vec_dim="i",
+        inputs=(InputPlan("u"),),
+        steps=(StepPlan("dbl", 0, (ReadPlan("in_u", 0, 0, 0),),
+                        ((("out", 0),),), 0),),
+        outputs=(OutputPlan("v", kind="external"),),
+        fns=(lambda a: 2.0 * a,),
+    )
+    base.update(overrides)
+    return CallPlan(**base)
+
+
+def _plan(*calls, loop_order=("j", "i"),
+          dim_sizes=(("i", "Ni"), ("j", "Nj"))) -> KernelPlan:
+    return KernelPlan(
+        program="feat",
+        loop_order=loop_order,
+        dim_sizes=dim_sizes,
+        axioms=(),
+        goal_outputs=(("v", "v"),),
+        calls=calls or (_call(),),
+    )
+
+
+# one minimal synthetic plan per feature tag
+FEATURE_PLANS = {
+    "multi_call": lambda: _plan(_call(), _call(name="feat_n1")),
+    "host_steps": lambda: _plan(_call(
+        host_pre=(HostStepPlan("seed", 0, (), ("t",)),))),
+    "scalar_inputs": lambda: _plan(_call(
+        inputs=(InputPlan("u"), InputPlan("s", scalar=True)))),
+    "outer_grid": lambda: _plan(
+        _call(grid=(GridDim("k", 0, 0), GridDim("j", 0, 0))),
+        loop_order=("k", "j", "i"),
+        dim_sizes=(("i", "Ni"), ("j", "Nj"), ("k", "Nk"))),
+    "rolling_input_windows": lambda: _plan(_call(
+        inputs=(InputPlan("u", stages=3, lead=1),))),
+    "plane_window_inputs": lambda: _plan(_call(
+        inputs=(InputPlan("u", p_stages=3, p_lead=1),))),
+    "rolling_windows": lambda: _plan(_call(
+        windows=(WindowPlan("b_t", 2),))),
+    "producer_plane_windows": lambda: _plan(_call(
+        windows=(WindowPlan("b_t", 1, p_stages=2, p_lead=1),))),
+    "acc_carried": lambda: _plan(_call(
+        accs=(AccPlan("a", 0, 0.0),))),
+    "acc_kept_prefix": lambda: _plan(_call(
+        accs=(AccPlan("a", 0, 0.0, n_kept=1),))),
+    "acc_rows": lambda: _plan(_call(
+        outputs=(OutputPlan("v", kind="acc_rows"),))),
+    "lane_reduce": lambda: _plan(_call(
+        outputs=(OutputPlan("v", kind="acc", reduce_idx=0),))),
+    "local_rows": lambda: _plan(_call(
+        steps=(StepPlan("dbl", 0, (ReadPlan("in_u", 0, 0, 0),),
+                        ((("local", "t"),),), 0),))),
+    "strided_reads": lambda: _plan(_call(
+        steps=(StepPlan("dbl", 0,
+                        (ReadPlan("in_u", 0, 0, 0, i_stride=2),),
+                        ((("out", 0),),), 0),))),
+}
+
+
+def test_every_feature_tag_has_a_minimal_plan():
+    assert set(FEATURE_PLANS) == set(PLAN_FEATURES)
+
+
+def test_base_plan_demands_nothing():
+    assert _plan().features() == frozenset()
+
+
+@pytest.mark.parametrize("tag", sorted(PLAN_FEATURES))
+def test_feature_derivable_from_minimal_plan(tag):
+    feats = FEATURE_PLANS[tag]()
+    assert tag in feats.features()
+
+
+# ---------------------------------------------------------------------------
+# PC008 (static) must mirror PlanUnsupported (build-time) exactly
+# ---------------------------------------------------------------------------
+
+def _agreement_plans():
+    plans = [("base", _plan())]
+    plans += [(tag, build()) for tag, build in
+              sorted(FEATURE_PLANS.items())]
+    plans += [(p.stem, KernelPlan.from_dict(json.loads(p.read_text())))
+              for p in sorted(GOLDEN_DIR.glob("*.json"))]
+    return plans
+
+
+@pytest.mark.parametrize("interp", registered_interpreters())
+def test_pc008_agrees_with_capability_refusal(interp):
+    """For every registered interpreter and every plan: check_plan's
+    PC008 fires iff execute_plan raises PlanUnsupported.  The static
+    analysis and the runtime gate are the same predicate — neither may
+    drift ahead of the other."""
+    for label, kplan in _agreement_plans():
+        diags = check_plan(kplan, interpreter=interp, validate=False)
+        static_refusal = any(d.code == "PC008" for d in diags)
+        try:
+            execute_plan(kplan, interpreter=interp)
+            runtime_refusal = False
+        except PlanUnsupported:
+            runtime_refusal = True
+        assert static_refusal == runtime_refusal, (label, interp)
+
+
+def test_strided_reads_refused_by_every_builtin():
+    """Non-unit i_stride is expressible IR but no built-in interpreter
+    executes it: the refusal must be typed, in both forms."""
+    kplan = FEATURE_PLANS["strided_reads"]()
+    for interp in registered_interpreters():
+        assert any(d.code == "PC008" and d.var == "strided_reads"
+                   for d in check_plan(kplan, interpreter=interp,
+                                       validate=False))
+        with pytest.raises(PlanUnsupported):
+            execute_plan(kplan, interpreter=interp)

@@ -13,8 +13,7 @@ import numpy as np
 import pytest
 
 from _progen import build_chain_program, random_chain, unregister_chain
-from repro.core import (KernelPlan, PlanSerializationError, plan_pallas,
-                        register_step_builder, unregister_step_builder)
+from repro.core import KernelPlan, PlanSerializationError, plan_pallas
 from repro.core.dataflow import build_dataflow
 from repro.core.fusion import fuse_inest_dag
 from repro.core.infer import infer

@@ -12,7 +12,6 @@ import sys
 import warnings
 
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.core import (KernelPlan, PlanCache, PlanCheckError,

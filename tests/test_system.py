@@ -2,7 +2,6 @@
 pipeline on every worked example, and the serving/training drivers."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import compile_program
 from repro.core.programs import (cosmo_program, hydro1d_program,

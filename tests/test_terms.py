@@ -1,7 +1,6 @@
 """Term parsing + unification (engine front-end)."""
 import pytest
-from repro.core.terms import (Index, Ref, Term, UnifyError, parse_term,
-                              unify_term)
+from repro.core.terms import Index, UnifyError, parse_term, unify_term
 
 
 def test_parse_roundtrip():
