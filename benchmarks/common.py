@@ -21,6 +21,38 @@ def time_fn(fn, *args, warmup: int = 2, iters: int = 5, **kw):
     return float(np.median(ts)), out
 
 
+def time_pair(fn_a, fn_b, *args, warmup: int = 2, rounds: int = 20,
+              iters: int = 10, **kw):
+    """Time two callables interleaved round-robin (A-batch, B-batch,
+    repeat) and return ``(t_a, t_b, out_a, out_b)``, each the best
+    (minimum) per-call batch average.
+
+    Sequential timing (one ``time_fn`` per leg) lets clock-speed drift
+    between the two measurements masquerade as a performance delta;
+    interleaving samples both legs under the same machine conditions,
+    and the batch minimum — the least-contaminated sample, as in
+    ``timeit`` — makes the *ratio* trustworthy even when absolute
+    wall-clock is noisy."""
+    for _ in range(warmup):
+        out_a = fn_a(*args, **kw)
+        jax.block_until_ready(out_a)
+        out_b = fn_b(*args, **kw)
+        jax.block_until_ready(out_b)
+    tas, tbs = [], []
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out_a = fn_a(*args, **kw)
+            jax.block_until_ready(out_a)
+        tas.append((time.perf_counter() - t0) / iters)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out_b = fn_b(*args, **kw)
+            jax.block_until_ready(out_b)
+        tbs.append((time.perf_counter() - t0) / iters)
+    return (float(min(tas)), float(min(tbs)), out_a, out_b)
+
+
 def mk(rng, shape, scale=1.0, dtype=jnp.float32):
     return jnp.asarray(rng.standard_normal(shape) * scale, dtype)
 

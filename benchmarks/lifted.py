@@ -30,10 +30,17 @@ program as its in-row baseline:
 The suite also sweeps the **plan-interpreter registry**
 (``interpreters`` legs): every registered interpreter
 (:mod:`repro.core.interpreters` — Pallas-interpret, the pure-JAX plan
-interpreter, future registrations) runs laplace5 and heat3d against
-the legacy fused-JAX emitter baseline, so the overhead of interpreting
-the declarative KernelPlan vs executing emitted source is tracked
-per PR.
+interpreter, future registrations) runs laplace5, heat3d, and cosmo
+against the legacy fused-JAX emitter baseline, so the overhead of
+interpreting the declarative KernelPlan vs executing emitted source
+is tracked per PR.  Every **layout-aware** interpreter additionally
+runs a ``*_layout`` leg: the same program compiled with
+``apply_layout="auto"`` (the LayoutApply pass,
+:mod:`repro.core.layoutapply`), cross-checked bit-identical against
+the untransformed leg, timed, and recorded beside the *post-transform*
+re-run of the vectorization analyzer — so the transformed-vs-
+untransformed throughput delta and the analyzer's predicted
+redundant-load drop land in the same ``BENCH_<pr>.json`` record.
 
 The suite also times the **AOT plan cache** (``plan_cache`` legs):
 cold-plan compiles (full analysis pipeline + planner) against
@@ -84,7 +91,7 @@ from repro.core.programs import (cosmo_program, energy3d_program,
                                  subset_sum_program)
 from repro.core.unfused import build_unfused
 
-from .common import mk, time_fn
+from .common import mk, time_fn, time_pair
 
 # interpret mode unrolls the grid at trace time: keep row counts bounded
 CASES = [
@@ -161,6 +168,7 @@ def run(interpret: bool = True):
 INTERP_CASES = [
     ("laplace5", laplace5_program, "cell", "lap", (96, 256)),
     ("heat3d", heat3d_program, "u", "heat", (6, 32, 256)),
+    ("cosmo", cosmo_program, "u", "unew", (4, 48, 256)),
 ]
 
 
@@ -169,8 +177,12 @@ def run_interpreters(interpret: bool = True):
     same program, timed against the legacy fused-JAX emitter
     (``backend="jax"``) as the in-suite baseline — the cost of
     executing the declarative KernelPlan instead of emitted source.
-    New registrations get a leg automatically."""
-    from repro.core.interpreters import registered_interpreters
+    New registrations get a leg automatically; layout-aware ones also
+    get a ``*_layout`` leg with the LayoutApply pass on (auto mode),
+    bit-identity-checked against their untransformed leg and recorded
+    with the post-transform analyzer summary."""
+    from repro.core.interpreters import (get_interpreter,
+                                         registered_interpreters)
 
     rng = np.random.default_rng(11)
     legs = []
@@ -192,7 +204,23 @@ def run_interpreters(interpret: bool = True):
         for name in registered_interpreters():
             gen = compile_program(prog, backend=name, interpret=interpret)
             fn = jax.jit(lambda u, _g=gen, _a=arg: _g.fn(**{_a: u})[out])
-            t, got = time_fn(fn, u)
+            # the transformed leg: same program through LayoutApply,
+            # same inputs, bit-identical outputs required — timed
+            # interleaved with the untransformed leg so the reported
+            # vs_untransformed ratio is robust to clock drift
+            lgen = None
+            if get_interpreter(name).layout_aware:
+                cand = compile_program(prog, backend=name,
+                                       interpret=interpret,
+                                       apply_layout="auto")
+                if cand.kernel_plan.applied_layout:
+                    lgen = cand  # auto mode applied: measure the pair
+            if lgen is None:
+                t, got = time_fn(fn, u)
+            else:
+                lfn = jax.jit(
+                    lambda u, _g=lgen, _a=arg: _g.fn(**{_a: u})[out])
+                t, t_l, got, got_l = time_pair(fn, lfn, u)
             assert np.allclose(np.asarray(got), np.asarray(ref),
                                atol=1e-4, rtol=1e-4), f"{case}/{name}"
             kplan = gen.kernel_plan
@@ -205,6 +233,24 @@ def run_interpreters(interpret: bool = True):
                          "mcells_per_s": cells / t / 1e6,
                          "vs_jax_emitter": t / t_e,
                          **vsum})
+            if lgen is None:
+                continue
+            assert np.array_equal(np.asarray(got_l), np.asarray(got)), \
+                f"{case}/{name}+layout: not bit-identical"
+            lplan = lgen.kernel_plan
+            lsum = scan_plan(
+                lplan, sizes=sizes_from_arrays(lplan, {arg: shape})
+            ).summary()
+            legs.append({"name": f"interp_{case}_{name}_layout",
+                         "interpreter": name,
+                         "apply_layout": "auto",
+                         "applied": [f"{k}:{tgt}" for k, _, tgt
+                                     in lplan.applied_layout],
+                         "us_per_call": t_l * 1e6,
+                         "mcells_per_s": cells / t_l / 1e6,
+                         "vs_jax_emitter": t_l / t_e,
+                         "vs_untransformed": t_l / t,
+                         **lsum})
     return legs
 
 
@@ -284,10 +330,12 @@ def main(argv=None) -> None:
     for r in rows:
         print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
     for leg in interp_legs:
+        extra = (f";vs_untransformed={leg['vs_untransformed']:.2f}x"
+                 if "vs_untransformed" in leg else "")
         print(f"{leg['name']},{leg['us_per_call']:.1f},"
               f"interpreter={leg['interpreter']};"
               f"Mcells_s={leg['mcells_per_s']:.0f};"
-              f"vs_jax_emitter={leg['vs_jax_emitter']:.2f}x")
+              f"vs_jax_emitter={leg['vs_jax_emitter']:.2f}x{extra}")
     for leg in cache_legs:
         print(f"{leg['name']},cold_plan_ms={leg['cold_plan_ms']:.2f},"
               f"warm_cache_ms={leg['warm_cache_ms']:.2f},"

@@ -54,6 +54,9 @@ resident window so the group gains an aligned anchor load
       hint shift_reuse [laplace5_n0] in_cell: replace overlapping \
 loads of one resident row with one widened load plus in-register \
 shifts
+    --- layout apply ---
+      apply mode: off
+      every hint stays advisory (see the vectorization hints above)
     """
     report = explain(prog, verbose=True)
     return report.split("--- kernel plan ---\n", 1)[1]

@@ -6,7 +6,10 @@ at the repo root (the ``benchmarks.lifted --json`` output).  This tool
 lines those records up into one table per suite section so the
 trajectory — wall time per leg, throughput, interpreter overhead,
 plan-cache speedup, and (from PR 8 on) the vectorization analyzer's
-predicted redundant-load ratio — is readable at a glance::
+predicted redundant-load ratio — is readable at a glance.  From PR 9
+the interpreters table carries ``*_layout`` legs (the LayoutApply
+pass on) whose ``vec`` column is the *post-transform* prediction, so
+predicted ratio drops sit beside the measured throughput delta::
 
     python scripts/bench_trend.py                # all BENCH_*.json
     python scripts/bench_trend.py BENCH_6.json BENCH_8.json
@@ -132,7 +135,11 @@ def main(argv=None) -> int:
 
     trend(records, "legs", args.metric, nd=1,
           extra=("vec_ratio", "vec_redundant_load_ratio", 2))
-    trend(records, "interpreters", "us_per_call", nd=1)
+    # the predicted-vs-measured juxtaposition: the analyzer's
+    # redundant-load ratio (post-transform on *_layout legs) beside
+    # every interpreter leg's measured trend
+    trend(records, "interpreters", args.metric, nd=1,
+          extra=("vec_ratio", "vec_redundant_load_ratio", 2))
     trend(records, "plan_cache", "speedup", nd=1)
     return 0
 

@@ -31,6 +31,11 @@
 #      table, and every table row must correspond to a code the
 #      analyzer can actually emit — same bidirectional contract as
 #      the PC table (guard 5).
+#   8. every hint kind the LayoutApply pass handles
+#      (repro.core.layoutapply.HANDLED_HINTS) must have a row in the
+#      docs/ARCHITECTURE.md "Layout transformation" hint table, and
+#      every table row must name a handled kind — the pass and its
+#      docs cannot drift either way.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -205,6 +210,27 @@ for name in sorted(rows - registered):
     failures.append(f"docs/BACKENDS.md: interpreter-registry row {name!r} "
                     f"names no registered interpreter")
 
+# ---- 7. LayoutApply HANDLED_HINTS <-> ARCHITECTURE.md hint table ----------
+from repro.core.layoutapply import HANDLED_HINTS
+
+lt_start = arch.find("## Layout transformation")
+lt_end = arch.find("\n## ", lt_start + 1)
+lt_section = arch[lt_start:lt_end if lt_end != -1 else None]
+hint_rows = set(re.findall(r"^\|\s*`([a-z_]+)`\s*\|", lt_section, re.M))
+if lt_start == -1 or not hint_rows:
+    failures.append("docs/ARCHITECTURE.md: 'Layout transformation' hint "
+                    "table missing (no | `kind` | rows found)")
+for kind in sorted(set(HANDLED_HINTS) - hint_rows):
+    failures.append(
+        f"layoutapply: hint kind {kind!r} is handled "
+        f"(repro.core.layoutapply.HANDLED_HINTS) but has no row in the "
+        f"docs/ARCHITECTURE.md layout-transformation hint table")
+for kind in sorted(hint_rows - set(HANDLED_HINTS)):
+    failures.append(
+        f"docs/ARCHITECTURE.md: layout-transformation hint row {kind!r} "
+        f"names no handled hint kind "
+        f"(repro.core.layoutapply.HANDLED_HINTS)")
+
 if failures:
     print("check_docs: FAIL")
     for f in failures:
@@ -213,5 +239,5 @@ if failures:
 print("check_docs: OK (engine docstrings + docs/*.md code blocks + "
       "PallasUnsupported restriction table + plan-IR docstrings + "
       "PlanCheck diagnostic table + VecScan diagnostic table + "
-      "interpreter-registry table)")
+      "interpreter-registry table + LayoutApply hint table)")
 PY

@@ -8,10 +8,14 @@
 #   2. scripts/plan_lint.py over the golden-plan corpus — every
 #      checked-in plan must pass the KernelPlan static analyzer
 #      (repro.core.plancheck) with zero error-severity findings;
-#   3. the same corpus through `plan_lint.py --vec --format json`
-#      (plancheck + the repro.core.vecscan vectorization analyzer),
-#      gated on error-severity regressions against the checked-in
-#      baseline tests/goldens/vec_lint_baseline.json.
+#   3. the same corpus through `plan_lint.py --vec --apply-layout
+#      force --format json` — every golden is first run through the
+#      LayoutApply pass (repro.core.layoutapply) so the analyzers
+#      (plancheck + the repro.core.vecscan vectorization analyzer)
+#      see the *transformed* plan — gated on error-severity
+#      regressions against the checked-in baseline
+#      tests/goldens/vec_lint_baseline.json (regenerate with
+#      `plan_lint.py --update-vec-baseline --apply-layout force`).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -27,7 +31,8 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
 vec_json="$(mktemp)"
 trap 'rm -f "$vec_json"' EXIT
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
-    python scripts/plan_lint.py tests/goldens/plans --vec --format json \
+    python scripts/plan_lint.py tests/goldens/plans --vec \
+    --apply-layout force --format json \
     > "$vec_json"
 python - "$vec_json" <<'PY'
 import json, pathlib, sys

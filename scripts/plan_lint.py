@@ -28,6 +28,14 @@ vector-efficiency summary) for CI and the autotuner to consume
 without scraping text.  Exit status is non-zero iff any target
 carries an **error**-severity finding (warnings alone exit 0; add
 ``--strict`` to fail on those too) — identical in both formats.
+
+``--apply-layout auto|force`` runs every resolved plan through the
+LayoutApply pass (:mod:`repro.core.layoutapply`) before linting, so
+the analyzers see the transformed plan — this is how the lint.sh
+gate checks that layout transformation never introduces analyzer
+errors.  ``--update-vec-baseline`` regenerates
+``tests/goldens/vec_lint_baseline.json`` from the golden corpus
+(with the selected ``--apply-layout`` mode) instead of linting.
 """
 from __future__ import annotations
 
@@ -84,14 +92,27 @@ def _resolve_plan(target: str):
         analyze_storage(fuse_inest_dag(build_dataflow(idag))), idag), None
 
 
-def lint_target(target: str, sizes, budget=None, *, vec: bool = False):
+def lint_target(target: str, sizes, budget=None, *, vec: bool = False,
+                apply_mode: str = "off"):
     """Resolve one CLI target to ``(label, diagnostics, vec summary)``.
 
     The vec summary (:meth:`repro.core.vecscan.VecReport.summary`) is
-    ``None`` unless ``vec=True`` and the plan loaded."""
+    ``None`` unless ``vec=True`` and the plan loaded.  With
+    ``apply_mode`` other than ``"off"`` the plan is first run through
+    :func:`repro.core.layoutapply.apply_layout`; a transformation
+    failure is reported as ``PC000``."""
     kplan, failure = _resolve_plan(target)
     if failure is not None:
         return target, [failure], None
+    if apply_mode != "off":
+        from repro.core.layoutapply import apply_layout
+        try:
+            kplan = apply_layout(kplan, mode=apply_mode, sizes=sizes).plan
+        except Exception as e:
+            return target, [Diagnostic(
+                "PC000", "error", target, "",
+                f"layout apply ({apply_mode}) failed: "
+                f"{type(e).__name__}: {e}")], None
     diags = check_plan(kplan, sizes=sizes, budget=budget)
     summary = None
     if vec and not has_errors(diags):
@@ -100,6 +121,37 @@ def lint_target(target: str, sizes, budget=None, *, vec: bool = False):
         diags = list(diags) + list(rep.diagnostics)
         summary = rep.summary()
     return target, diags, summary
+
+
+VEC_BASELINE = ROOT / "tests" / "goldens" / "vec_lint_baseline.json"
+
+
+def update_vec_baseline(sizes, budget=None, *, apply_mode="off") -> int:
+    """Regenerate the vec-lint baseline from the golden corpus.
+
+    Lints every golden plan with ``--vec`` semantics (and the given
+    LayoutApply mode — lint.sh gates with ``--apply-layout force``)
+    and writes the per-plan error counts that the lint.sh gate
+    compares against."""
+    errors = {}
+    for path in sorted(GOLDEN_DIR.glob("*.json")):
+        _, diags, _ = lint_target(str(path), sizes, budget, vec=True,
+                                  apply_mode=apply_mode)
+        errors[path.name] = sum(d.severity == "error" for d in diags)
+    payload = {
+        "comment": "error-severity counts per golden plan from "
+                   "plan_lint.py --vec --apply-layout force --format "
+                   "json; the lint.sh gate fails on any increase; "
+                   "regenerate with plan_lint.py --update-vec-baseline "
+                   "--apply-layout force",
+        "errors": errors,
+    }
+    VEC_BASELINE.write_text(
+        json.dumps(payload, indent=1, sort_keys=True) + "\n")
+    print(f"plan_lint: wrote {VEC_BASELINE.relative_to(ROOT)} "
+          f"({len(errors)} plan(s), {sum(errors.values())} error(s), "
+          f"apply_layout={apply_mode})")
+    return 0
 
 
 def parse_sizes(spec):
@@ -134,6 +186,15 @@ def main(argv=None) -> int:
     ap.add_argument("--vec", action="store_true",
                     help="also run the vectorization analyzer (PV "
                          "diagnostic family, repro.core.vecscan)")
+    ap.add_argument("--apply-layout", choices=("off", "auto", "force"),
+                    default="off", metavar="MODE",
+                    help="run plans through the LayoutApply pass "
+                         "(repro.core.layoutapply) before linting: "
+                         "off (default), auto, or force")
+    ap.add_argument("--update-vec-baseline", action="store_true",
+                    help="regenerate tests/goldens/vec_lint_baseline.json "
+                         "from the golden corpus (honors --apply-layout "
+                         "and --sizes) instead of linting targets")
     ap.add_argument("--format", choices=("text", "json"), default="text",
                     help="output format: human-readable text (default) "
                          "or one JSON object per analyzed plan")
@@ -144,6 +205,10 @@ def main(argv=None) -> int:
                          "(text format)")
     args = ap.parse_args(argv)
     sizes = parse_sizes(args.sizes)
+
+    if args.update_vec_baseline:
+        return update_vec_baseline(sizes, args.vmem_budget,
+                                   apply_mode=args.apply_layout)
 
     targets: list[str] = []
     for t in args.targets or [str(GOLDEN_DIR)]:
@@ -159,7 +224,8 @@ def main(argv=None) -> int:
     n_err = n_warn = 0
     for target in targets:
         label, diags, summary = lint_target(target, sizes,
-                                            args.vmem_budget, vec=args.vec)
+                                            args.vmem_budget, vec=args.vec,
+                                            apply_mode=args.apply_layout)
         errs = [d for d in diags if d.severity == "error"]
         warns = [d for d in diags if d.severity != "error"]
         n_err += len(errs)

@@ -28,12 +28,16 @@ scripts/lint.sh
 # tests/test_interp_conformance.py — make the matrix visible up front
 # so a PR that (un)registers an interpreter shows its blast radius.
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python - <<'PY'
-from repro.core.interpreters import registered_interpreters
+from repro.core.interpreters import get_interpreter, registered_interpreters
 from repro.core.programs import ALL_PROGRAMS
 interps = registered_interpreters()
+aware = [n for n in interps if get_interpreter(n).layout_aware]
 print(f"interpreter matrix: {len(interps)} interpreters "
       f"({', '.join(interps)}) x {len(ALL_PROGRAMS)} programs "
       f"x 2 streaming modes")
+print(f"layout-aware matrix: {len(aware)} interpreters "
+      f"({', '.join(aware) or 'none'}) additionally sweep the corpus "
+      f"LayoutApply-transformed (tests/test_layoutapply.py)")
 PY
 
 COV_ARGS=()

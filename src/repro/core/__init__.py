@@ -3,7 +3,7 @@
 #: Build stamp folded into on-disk plan-cache keys and entry headers
 #: (repro.core.plancache): bump alongside behavior changes that should
 #: invalidate persisted plans without a schema change.
-__version__ = "0.8.0"
+__version__ = "0.9.0"
 
 from .codegen_jax import Generated
 from .codegen_pallas import PallasGenerated, generate_pallas, plan_pallas
@@ -17,9 +17,12 @@ from .dataflow import build_dataflow
 from .interpreters import (InterpreterSpec, PlanUnsupported, execute_plan,
                            get_interpreter, register_interpreter,
                            registered_interpreters, unregister_interpreter)
+from .layoutapply import (APPLY_MODES, HANDLED_HINTS, LayoutApplyResult,
+                          apply_layout, render_apply, resolve_apply_mode)
 from .plan import (PLAN_FEATURES, SCHEMA_VERSION, CallPlan, KernelPlan,
-                   LayoutHint, PallasUnsupported, PlanSerializationError,
-                   fn_key, register_step_builder, unregister_step_builder)
+                   LanePass, LayoutHint, PallasUnsupported,
+                   PlanSerializationError, VecLoadPlan, fn_key,
+                   register_step_builder, unregister_step_builder)
 from .plancache import PlanCache, program_plan_key
 from .plancheck import (Diagnostic, PlanCheckError, PlanCheckWarning,
                         check_plan, has_errors, pad_to_lane,
@@ -32,17 +35,20 @@ from .rules import Extent, KernelRule, Program, axiom, goal, kernel
 from .terms import Term, parse_term, unify_term
 
 __all__ = [
-    "ACCESS_CLASSES", "AccessSite",
-    "BACKENDS", "CallPlan", "Diagnostic", "Generated", "InterpreterSpec",
-    "KernelPlan", "LayoutHint",
+    "ACCESS_CLASSES", "APPLY_MODES", "AccessSite",
+    "BACKENDS", "CallPlan", "Diagnostic", "Generated", "HANDLED_HINTS",
+    "InterpreterSpec",
+    "KernelPlan", "LanePass", "LayoutApplyResult", "LayoutHint",
     "PallasGenerated", "PallasUnsupported", "PlanCache", "PlanCheckError",
     "PlanCheckWarning", "PlanSerializationError", "PlanUnsupported",
     "PLAN_FEATURES",
-    "SCHEMA_VERSION", "VecReport", "attach_layout_hints",
+    "SCHEMA_VERSION", "VecLoadPlan", "VecReport", "apply_layout",
+    "attach_layout_hints",
     "auto_vec_reject", "check_plan", "clear_compile_cache",
     "compile_cache_size", "execute_plan", "get_interpreter", "has_errors",
     "pad_to_lane", "register_interpreter", "registered_interpreters",
-    "render_vec", "scan_plan", "sizes_from_arrays",
+    "render_apply", "render_vec", "resolve_apply_mode", "scan_plan",
+    "sizes_from_arrays",
     "unregister_interpreter", "vmem_bytes",
     "vmem_report",
     "compile_program", "fn_key", "generate_pallas",

@@ -65,6 +65,8 @@ from .dataflow import build_dataflow
 from .fusion import fuse_inest_dag
 from .infer import infer
 from .interpreters import get_interpreter, registered_interpreters
+from .layoutapply import render_apply, resolve_apply_mode
+from .layoutapply import apply_layout as run_layout_pass
 from .plan import KernelPlan
 from .plan import fn_key as _fn_key
 from .plancheck import (PlanCheckError, PlanCheckWarning, check_plan,
@@ -232,7 +234,7 @@ def _run_plancheck(kplan: KernelPlan, mode: str, *, dtype, double_buffer,
 def _emit_plan(kplan: KernelPlan, plan: Optional[StoragePlan], *,
                interpreter, dtype, interpret, double_buffer,
                use_cache=True, check="warn",
-               dim_sizes=None) -> PallasGenerated:
+               dim_sizes=None, apply_mode="off") -> PallasGenerated:
     """Build (or fetch) the named registered interpreter for a finished
     kernel plan.
 
@@ -245,8 +247,25 @@ def _emit_plan(kplan: KernelPlan, plan: Optional[StoragePlan], *,
     interpreters executing the same plan never collide.  Static
     analysis (``check``, a resolved ``check_plans`` mode) runs at build
     time, covering both the fresh-plan and disk-restored paths; a
-    plan-cache hit is a plan that already passed."""
+    plan-cache hit is a plan that already passed.
+
+    ``apply_mode`` (a resolved ``apply_layout`` mode) runs the
+    LayoutApply pass (:mod:`repro.core.layoutapply`) over the plan
+    first — only for layout-aware interpreters, and only when not
+    ``"off"``.  The transformed plan's ``applied_layout`` record makes
+    its :meth:`~KernelPlan.cache_key` distinct, so transformed and
+    untransformed builds never share a plan-cache entry; the original
+    plan is kept on the artifact (``.base_plan``) so the on-disk cache
+    always persists the *untransformed* form (the pass re-runs per
+    compilation, keeping cached plans mode-agnostic)."""
     spec = get_interpreter(interpreter)
+    base_plan = kplan
+    layout_result = None
+    if apply_mode != "off" and spec.layout_aware:
+        layout_result = run_layout_pass(
+            kplan, mode=apply_mode,
+            sizes=dict(dim_sizes) if dim_sizes else None)
+        kplan = layout_result.plan
     pkey = (interpreter, kplan.cache_key(), jnp.dtype(dtype).name,
             bool(interpret) and "interpret" in spec.flags,
             bool(double_buffer) and "double_buffer" in spec.flags)
@@ -269,6 +288,8 @@ def _emit_plan(kplan: KernelPlan, plan: Optional[StoragePlan], *,
     fn = execute_plan(kplan, interpreter=interpreter, dtype=dtype,
                       interpret=interpret, double_buffer=double_buffer)
     gen = PallasGenerated(kplan, fn, plan, interpreter=interpreter)
+    gen.base_plan = base_plan
+    gen.layout_result = layout_result
     if use_cache:
         _PLAN_CACHE[pkey] = gen
         while len(_PLAN_CACHE) > _PLAN_CACHE_CAP:
@@ -278,7 +299,7 @@ def _emit_plan(kplan: KernelPlan, plan: Optional[StoragePlan], *,
 
 def _emit_pallas(plan, idag, *, interpreter, dtype, interpret,
                  double_buffer, use_cache=True, check="warn",
-                 dim_sizes=None) -> PallasGenerated:
+                 dim_sizes=None, apply_mode="off") -> PallasGenerated:
     """Plan, then interpret — through the plan-level cache.
 
     The planner runs unconditionally (it is cheap and raises
@@ -287,7 +308,8 @@ def _emit_pallas(plan, idag, *, interpreter, dtype, interpret,
     kplan = plan_pallas(plan, idag)
     return _emit_plan(kplan, plan, interpreter=interpreter, dtype=dtype,
                       interpret=interpret, double_buffer=double_buffer,
-                      use_cache=use_cache, check=check, dim_sizes=dim_sizes)
+                      use_cache=use_cache, check=check, dim_sizes=dim_sizes,
+                      apply_mode=apply_mode)
 
 
 def _load_plan_from_disk(program: Program, backend: str,
@@ -327,7 +349,8 @@ def _store_plan_to_disk(program: Program, kplan: KernelPlan,
 
 
 def _pallas_auto_probe(plan, idag, *, dtype, interpret, double_buffer,
-                       use_cache=True, check="warn", dim_sizes=None):
+                       use_cache=True, check="warn", dim_sizes=None,
+                       apply_mode="off"):
     """The single auto-routing probe shared by :func:`compile_program`
     and :func:`explain`: build the Pallas execution if the plan is
     viable, return None (fall back to JAX) if it is not, the planner
@@ -360,7 +383,7 @@ def _pallas_auto_probe(plan, idag, *, dtype, interpret, double_buffer,
         return _emit_plan(kplan, plan, interpreter="pallas", dtype=dtype,
                           interpret=interpret, double_buffer=double_buffer,
                           use_cache=use_cache, check=check,
-                          dim_sizes=dim_sizes)
+                          dim_sizes=dim_sizes, apply_mode=apply_mode)
     except PlanCheckError:
         return None
 
@@ -391,6 +414,7 @@ def compile_program(
     check_plans: Optional[str] = None,
     dim_sizes=None,
     vec_report: bool = False,
+    apply_layout: Optional[str] = None,
 ) -> Union[Generated, PallasGenerated]:
     """Compile ``program`` through the HFAV pipeline onto a backend.
 
@@ -431,7 +455,20 @@ def compile_program(
     (:func:`repro.core.vecscan.scan_plan`, concrete when ``dim_sizes``
     is given) to the returned artifact's ``.vec_report`` — plan-backed
     backends only; the legacy JAX emitter has no kernel plan to
-    analyze."""
+    analyze.
+
+    ``apply_layout`` (``"off"``/``"auto"``/``"force"``; ``None``
+    defers to ``REPRO_APPLY_LAYOUT``, defaulting to ``"off"``) gates
+    the LayoutApply transformation pass
+    (:mod:`repro.core.layoutapply`): when the target interpreter is
+    layout-aware, VecScan's serialized hints are realized on the plan
+    before it builds — ``"auto"`` keeps the transform only when the
+    re-run analyzer's predicted redundant-load ratio drops, ``"force"``
+    applies every handled hint kind (including the non-bit-exact
+    ones).  The resolved mode participates in the compile cache key,
+    and the plan-level cache distinguishes the plans themselves
+    (``applied_layout`` is structural), so modes never share entries;
+    the on-disk plan cache always stores the untransformed plan."""
     if backend in ("auto", "jax"):
         spec = None
     else:
@@ -443,18 +480,22 @@ def compile_program(
                 f"registered interpreter: {registered_interpreters()}"
             ) from None
     check = resolve_check_mode(check_plans)
+    apply_mode = resolve_apply_mode(apply_layout)
     if plan_cache_dir is None:
         plan_cache_dir = os.environ.get(PLAN_CACHE_DIR_ENV) or None
     sizes_key = tuple(sorted(dim_sizes.items())) if dim_sizes else None
     # flags an interpreter does not honor are normalized out of the key
     # (a pure-JAX interpreter compiles identically either way); for the
     # legacy "jax" emitter only double_buffer is moot, matching the
-    # pre-registry key shape exactly
+    # pre-registry key shape exactly — and apply_layout normalizes to
+    # "off" for layout-oblivious backends, where the pass never runs
     key = (program_signature(program), backend, jnp.dtype(dtype).name,
            bool(interpret) and (spec is None or "interpret" in spec.flags),
            bool(double_buffer) and backend != "jax"
            and (spec is None or "double_buffer" in spec.flags),
-           sizes_key)
+           sizes_key,
+           apply_mode if spec is not None and spec.layout_aware
+           else "off")
     if use_cache:
         hit = _CACHE.get(key)
         if hit is not None:
@@ -462,8 +503,12 @@ def compile_program(
                                                          PallasGenerated):
                 # the program compiled before this call named a cache
                 # dir: back-fill the L2 so the next process runs warm
-                _store_plan_to_disk(program, hit.kernel_plan,
-                                    plan_cache_dir, only_if_missing=True)
+                # (always the untransformed plan — LayoutApply re-runs
+                # per compilation, so cached plans stay mode-agnostic)
+                _store_plan_to_disk(
+                    program,
+                    getattr(hit, "base_plan", None) or hit.kernel_plan,
+                    plan_cache_dir, only_if_missing=True)
             return _attach_vec_report(hit, vec_report, dim_sizes, dtype)
     if plan_cache_dir is not None and backend != "jax":
         # disk-restored artifacts carry no StoragePlan, so they live
@@ -483,7 +528,7 @@ def compile_program(
                              dtype=dtype, interpret=interpret,
                              double_buffer=double_buffer,
                              use_cache=use_cache, check=check,
-                             dim_sizes=dim_sizes)
+                             dim_sizes=dim_sizes, apply_mode=apply_mode)
             if use_cache:
                 _CACHE[dkey] = gen
             return _attach_vec_report(gen, vec_report, dim_sizes, dtype)
@@ -494,16 +539,18 @@ def compile_program(
         gen = _pallas_auto_probe(plan, idag, dtype=dtype, interpret=interpret,
                                  double_buffer=double_buffer,
                                  use_cache=use_cache, check=check,
-                                 dim_sizes=dim_sizes)
+                                 dim_sizes=dim_sizes, apply_mode=apply_mode)
         if gen is None:
             gen = generate(plan, idag)
     else:
         gen = _emit_pallas(plan, idag, interpreter=backend, dtype=dtype,
                            interpret=interpret, double_buffer=double_buffer,
                            use_cache=use_cache, check=check,
-                           dim_sizes=dim_sizes)
+                           dim_sizes=dim_sizes, apply_mode=apply_mode)
     if plan_cache_dir is not None and isinstance(gen, PallasGenerated):
-        _store_plan_to_disk(program, gen.kernel_plan, plan_cache_dir)
+        _store_plan_to_disk(
+            program, getattr(gen, "base_plan", None) or gen.kernel_plan,
+            plan_cache_dir)
     if use_cache:
         _CACHE[key] = gen
         if key[4] and isinstance(gen, Generated):
@@ -515,7 +562,7 @@ def compile_program(
 
 def explain(program: Program, *, dtype=jnp.float32, interpret: bool = True,
             double_buffer: bool = False, verbose: bool = False,
-            dim_sizes=None) -> str:
+            dim_sizes=None, apply_layout: Optional[str] = None) -> str:
     """Human-readable transformation report (the paper's debugging output).
 
     The keyword flags mirror :func:`compile_program` and feed the same
@@ -535,7 +582,12 @@ def explain(program: Program, *, dtype=jnp.float32, interpret: bool = True,
     the vectorization analysis
     (:func:`repro.core.vecscan.scan_plan`: access-class counts,
     redundant-load ratio, window reuse distances, PV diagnostics and
-    layout hints)."""
+    layout hints) — followed by the LayoutApply report
+    (:func:`repro.core.layoutapply.apply_layout` run in the resolved
+    ``apply_layout`` mode, same contract as
+    :func:`compile_program`): which hints the pass applied, which it
+    skipped and why, which stay advisory, and the predicted
+    redundant-load ratio before and after."""
     idag, plan = _build_plan(program)
     schedule = plan.schedule
     dag = schedule.dag
@@ -573,6 +625,12 @@ def explain(program: Program, *, dtype=jnp.float32, interpret: bool = True,
                              sizes=dict(dim_sizes) if dim_sizes else None,
                              dtype_bytes=itemsize)
             lines.extend(vrep.render())
+            lines.append("--- layout apply ---")
+            mode = resolve_apply_mode(apply_layout)
+            lres = run_layout_pass(
+                gen.kernel_plan, mode=mode,
+                sizes=dict(dim_sizes) if dim_sizes else None)
+            lines.extend(render_apply(lres, mode))
         else:
             lines.append("(auto picked the JAX backend: no stencil plan)")
     return "\n".join(lines)

@@ -26,6 +26,20 @@ and the shared host half
 (:func:`repro.core.interpreters.execute_plan`) assembles them with the
 identical trim/seat rules.
 
+This is also the repo's first **layout-aware** interpreter
+(``InterpreterSpec.layout_aware=True``): it executes the constructs the
+LayoutApply pass (:mod:`repro.core.layoutapply`) writes when realizing
+VecScan's hints — carried-vector slots (``CallPlan.vloads``: each
+``vec:`` register slot is realized as one clamped widened load per
+*distinct* slot the steps read, so the analyzer's predicted load-count
+drop lands directly, and an input window every access of which was
+absorbed stops being carried or streamed at all), physically
+left-padded windows (``align_pad``: the streamed row
+seats at the pad column and every access shifts with it), and
+device-side lane pre-folds for row-kept reductions
+(``OutputPlan.lane_block``: each partial row folds to one lane-wide
+chunk before the host's cross-lane reduce).
+
 ``interpret`` and ``double_buffer`` are accepted and ignored (there is
 no kernel to interpret and no DMA to stage); the registry spec declares
 an empty flag set so the engine normalizes both out of its cache keys.
@@ -38,6 +52,7 @@ from jax import lax
 from .interpreters import (InterpreterSpec, register_interpreter,
                            require_hazard_free, require_linked_fns)
 from .plan import PLAN_FEATURES, CallPlan, WindowPlan
+from .runtime import lane_reduce
 
 
 def _mod(pos, stages: int):
@@ -74,10 +89,12 @@ def build_call(call: CallPlan, sizes: tuple[int, ...], dtype,
     arr_ins = [i for i in call.inputs if not i.scalar]
     row_ins = [i for i in arr_ins if not i.plane]
     plane_ins = [i for i in arr_ins if i.plane]
-    roll_wins = [WindowPlan(f"in_{i.name}", i.stages, i.i_lo, i.i_hi)
+    roll_wins = [WindowPlan(f"in_{i.name}", i.stages, i.i_lo, i.i_hi,
+                            align_pad=i.align_pad)
                  for i in row_ins] + [w for w in call.windows if not w.plane]
     plane_wins = [w for w in call.windows if w.plane]
-    bwidth = {w.name: ni + (w.i_hi - w.i_lo) for w in roll_wins + plane_wins}
+    bwidth = {w.name: ni + (w.i_hi - w.i_lo) + w.align_pad
+              for w in roll_wins + plane_wins}
     win_h = {w.name: nj + (w.j_hi - w.j_lo) for w in plane_wins}
     acc_w = {a.name: ni + a.w_off for a in call.accs}
     ref_idx = {ispec.name: k for k, ispec in enumerate(call.inputs)}
@@ -87,16 +104,48 @@ def build_call(call: CallPlan, sizes: tuple[int, ...], dtype,
     roll_of = {w.name: w for w in roll_wins}
     acc_of = {a.name: a for a in call.accs}
     pwin_of = {w.name: w for w in plane_wins}
+    vload_of = {v.name: v for v in call.vloads}
+
+    # Carried-vector realization: each ``vec:`` register slot k holds
+    # the widened load from the source row k grid steps behind the
+    # newest — on this backend that row is re-sliced from the source
+    # array directly (clamped, exactly as streaming would have fetched
+    # it), one load per *distinct* slot the steps actually read.  XLA's
+    # while-loop carries make a literal rotating register file slower
+    # than the loads it saves (every shift materializes a new carried
+    # buffer), while clamped dynamic slices of a loop-invariant operand
+    # fuse cleanly — so the reuse shows up as the load-count drop the
+    # analyzer predicts (``len(slots) <= reads``) with zero carried
+    # state.  Values can differ from a literal register file only
+    # during warm-up (registers there hold priming zeros; the clamped
+    # re-slice yields edge rows), and warm-up rows never survive
+    # output assembly.
+    vec_slots = {v.name: sorted({v.j_off - rd.j_off
+                                 for s in call.steps for rd in s.reads
+                                 if rd.src == f"vec:{v.name}"})
+                 for v in call.vloads}
+    direct_srcs = {rd.src for s in call.steps for rd in s.reads}
+    # an input window (row or plane) every access of which was
+    # absorbed by vec registers carries no readable state: drop it —
+    # and its streaming — from the loop entirely
+    dead_srcs = {f"in_{i.name}" for i in arr_ins
+                 if f"in_{i.name}" not in direct_srcs
+                 and any(v.src == f"in_{i.name}" for v in call.vloads)}
+    roll_wins = [w for w in roll_wins if w.name not in dead_srcs]
+    roll_of = {w.name: w for w in roll_wins}
+    live_plane_ins = [i for i in plane_ins
+                      if f"in_{i.name}" not in dead_srcs]
 
     def _row_pos(ispec, x):
         """Source row index of ``ispec`` for canonical position ``x``
         (clamped: edge rows repeat during warm-up/drain)."""
         return jnp.clip(x + ispec.lead - ispec.j_lo, 0, in_h[ispec.name] - 1)
 
-    def _outer_src(ispec, pos):
+    def _outer_src(ispec, pos, p_off=None):
         """Source indices for the input's own outer dims at canonical
-        outer positions ``pos`` (plane dim runs ``p_lead`` ahead; all
-        clamped so warm-up/drain tiles fetch edge planes)."""
+        outer positions ``pos`` (plane dim runs ``p_lead`` ahead — or
+        at an explicit ``p_off`` for vec-register loads; all clamped so
+        warm-up/drain tiles fetch edge planes)."""
         a_out = ispec.n_outer
         ilos = ispec.outer_los or (0,) * a_out
         ihis = ispec.outer_his or (0,) * a_out
@@ -105,7 +154,7 @@ def build_call(call: CallPlan, sizes: tuple[int, ...], dtype,
             n_planes = outer_sizes[d] + ihis[li] - ilos[li]
             p = pos[d]
             if ispec.plane and d == n_out - 1:
-                p = p + ispec.p_lead
+                p = p + (ispec.p_lead if p_off is None else p_off)
             idxs.append(jnp.clip(p - ilos[li], 0, n_planes - 1))
         return idxs
 
@@ -114,9 +163,10 @@ def build_call(call: CallPlan, sizes: tuple[int, ...], dtype,
         for w in roll_wins:
             st0[("win", w.name)] = jnp.zeros((w.stages, bwidth[w.name]),
                                              dtype)
-        for i in plane_ins:
+        for i in live_plane_ins:
             st0[("plane", i.name)] = jnp.zeros(
-                (i.p_stages, in_h[i.name], in_w[i.name]), dtype)
+                (i.p_stages, in_h[i.name], in_w[i.name] + i.align_pad),
+                dtype)
         for w in plane_wins:
             st0[("pwin", w.name)] = jnp.zeros(
                 (w.p_stages, win_h[w.name], bwidth[w.name]), dtype)
@@ -128,7 +178,7 @@ def build_call(call: CallPlan, sizes: tuple[int, ...], dtype,
                 wa = acc_w[out.acc]
                 shape = (*gsz[:a.n_kept], wa) if a.n_kept else (1, wa)
             else:
-                shape = (*gsz, steps_j, ni)
+                shape = (*gsz, steps_j, out.lane_block or ni)
             st0[("out", oi)] = jnp.zeros(shape, dtype)
 
         def body(lin, st):
@@ -153,7 +203,11 @@ def build_call(call: CallPlan, sizes: tuple[int, ...], dtype,
                     first, jnp.full_like(cur, a.init), cur)
 
             # 1. stream one new row per array input into its window
+            # (inputs whose window was dropped as dead skip the stream
+            # entirely — their rows reach the compute as vec registers)
             for ispec in arr_ins:
+                if f"in_{ispec.name}" in dead_srcs:
+                    continue
                 src = args[ref_idx[ispec.name]]
                 a_out = ispec.n_outer
                 starts = tuple(_outer_src(ispec, opos)) \
@@ -167,12 +221,51 @@ def build_call(call: CallPlan, sizes: tuple[int, ...], dtype,
                                 ispec.p_stages)
                     st[("plane", ispec.name)] = lax.dynamic_update_slice(
                         st[("plane", ispec.name)], row[None, None, :],
-                        (slot, _row_pos(ispec, x), 0))
+                        (slot, _row_pos(ispec, x), ispec.align_pad))
                 else:
                     st[("win", f"in_{ispec.name}")] = \
                         lax.dynamic_update_slice(
                             st[("win", f"in_{ispec.name}")], row[None, :],
-                            (_mod(x + ispec.lead, ispec.stages), 0))
+                            (_mod(x + ispec.lead, ispec.stages),
+                             ispec.align_pad))
+
+            # 1b. realize carried vectors (slot k = the source row k
+            # grid steps behind the newest — see the ``vec_slots``
+            # comment for why re-slicing the source beats a literal
+            # rotating register file here): the slots' rows are
+            # contiguous in the source, so every register fills from
+            # ONE clamped blocked load; warm-up/drain steps clamp the
+            # block as a whole instead of per-row, which again only
+            # perturbs rows output assembly trims
+            vec_vals = {}
+            for v in call.vloads:
+                slots = vec_slots[v.name]
+                if not slots:
+                    continue
+                ispec = ispec_of[v.src[3:]]
+                src = args[ref_idx[ispec.name]]
+                a_out = ispec.n_outer
+                wv = ni + v.w_off
+                m1 = slots[-1]
+                h = m1 - slots[0] + 1
+                outer = tuple(_outer_src(ispec, opos, v.p_off))
+                if h <= in_h[ispec.name]:
+                    r0 = jnp.clip(x - m1 + v.j_off - ispec.j_lo, 0,
+                                  in_h[ispec.name] - h)
+                    block = lax.dynamic_slice(
+                        src, outer + (r0, v.col0 - ispec.i_lo),
+                        (1,) * a_out + (h, wv)).reshape(h, wv)
+                    for k in slots:
+                        vec_vals[(v.name, k)] = block[m1 - k]
+                else:
+                    # degenerate grid shorter than the register file:
+                    # clamp each slot's row on its own
+                    for k in slots:
+                        r_idx = jnp.clip(x - k + v.j_off - ispec.j_lo,
+                                         0, in_h[ispec.name] - 1)
+                        vec_vals[(v.name, k)] = lax.dynamic_slice(
+                            src, outer + (r_idx, v.col0 - ispec.i_lo),
+                            (1,) * (a_out + 1) + (wv,)).reshape(wv)
 
             # 2. fused steps, in dataflow order, at their leads
             local: dict[str, jnp.ndarray] = {}
@@ -189,6 +282,15 @@ def build_call(call: CallPlan, sizes: tuple[int, ...], dtype,
                         ins.append(lrow[rd.col0:rd.col0 + w])
                     elif rd.src.startswith("scalar:"):
                         ins.append(args[ref_idx[rd.src[7:]]][0, 0])
+                    elif rd.src.startswith("vec:"):
+                        # carried-vector register read: static register
+                        # slot (how many steps ago the value was
+                        # loaded) and static column re-basing inside
+                        # the wide load
+                        v = vload_of[rd.src[4:]]
+                        slot = v.j_off - rd.j_off
+                        c0 = rd.col0 - v.col0
+                        ins.append(vec_vals[(v.name, slot)][c0:c0 + w])
                     elif rd.src.startswith("in_") and \
                             ispec_of.get(rd.src[3:]) is not None and \
                             ispec_of[rd.src[3:]].plane:
@@ -201,7 +303,8 @@ def build_call(call: CallPlan, sizes: tuple[int, ...], dtype,
                                          in_h[ispec.name] - 1)
                         ins.append(lax.dynamic_slice(
                             st[("plane", ispec.name)],
-                            (slot, r_idx, rd.col0 - ispec.i_lo),
+                            (slot, r_idx,
+                             rd.col0 - ispec.i_lo + ispec.align_pad),
                             (1, 1, w)).reshape(w))
                     elif rd.src in pwin_of:
                         # producer plane-window read: older planes
@@ -213,14 +316,15 @@ def build_call(call: CallPlan, sizes: tuple[int, ...], dtype,
                                          win_h[pw.name] - 1)
                         ins.append(lax.dynamic_slice(
                             st[("pwin", pw.name)],
-                            (slot, r_idx, rd.col0 - pw.i_lo),
+                            (slot, r_idx,
+                             rd.col0 - pw.i_lo + pw.align_pad),
                             (1, 1, w)).reshape(w))
                     else:
                         b = roll_of[rd.src]
                         ins.append(lax.dynamic_slice(
                             st[("win", b.name)],
                             (_mod(x + rd.j_off, b.stages),
-                             rd.col0 - b.i_lo),
+                             rd.col0 - b.i_lo + b.align_pad),
                             (1, w)).reshape(w))
                 vals = call.fns[step.fn_idx](*ins)
                 if step.acc is not None:
@@ -250,7 +354,8 @@ def build_call(call: CallPlan, sizes: tuple[int, ...], dtype,
                             old = st[("pwin", pw.name)]
                             seated = lax.dynamic_update_slice(
                                 old, val[None, None, :].astype(dtype),
-                                (slot, r_idx, step.out_col0 - pw.i_lo))
+                                (slot, r_idx,
+                                 step.out_col0 - pw.i_lo + pw.align_pad))
                             inside = (r_idx >= 0) & (r_idx < win_h[pw.name])
                             st[("pwin", pw.name)] = jnp.where(
                                 inside, seated, old)
@@ -260,17 +365,34 @@ def build_call(call: CallPlan, sizes: tuple[int, ...], dtype,
                                 st[("win", b.name)],
                                 val[None, :].astype(dtype),
                                 (_mod(x + step.lead, b.stages),
-                                 step.out_col0 - b.i_lo))
+                                 step.out_col0 - b.i_lo + b.align_pad))
                         else:  # 3. one output row for this grid step
                             oi = int(wtgt)
-                            out_row = jnp.full(
-                                (ni,), call.outputs[oi].fill, dtype)
+                            ospec = call.outputs[oi]
+                            out_row = jnp.full((ni,), ospec.fill, dtype)
                             out_row = lax.dynamic_update_slice(
                                 out_row, val.astype(dtype),
                                 (step.out_col0,))
+                            if ospec.lane_block:
+                                # device pre-fold: identity-pad the row
+                                # to whole lane blocks and fold them
+                                # down to one (the host lane-reduces
+                                # the remaining block per row)
+                                lb = ospec.lane_block
+                                chunks = -(-ni // lb)
+                                padrow = jnp.full((chunks * lb,),
+                                                  ospec.fill, dtype)
+                                padrow = lax.dynamic_update_slice(
+                                    padrow, out_row, (0,))
+                                out_row = lane_reduce(
+                                    call.fns[ospec.reduce_idx],
+                                    padrow.reshape(chunks, lb),
+                                    ospec.reduce_init)
+                            wrow = out_row.shape[0]
                             st[("out", oi)] = lax.dynamic_update_slice(
                                 st[("out", oi)],
-                                out_row.reshape((1,) * (n_out + 1) + (ni,)),
+                                out_row.reshape(
+                                    (1,) * (n_out + 1) + (wrow,)),
                                 tuple(outer_ids) + (jid, 0))
 
             # 3b. dump accumulators into their revisited output blocks
@@ -304,5 +426,8 @@ register_interpreter(InterpreterSpec(
     capabilities=PLAN_FEATURES - frozenset({"strided_reads"}),
     flags=frozenset(),
     description="pure-JAX plan interpreter (lax.fori_loop over the "
-                "linearized grid; loop-carried windows/accumulators)",
+                "linearized grid; loop-carried windows/accumulators); "
+                "executes LayoutApply's carried-vector / align_pad / "
+                "lane_block constructs",
+    layout_aware=True,
 ))

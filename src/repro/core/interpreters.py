@@ -69,10 +69,12 @@ class InterpreterSpec:
     ``flags`` names the execution flags it actually honors (subset of
     ``{"interpret", "double_buffer"}``) so the engine can normalize
     un-honored flags out of its cache keys.  ``layout_aware`` declares
-    that ``build_call`` consults the plan's advisory
-    :attr:`~repro.core.plan.KernelPlan.layout_hints` section
-    (:mod:`repro.core.vecscan`); layout-oblivious interpreters — all
-    built-ins today — execute hinted plans unchanged."""
+    that ``build_call`` executes the constructs the LayoutApply pass
+    (:mod:`repro.core.layoutapply`) writes when it realizes the plan's
+    advisory :attr:`~repro.core.plan.KernelPlan.layout_hints`
+    (carried-vector slots, ``align_pad``, ``lane_block``); the engine
+    only runs the pass for layout-aware interpreters, and
+    layout-oblivious ones execute hinted plans unchanged."""
 
     name: str
     build_call: Callable = field(compare=False)
@@ -185,6 +187,29 @@ def require_hazard_free(call: CallPlan) -> None:
         return
     windows = {w.name: w for w in call.windows}
     inputs = {f"in_{i.name}": i for i in call.inputs if not i.scalar}
+    # carried-vector loads are window reads too: the fresh load each
+    # grid step must hit a live slot (``vec:`` register reads
+    # themselves are slot-bounded by KernelPlan.validate)
+    for v in call.vloads:
+        ispec = inputs.get(v.src)
+        if ispec is None:
+            continue  # validate() rejects non-input vload sources
+        if not ispec.plane:
+            if not (ispec.lead - ispec.stages < v.j_off <= ispec.lead):
+                raise ValueError(
+                    f"call {call.name}: vload {v.name} reads row "
+                    f"j{v.j_off:+d} of {v.src}; the mod-slot arithmetic "
+                    f"aliases it outside "
+                    f"(j{ispec.lead - ispec.stages:+d}, "
+                    f"j{ispec.lead:+d}] (PlanCheck PC002/PC005)")
+        elif not (ispec.p_lead - ispec.p_stages
+                  < v.p_off <= ispec.p_lead):
+            raise ValueError(
+                f"call {call.name}: vload {v.name} reads plane "
+                f"p{v.p_off:+d} of {v.src}; the mod-slot arithmetic "
+                f"aliases it outside "
+                f"(p{ispec.p_lead - ispec.p_stages:+d}, "
+                f"p{ispec.p_lead:+d}] (PlanCheck PC002/PC005)")
     produced_lead: dict[str, int] = {}
     local_seen: set[str] = set()
     for step in call.steps:
@@ -232,6 +257,26 @@ def require_hazard_free(call: CallPlan) -> None:
 # assembly (the plan's trim/seat rules) — identical for every
 # interpreter because every build_call honors the same output contract.
 # ---------------------------------------------------------------------------
+
+def _lane_permute(arr, p, inverse: bool = False):
+    """Apply one size-specialized :class:`~repro.core.plan.LanePass`
+    along the last axis: de-interleave ``old col c -> (c % stride) *
+    (width // stride) + c // stride`` (``inverse=True`` undoes it).
+    The lane width is asserted at runtime — the permutation was
+    specialized to it by the LayoutApply pass."""
+    if arr.shape[-1] != p.width:
+        raise ValueError(
+            f"lane pass on {p.array!r}: array lane width "
+            f"{arr.shape[-1]} != the size-specialized pass width "
+            f"{p.width}")
+    lead = arr.shape[:-1]
+    m = p.width // p.stride
+    if inverse:
+        return arr.reshape(*lead, p.stride, m).swapaxes(-1, -2) \
+                  .reshape(*lead, p.width)
+    return arr.reshape(*lead, m, p.stride).swapaxes(-1, -2) \
+              .reshape(*lead, p.width)
+
 
 def _run_host(call: CallPlan, hs, env: dict) -> None:
     vals = call.fns[hs.fn_idx](*[env[n] for n in hs.reads])
@@ -358,6 +403,9 @@ def execute_plan(kplan: KernelPlan, *, interpreter: str = "pallas",
         env: dict[str, jnp.ndarray] = {
             name: arrays[name] for name in input_names
         }
+        for p in kplan.pre_passes:
+            env[p.array] = _lane_permute(jnp.asarray(env[p.array], dtype),
+                                         p)
         for cp in kplan.calls:
             for hs in cp.host_pre:
                 _run_host(cp, hs, env)
@@ -379,6 +427,8 @@ def execute_plan(kplan: KernelPlan, *, interpreter: str = "pallas",
                                               n_outs, dtype)
             for hs in cp.host_post:
                 _run_host(cp, hs, env)
+        for p in kplan.post_passes:
+            env[p.array] = _lane_permute(env[p.array], p, inverse=True)
         return {store: env[var] for store, var in kplan.goal_outputs}
 
     return fn

@@ -58,7 +58,14 @@ from typing import Callable, Optional, Union
 #: the golden corpus must be regenerated (scripts/warm_cache.py).
 #: v2: ``ReadPlan.i_stride`` and the advisory ``KernelPlan.layout_hints``
 #: section (:class:`LayoutHint`, written by ``repro.core.vecscan``).
-SCHEMA_VERSION = 2
+#: v3: the layout-transformation constructs written by
+#: ``repro.core.layoutapply`` — carried-vector slots
+#: (:class:`VecLoadPlan`, ``CallPlan.vloads``), physical left padding
+#: (``InputPlan.align_pad``/``WindowPlan.align_pad``), blocked
+#: accumulator lanes (``OutputPlan.lane_block``), host-side lane-dim
+#: layout passes (:class:`LanePass`, ``KernelPlan.pre_passes``/
+#: ``post_passes``) and the ``KernelPlan.applied_layout`` record.
+SCHEMA_VERSION = 3
 
 
 class PallasUnsupported(Exception):
@@ -305,7 +312,14 @@ class InputPlan:
     of whole planes rotated across outer tiles of the plane dim (the
     grid's last outer dim), the streamed row landing in the newest plane
     ``p_lead`` tiles ahead, while older planes stay resident for
-    ``u[k-1]``-style reads."""
+    ``u[k-1]``-style reads.
+
+    ``align_pad`` left-pads the resident window physically: the
+    streamed row lands at column ``align_pad`` instead of 0 and every
+    read's physical origin shifts by the same amount, so the layout
+    pass (:mod:`repro.core.layoutapply`, ``realign_origin``) can gift a
+    row group a lane-aligned anchor load without changing what is
+    read."""
 
     name: str
     stages: int = 1
@@ -320,6 +334,7 @@ class InputPlan:
     p_lead: int = 0  # plane-dim stream lead (tiles ahead)
     outer_los: tuple[int, ...] = ()  # per-outer-dim array origins
     outer_his: tuple[int, ...] = ()
+    align_pad: int = 0  # physical left pad of the resident window
 
     @property
     def plane(self) -> bool:
@@ -338,7 +353,8 @@ class InputPlan:
                    int(d["i_hi"]), bool(d["scalar"]), int(d["n_outer"]),
                    int(d["p_stages"]), int(d["p_lead"]),
                    tuple(int(x) for x in d["outer_los"]),
-                   tuple(int(x) for x in d["outer_his"]))
+                   tuple(int(x) for x in d["outer_his"]),
+                   int(d.get("align_pad", 0)))
 
 
 @dataclass(frozen=True)
@@ -354,7 +370,12 @@ class WindowPlan:
     plane dim; the producer runs ``p_lead`` tiles ahead and writes into
     the newest plane slot (mod-``p_stages``), rows addressed absolutely
     — serves same-nest ``v[k-1][j][i]``-style reads (the *producer
-    plane window*, the outer-dim analogue of the rolling row window)."""
+    plane window*, the outer-dim analogue of the rolling row window).
+
+    ``align_pad`` left-pads the window physically (writes land at
+    column ``align_pad`` plus their logical origin, reads shift the
+    same way) so the layout pass can align a hot row group — see
+    :class:`InputPlan`."""
 
     name: str
     stages: int
@@ -364,6 +385,7 @@ class WindowPlan:
     p_lead: int = 0  # producer's plane-dim software-pipeline lead
     j_lo: int = 0
     j_hi: int = 0  # plane rows = Nj + (j_hi - j_lo) (plane mode only)
+    align_pad: int = 0  # physical left pad of the resident window
 
     @property
     def plane(self) -> bool:
@@ -379,7 +401,8 @@ class WindowPlan:
         """Rebuild from :meth:`to_dict` output."""
         return cls(str(d["name"]), int(d["stages"]), int(d["i_lo"]),
                    int(d["i_hi"]), int(d["p_stages"]), int(d["p_lead"]),
-                   int(d["j_lo"]), int(d["j_hi"]))
+                   int(d["j_lo"]), int(d["j_hi"]),
+                   int(d.get("align_pad", 0)))
 
 
 @dataclass(frozen=True)
@@ -454,6 +477,47 @@ class ReadPlan:
 
 
 @dataclass(frozen=True)
+class VecLoadPlan:
+    """One carried-vector slot: a single per-grid-step load whose value
+    is retained and reused across adjacent outputs (the in-register
+    shuffle-reuse construct of arxiv 2103.08825, realized by the
+    ``shift_reuse`` rewrite in :mod:`repro.core.layoutapply`).
+
+    Each grid step loads columns ``[col0, col0 + Ni + w_off)`` of row
+    ``j_off`` (plane ``p_off``) of the streamed source ``src``
+    (``in_<name>`` form) into slot 0 of a ``(carry + 1)``-deep vector
+    stack named ``name``; older slots hold the loads of the previous
+    ``carry`` grid steps.  A step read with ``src == "vec:<name>"``
+    resolves against this stack instead of the source window: the slot
+    is ``j_off - read.j_off`` (static — the value loaded that many
+    steps ago is exactly the row that many positions behind) and the
+    column sub-span is the read's ``[col0, col0 + Ni + w_off)``
+    re-based against the vload's ``col0``.  The rewrite is bit-exact:
+    every ``vec:`` read returns the same elements the original
+    window read produced, with one load per step instead of one per
+    read."""
+
+    name: str
+    src: str
+    j_off: int
+    p_off: int
+    col0: int
+    w_off: int
+    carry: int
+
+    def to_dict(self) -> dict:
+        """JSON-native form (schema :data:`SCHEMA_VERSION`)."""
+        return _jsonable(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "VecLoadPlan":
+        """Rebuild from :meth:`to_dict` output."""
+        return cls(str(d["name"]), str(d["src"]), int(d["j_off"]),
+                   int(d["p_off"]), int(d["col0"]), int(d["w_off"]),
+                   int(d["carry"]))
+
+
+@dataclass(frozen=True)
 class StepPlan:
     """One fused kernel at its software-pipeline lead.
 
@@ -517,7 +581,15 @@ class OutputPlan:
     dim; ``outer_lead`` the producing step's per-outer-dim pipeline lead
     (a plane-window producer running tiles ahead writes its output that
     many blocks early); ``fill`` pads device rows outside the computed
-    span (the combine identity for ``acc_rows``)."""
+    span (the combine identity for ``acc_rows``).
+
+    ``lane_block`` (``acc_rows`` outputs only) asks the interpreter to
+    pre-fold each grid step's identity-padded partial row into
+    ``lane_block``-wide chunks on the device before emitting it, so the
+    host's cross-lane fold runs over ``lane_block`` elements per row
+    instead of the full padded width — the ``acc_lane_block`` rewrite
+    of :mod:`repro.core.layoutapply`.  Pre-folding reassociates the
+    reduction, so the pass only sets it under ``mode="force"``."""
 
     name: str
     kind: str  # 'external' | 'full' | 'acc' | 'acc_rows'
@@ -534,6 +606,7 @@ class OutputPlan:
     n_kept: int = 0
     reduce_idx: Optional[int] = None  # lane reduction, into CallPlan.fns
     reduce_init: float = 0.0
+    lane_block: int = 0  # device pre-fold width for acc_rows (0 = off)
 
     def to_dict(self) -> dict:
         """JSON-native form (schema :data:`SCHEMA_VERSION`)."""
@@ -551,7 +624,8 @@ class OutputPlan:
                    None if d["acc"] is None else str(d["acc"]),
                    float(d["fill"]), int(d["n_kept"]),
                    None if d["reduce_idx"] is None else int(d["reduce_idx"]),
-                   float(d["reduce_init"]))
+                   float(d["reduce_init"]),
+                   int(d.get("lane_block", 0)))
 
 
 @dataclass(frozen=True)
@@ -577,11 +651,43 @@ class HostStepPlan:
 
 
 @dataclass(frozen=True)
+class LanePass:
+    """One host-side lane-dim data-layout pass (the DLT transformation
+    of arxiv 2103.09235, emitted by the ``layout_transform`` rewrite in
+    :mod:`repro.core.layoutapply`).
+
+    A pre-pass de-interleaves the named environment ``array`` along its
+    last (lane) dimension: old column ``c`` moves to
+    ``(c % stride) * (width // stride) + c // stride``, turning every
+    ``stride``-strided read into a unit-stride read of the transformed
+    layout.  A post-pass applies the inverse permutation to re-seat an
+    output.  ``width`` is the *concrete* lane extent the rewrite was
+    specialized for — the executor asserts the runtime array matches it
+    (layout transforms are size-specialized; a mismatched size is a
+    hard error, never a silent miscompile)."""
+
+    array: str
+    stride: int
+    width: int
+
+    def to_dict(self) -> dict:
+        """JSON-native form (schema :data:`SCHEMA_VERSION`)."""
+        return _jsonable(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "LanePass":
+        """Rebuild from :meth:`to_dict` output."""
+        return cls(str(d["array"]), int(d["stride"]), int(d["width"]))
+
+
+@dataclass(frozen=True)
 class CallPlan:
     """One top-level fused nest: host prologue steps, at most one
     stencil call (``grid`` empty for host-only nests), host epilogue
     steps.  ``grid`` lists outer dims first and the row dim last; the
-    vector dim is folded across lanes.  ``fns`` is the call's kernel
+    vector dim is folded across lanes.  ``vloads`` holds the call's
+    carried-vector slots (:class:`VecLoadPlan`) that ``vec:<name>``
+    step reads resolve against.  ``fns`` is the call's kernel
     function table — excluded from structural equality (steps reference
     it by index; :meth:`KernelPlan.cache_key` re-keys it via
     :func:`fn_key`)."""
@@ -596,6 +702,7 @@ class CallPlan:
     outputs: tuple[OutputPlan, ...] = ()
     host_pre: tuple[HostStepPlan, ...] = ()
     host_post: tuple[HostStepPlan, ...] = ()
+    vloads: tuple[VecLoadPlan, ...] = ()
     fns: tuple[Callable, ...] = field(default=(), compare=False, repr=False)
 
     @property
@@ -655,6 +762,8 @@ class CallPlan:
             host_pre=tuple(HostStepPlan.from_dict(h) for h in d["host_pre"]),
             host_post=tuple(HostStepPlan.from_dict(h)
                             for h in d["host_post"]),
+            vloads=tuple(VecLoadPlan.from_dict(v)
+                         for v in d.get("vloads", ())),
             fns=tuple(fn_from_spec(s) for s in d.get("fns", ())),
         )
 
@@ -727,6 +836,9 @@ PLAN_FEATURES = frozenset({
     "lane_reduce",              # host-side lane fold of folded accs
     "local_rows",               # same-step local row values
     "strided_reads",            # non-unit lane-dim read strides
+    "vec_loads",                # carried-vector slots (vec: reads)
+    "align_pad",                # physically left-padded windows
+    "lane_block",               # device pre-fold of acc_rows lanes
 })
 
 
@@ -742,7 +854,15 @@ class KernelPlan:
     analyzer (:mod:`repro.core.vecscan`) — like the per-call fn tables
     it is excluded from structural equality (and therefore from
     :meth:`cache_key`), but unlike them it serializes by value and
-    survives the on-disk plan cache."""
+    survives the on-disk plan cache.
+
+    ``pre_passes``/``post_passes`` are host-side :class:`LanePass`
+    layout changes run around the device calls, and ``applied_layout``
+    records which hint rewrites the layout pass
+    (:mod:`repro.core.layoutapply`) realized as
+    ``(kind, call, target)`` triples.  All three participate in
+    structural equality — a transformed plan never shares a
+    :meth:`cache_key` with its untransformed original."""
 
     program: str
     loop_order: tuple[str, ...]
@@ -751,6 +871,9 @@ class KernelPlan:
     goal_outputs: tuple[tuple[str, str], ...]
     calls: tuple[CallPlan, ...]
     layout_hints: tuple = field(default=(), compare=False)
+    pre_passes: tuple[LanePass, ...] = ()
+    post_passes: tuple[LanePass, ...] = ()
+    applied_layout: tuple[tuple[str, str, str], ...] = ()
 
     def features(self) -> frozenset:
         """The subset of :data:`PLAN_FEATURES` this plan demands of an
@@ -790,6 +913,13 @@ class KernelPlan:
                 tags.add("local_rows")
             if any(rd.i_stride != 1 for s in c.steps for rd in s.reads):
                 tags.add("strided_reads")
+            if c.vloads:
+                tags.add("vec_loads")
+            if any(i.align_pad for i in c.inputs if not i.scalar) or \
+                    any(w.align_pad for w in c.windows):
+                tags.add("align_pad")
+            if any(o.lane_block for o in c.outputs):
+                tags.add("lane_block")
         return frozenset(tags)
 
     def validate(self) -> "KernelPlan":
@@ -811,6 +941,38 @@ class KernelPlan:
             names = {f"in_{i.name}" for i in call.inputs if not i.scalar}
             names |= {f"scalar:{i.name}" for i in call.inputs if i.scalar}
             names |= {w.name for w in call.windows}
+            for i in call.inputs:
+                if not i.scalar and i.align_pad < 0:
+                    raise ValueError(
+                        f"call {call.name}: input {i.name} has negative "
+                        f"align_pad {i.align_pad}")
+            for w in call.windows:
+                if w.align_pad < 0:
+                    raise ValueError(
+                        f"call {call.name}: window {w.name} has negative "
+                        f"align_pad {w.align_pad}")
+            ins_by_src = {f"in_{i.name}": i for i in call.inputs
+                          if not i.scalar}
+            vloads = {f"vec:{v.name}": v for v in call.vloads}
+            for v in call.vloads:
+                ispec = ins_by_src.get(v.src)
+                if ispec is None:
+                    raise ValueError(
+                        f"call {call.name}: vload {v.name} reads "
+                        f"{v.src!r}, which is not a streamed input")
+                if v.carry < 0:
+                    raise ValueError(
+                        f"call {call.name}: vload {v.name} has negative "
+                        f"carry {v.carry}")
+                if v.col0 < ispec.i_lo or v.col0 + v.w_off > ispec.i_hi:
+                    raise ValueError(
+                        f"call {call.name}: vload {v.name} spans "
+                        f"[{v.col0}, Ni{v.w_off:+d}) outside the resident "
+                        f"window [{ispec.i_lo}, Ni{ispec.i_hi:+d}) of "
+                        f"{v.src}")
+                if v.p_off and not ispec.plane:
+                    require_plane_window_read(v.src, v.p_off)
+            names |= set(vloads)
             accs = {a.name for a in call.accs}
             for a in call.accs:
                 require_kept_prefix_len(a.name, a.n_kept, call.n_outer)
@@ -832,7 +994,30 @@ class KernelPlan:
                         raise ValueError(
                             f"call {call.name}: step {s.op} reads "
                             f"unresolved source {rd.src!r}")
-                    if rd.p_off and rd.src not in plane_srcs:
+                    vl = vloads.get(rd.src)
+                    if vl is not None:
+                        slot = vl.j_off - rd.j_off
+                        if rd.p_off != vl.p_off:
+                            raise ValueError(
+                                f"call {call.name}: step {s.op} reads "
+                                f"{rd.src} at plane {rd.p_off:+d} but the "
+                                f"vload carries plane {vl.p_off:+d}")
+                        if not (0 <= slot <= vl.carry):
+                            raise ValueError(
+                                f"call {call.name}: step {s.op} reads "
+                                f"{rd.src} at row {rd.j_off:+d}, "
+                                f"{slot} step(s) behind the vload's "
+                                f"{vl.j_off:+d} — outside its carry depth "
+                                f"{vl.carry}")
+                        if rd.col0 < vl.col0 or \
+                                rd.col0 + rd.w_off > vl.col0 + vl.w_off:
+                            raise ValueError(
+                                f"call {call.name}: step {s.op} reads "
+                                f"{rd.src} cols [{rd.col0}, "
+                                f"Ni{rd.w_off:+d}) outside the vload span "
+                                f"[{vl.col0}, Ni{vl.w_off:+d})")
+                    if rd.p_off and rd.src not in plane_srcs \
+                            and vl is None:
                         require_plane_window_read(rd.src, rd.p_off)
                     if rd.i_stride < 1:
                         raise ValueError(
@@ -853,6 +1038,16 @@ class KernelPlan:
             for out in call.outputs:
                 if out.kind in ("external", "full", "acc_rows"):
                     require_output_row_span(out.name, out.i_lo, out.i_hi)
+                if out.lane_block < 0:
+                    raise ValueError(
+                        f"call {call.name}: output {out.name} has "
+                        f"negative lane_block {out.lane_block}")
+                if out.lane_block and (out.kind != "acc_rows"
+                                       or out.reduce_idx is None):
+                    raise ValueError(
+                        f"call {call.name}: output {out.name} sets "
+                        f"lane_block but is not a lane-reduced acc_rows "
+                        f"output")
                 if out.acc is not None and out.acc not in accs:
                     raise ValueError(
                         f"call {call.name}: output {out.name} names "
@@ -885,6 +1080,8 @@ class KernelPlan:
                 if i.plane:
                     desc += (f" plane_window={i.p_stages}"
                              f" p_lead={i.p_lead}")
+                if i.align_pad:
+                    desc += f" align_pad={i.align_pad}"
                 lines.append(desc)
             for w in call.windows:
                 if w.plane:
@@ -893,11 +1090,20 @@ class KernelPlan:
                         f"p_lead={w.p_lead} rows[{w.j_lo},{w.j_hi:+d}] "
                         f"cols[{w.i_lo},{w.i_hi:+d}]")
                 else:
-                    lines.append(f"    window {w.name}: {w.stages} rows "
-                                 f"cols[{w.i_lo},{w.i_hi:+d}]")
+                    lines.append(
+                        f"    window {w.name}: {w.stages} rows "
+                        f"cols[{w.i_lo},{w.i_hi:+d}]"
+                        + (f" align_pad={w.align_pad}"
+                           if w.align_pad else ""))
             for a in call.accs:
                 lines.append(f"    acc {a.name}: width Ni{a.w_off:+d} "
                              f"init={a.init} n_kept={a.n_kept}")
+            for v in call.vloads:
+                lines.append(
+                    f"    vload {v.name}: {v.src}"
+                    f"[{('p%+d ' % v.p_off) if v.p_off else ''}"
+                    f"j{v.j_off:+d}] cols[{v.col0},Ni{v.w_off:+d}] "
+                    f"carry={v.carry}")
             for s in call.steps:
                 rd = ", ".join(
                     f"{r.src}[{('p%+d ' % r.p_off) if r.p_off else ''}"
@@ -914,11 +1120,23 @@ class KernelPlan:
                     f"    out {o.name}: {o.kind} lead={o.lead} "
                     f"rows[{o.j_lo},{o.j_hi:+d}]"
                     + (f" outer_lead={o.outer_lead}"
-                       if any(o.outer_lead) else ""))
+                       if any(o.outer_lead) else "")
+                    + (f" lane_block={o.lane_block}"
+                       if o.lane_block else ""))
             for hs in call.host_post:
                 lines.append(f"    host post {hs.op}: "
                              f"{', '.join(hs.reads)} -> "
                              f"{', '.join(hs.writes)}")
+        for p in self.pre_passes:
+            lines.append(f"  pre-pass {p.array}: de-interleave stride "
+                         f"{p.stride} @ width {p.width}")
+        for p in self.post_passes:
+            lines.append(f"  post-pass {p.array}: re-interleave stride "
+                         f"{p.stride} @ width {p.width}")
+        if self.applied_layout:
+            lines.append("  applied layout: " + ", ".join(
+                f"{kind}({call}:{tgt})"
+                for kind, call, tgt in self.applied_layout))
         lines.append("  goals: " + ", ".join(
             f"{store}<-{var}" for store, var in self.goal_outputs))
         return "\n".join(lines)
@@ -957,6 +1175,13 @@ class KernelPlan:
             calls=tuple(CallPlan.from_dict(c) for c in d["calls"]),
             layout_hints=tuple(LayoutHint.from_dict(h)
                                for h in d.get("layout_hints", ())),
+            pre_passes=tuple(LanePass.from_dict(p)
+                             for p in d.get("pre_passes", ())),
+            post_passes=tuple(LanePass.from_dict(p)
+                              for p in d.get("post_passes", ())),
+            applied_layout=tuple(
+                (str(k), str(c), str(t))
+                for k, c, t in d.get("applied_layout", ())),
         )
 
     def to_json(self) -> str:

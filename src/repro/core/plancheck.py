@@ -69,7 +69,7 @@ contract).  CLI: ``scripts/plan_lint.py``.
 from __future__ import annotations
 
 import os
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Optional, Sequence
 
 from .plan import CallPlan, KernelPlan, StepPlan, WindowPlan
@@ -303,6 +303,29 @@ def _row_requirements(call: CallPlan, windows: dict, writers: dict):
 # Analysis (a) + (b): dependence/race + window-bounds/halo coverage
 # ---------------------------------------------------------------------------
 
+def _desugar_call(call: CallPlan) -> CallPlan:
+    """Rewrite LayoutApply's carried-vector reads back to the window
+    reads they replaced.
+
+    A ``vec:`` register read keeps every coordinate of the original
+    read it stands in for (the pass only swaps its ``src``), and the
+    carried value at its slot *is* the source row at those
+    coordinates, so mapping ``src`` back through the call's vload
+    table reproduces the pre-transform call exactly.  The analyses
+    then prove the transformed plan on the same footing as the
+    original — residency, halo coverage, and the dead-store scan all
+    see the true source accesses."""
+    if not call.vloads:
+        return call
+    src_of = {f"vec:{v.name}": v.src for v in call.vloads}
+    steps = tuple(
+        replace(s, reads=tuple(
+            replace(rd, src=src_of[rd.src]) if rd.src in src_of else rd
+            for rd in s.reads))
+        for s in call.steps)
+    return replace(call, steps=steps, vloads=())
+
+
 def check_call(call: CallPlan, *, nest: Optional[str] = None
                ) -> list[Diagnostic]:
     """Run the size-independent analyses over one stencil call:
@@ -310,11 +333,15 @@ def check_call(call: CallPlan, *, nest: Optional[str] = None
     coverage (PC002), lead/lag availability (PC005), output trim
     bounds (PC006), and the dead-store/unused-accumulator scans local
     to the call (PC004/PC007).  Cross-call dead-store detection and
-    the VMEM budget live in :func:`check_plan`."""
+    the VMEM budget live in :func:`check_plan`.  Carried-vector reads
+    are desugared back to their source window reads first
+    (:func:`_desugar_call`), so transformed plans are proven on the
+    same footing as their untransformed originals."""
     nest = call.name if nest is None else nest
     diags: list[Diagnostic] = []
     if not call.has_grid:
         return diags
+    call = _desugar_call(call)
     windows = {w.name: w for w in call.windows}
     inputs = {f"in_{i.name}": i for i in call.inputs if not i.scalar}
     writers = _writers(call)
@@ -742,7 +769,7 @@ def _call_vmem(call: CallPlan, nj: int, ni: int, dtype_bytes: int,
     report: dict = {}
     arr_ins = [i for i in call.inputs if not i.scalar]
     for i in arr_ins:
-        in_w = ni + i.i_hi - i.i_lo
+        in_w = ni + i.i_hi - i.i_lo + i.align_pad
         if i.plane:
             in_h = nj + i.j_hi - i.j_lo
             report[f"in_{i.name}"] = \
@@ -751,7 +778,7 @@ def _call_vmem(call: CallPlan, nj: int, ni: int, dtype_bytes: int,
             report[f"in_{i.name}"] = \
                 i.stages * _pad_to_lane(in_w) * ib
     for w in call.windows:
-        width = _pad_to_lane(ni + w.i_hi - w.i_lo)
+        width = _pad_to_lane(ni + w.i_hi - w.i_lo + w.align_pad)
         if w.plane:
             report[w.name] = w.p_stages * (nj + w.j_hi - w.j_lo) \
                 * width * ib
@@ -759,6 +786,9 @@ def _call_vmem(call: CallPlan, nj: int, ni: int, dtype_bytes: int,
             report[w.name] = w.stages * width * ib
     for a in call.accs:
         report[a.name] = _pad_to_lane(ni + a.w_off) * ib
+    for v in call.vloads:
+        report[f"vec:{v.name}"] = \
+            (v.carry + 1) * _pad_to_lane(ni + v.w_off) * ib
     if double_buffer and arr_ins:
         for i in arr_ins:
             report[f"dma_{i.name}"] = 2 * (ni + i.i_hi - i.i_lo) * ib

@@ -24,6 +24,10 @@ broadcast  a scalar operand splatted across lanes
 gather     per-lane indexed access: the span is not statically
            contained in the resident buffer, so the interpreter
            must clamp/select per lane
+register   a ``vec:`` carried-vector read (LayoutApply's
+           ``shift_reuse`` rewrite): served from the in-register
+           carry stack, no memory access at all — the matching
+           vload is costed once per grid step instead
 unknown    the source does not resolve — emitted as a PV000 error
            (golden plans must never produce one)
 ========== ==========================================================
@@ -84,9 +88,11 @@ from typing import Optional
 from .plan import CallPlan, KernelPlan, LayoutHint
 from .plancheck import LANE, Diagnostic, pad_to_lane
 
-#: Access-pattern classes, in decreasing order of vector efficiency.
-ACCESS_CLASSES = ("aligned", "shifted", "strided", "broadcast",
-                  "gather", "unknown")
+#: Access-pattern classes, in decreasing order of vector efficiency
+#: (``register`` costs nothing: it is LayoutApply's carried-vector
+#: read, served without touching memory).
+ACCESS_CLASSES = ("register", "aligned", "shifted", "strided",
+                  "broadcast", "gather", "unknown")
 
 #: PV004 fires when a resident buffer's lane occupancy drops below this.
 PV004_OCCUPANCY = 0.5
@@ -273,19 +279,27 @@ def _writer_steps(call: CallPlan) -> dict:
     return table
 
 
-def _resolve_read(call, rd, inputs, windows, writers):
+def _resolve_read(call, rd, inputs, windows, writers, vloads=None):
     """``(origin, resident hi offset, forced class or None)`` for one
     read site — physical coordinates per the interpreter's buffer
     layouts (inputs/windows store ``[i_lo, Ni + i_hi)`` at physical
-    ``0``; locals are raw rows addressed from ``0``)."""
+    ``align_pad``; locals are raw rows addressed from ``0``;
+    ``vec:`` reads resolve inside their carried vector)."""
     if rd.src.startswith("scalar:"):
         return 0, 0, "broadcast"
+    if rd.src.startswith("vec:"):
+        v = (vloads or {}).get(rd.src)
+        if v is None:
+            return 0, 0, "unknown"
+        return rd.col0 - v.col0, v.w_off, "register"
     ispec = inputs.get(rd.src)
     if ispec is not None:
-        return rd.col0 - ispec.i_lo, ispec.i_hi - ispec.i_lo, None
+        return (rd.col0 - ispec.i_lo + ispec.align_pad,
+                ispec.i_hi - ispec.i_lo + ispec.align_pad, None)
     w = windows.get(rd.src)
     if w is not None:
-        return rd.col0 - w.i_lo, w.i_hi - w.i_lo, None
+        return (rd.col0 - w.i_lo + w.align_pad,
+                w.i_hi - w.i_lo + w.align_pad, None)
     if rd.src.startswith("local:"):
         prods = writers.get(rd.src, ())
         hi = max((call.steps[pi].out_w_off for pi in prods), default=0)
@@ -352,17 +366,38 @@ def scan_plan(kplan: KernelPlan, *, sizes: Optional[dict] = None,
                 report_ni = ni
         inputs = {f"in_{i.name}": i for i in call.inputs if not i.scalar}
         windows = {w.name: w for w in call.windows}
+        vloads = {f"vec:{v.name}": v for v in call.vloads}
         writers = _writer_steps(call)
         # reach-back per source, for the window reuse-distance model
         min_j: dict = {}
         min_p: dict = {}
+
+        # carried-vector loads: one widened load per grid step each
+        # (their ``vec:`` consumers below are free register reads)
+        for v in call.vloads:
+            ispec = inputs.get(v.src)
+            pad = ispec.align_pad if ispec is not None else 0
+            i_lo = ispec.i_lo if ispec is not None else 0
+            res_hi = (ispec.i_hi - i_lo + pad) if ispec is not None else 0
+            origin = v.col0 - i_lo + pad
+            cls = _classify(origin, res_hi, v.w_off, 1)
+            sites.append(AccessSite(
+                call.name, f"vload:{v.name}", "read", v.src, v.j_off,
+                v.p_off, origin, v.w_off, 1, cls))
+            tot_loaded[0] += 1.0
+            tot_loaded[1] += v.w_off
+            tot_unique[0] += 1.0
+            tot_unique[1] += v.w_off
+            if v.src in inputs:
+                min_j[v.src] = min(min_j.get(v.src, v.j_off), v.j_off)
+                min_p[v.src] = min(min_p.get(v.src, v.p_off), v.p_off)
 
         for step in call.steps:
             groups: dict = {}
             loaded = [0.0, 0.0]
             for rd in step.reads:
                 origin, res_hi, forced = _resolve_read(
-                    call, rd, inputs, windows, writers)
+                    call, rd, inputs, windows, writers, vloads)
                 cls = forced or _classify(origin, res_hi, rd.w_off,
                                           rd.i_stride)
                 sites.append(AccessSite(
@@ -373,7 +408,7 @@ def scan_plan(kplan: KernelPlan, *, sizes: Optional[dict] = None,
                          f"step {step.op} reads an unresolvable "
                          f"source: access pattern unclassifiable")
                     continue
-                if cls == "broadcast":
+                if cls in ("broadcast", "register"):
                     continue
                 if rd.src in inputs or rd.src in windows:
                     min_j[rd.src] = min(min_j.get(rd.src, rd.j_off),
@@ -510,26 +545,30 @@ def scan_plan(kplan: KernelPlan, *, sizes: Optional[dict] = None,
 
         # lane occupancy (needs the concrete vector-dim size)
         if ni is not None:
-            def occ(width, rows, var):
+            def occ(width, rows, var, pad=0):
                 nonlocal occ_useful, occ_padded
-                useful, padded = width * rows, pad_to_lane(width) * rows
+                alloc = pad_to_lane(width + pad)
+                useful, padded = width * rows, alloc * rows
                 occ_useful += useful
                 occ_padded += padded
                 if padded and useful / padded < PV004_OCCUPANCY:
                     emit("PV004", "warning", var, call.name,
                          f"row width {width} occupies "
                          f"{useful / padded:.2f} of its lane-padded "
-                         f"{pad_to_lane(width)} elements: padding "
+                         f"{alloc} elements: padding "
                          f"waste")
             for src, ispec in inputs.items():
                 occ(ni + ispec.i_hi - ispec.i_lo,
                     ispec.p_stages if ispec.plane else ispec.stages,
-                    src)
+                    src, pad=ispec.align_pad)
             for name, w in windows.items():
                 occ(ni + w.i_hi - w.i_lo,
-                    w.p_stages if w.plane else w.stages, name)
+                    w.p_stages if w.plane else w.stages, name,
+                    pad=w.align_pad)
             for a in call.accs:
                 occ(ni + a.w_off, 1, a.name)
+            for v in call.vloads:
+                occ(ni + v.w_off, v.carry + 1, f"vec:{v.name}")
 
     order = {"error": 0, "warning": 1}
     diags.sort(key=lambda d: (order.get(d.severity, 2), d.nest, d.code))

@@ -504,9 +504,12 @@ def execute_plan(kplan: KernelPlan, *, dtype=jnp.float32,
 register_interpreter(InterpreterSpec(
     name="pallas",
     build_call=build_call,
-    # the interpreter issues unit-stride lane slices only: a plan with
-    # non-unit ReadPlan.i_stride must refuse, not miscompile
-    capabilities=PLAN_FEATURES - frozenset({"strided_reads"}),
+    # the interpreter issues unit-stride lane slices only (a plan with
+    # non-unit ReadPlan.i_stride must refuse, not miscompile), and it
+    # does not yet execute LayoutApply's transformed constructs —
+    # carried-vector slots, padded windows, lane-blocked accumulators
+    capabilities=PLAN_FEATURES - frozenset({
+        "strided_reads", "vec_loads", "align_pad", "lane_block"}),
     flags=frozenset({"interpret", "double_buffer"}),
     description="Pallas TPU stencil interpreter (VMEM windows, "
                 "BlockSpec or double-buffered DMA row streaming)",

@@ -19,7 +19,7 @@ import pytest
 
 from _progen import build_chain_program, random_chain, shrink_chain
 from repro.core import compile_program
-from repro.core.interpreters import registered_interpreters
+from repro.core.interpreters import get_interpreter, registered_interpreters
 from repro.core.plancheck import check_plan, has_errors
 from repro.core.unfused import build_unfused
 
@@ -85,7 +85,8 @@ def _chain_disagreement(desc, shape=(9, 14)) -> str:
     fuzzer cross-validates analyzer verdicts against ground-truth
     execution.  With the two built-in interpreters that is at least
     four oracles per chain (unfused, jax emitter, pallas, interp_jax)
-    plus the analyzer."""
+    plus the analyzer, and every layout-aware interpreter runs a fifth
+    leg with the LayoutApply pass forced on."""
     prog = build_chain_program(desc, name=f"fuzz_{desc['seed']}")
     rng = np.random.default_rng(desc["seed"])
     u = jnp.asarray(rng.standard_normal(shape), jnp.float32)
@@ -107,6 +108,14 @@ def _chain_disagreement(desc, shape=(9, 14)) -> str:
             if not np.allclose(got, val, atol=1e-4, rtol=1e-3):
                 return f"{name}-vs-{other}"
         results[name] = got
+        if get_interpreter(name).layout_aware:
+            # one more leg: the same chain through the LayoutApply
+            # pass (force mode applies every handled hint) must agree
+            lgen = compile_program(prog, backend=name, interpret=True,
+                                   use_cache=False, apply_layout="force")
+            lgot = np.asarray(lgen.fn(u=u)["out"])
+            if not np.allclose(lgot, ref, atol=1e-4, rtol=1e-3):
+                return f"{name}+layout-vs-unfused"
     if has_errors(check_plan(kernel_plan)):
         return "plancheck-false-positive"
     return ""

@@ -12,7 +12,7 @@ from repro.core import (KernelPlan, PlanUnsupported, check_plan,
                         execute_plan, registered_interpreters)
 from repro.core.plan import (PLAN_FEATURES, AccPlan, CallPlan, GridDim,
                              HostStepPlan, InputPlan, OutputPlan,
-                             ReadPlan, StepPlan, WindowPlan)
+                             ReadPlan, StepPlan, VecLoadPlan, WindowPlan)
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 GOLDEN_DIR = ROOT / "tests" / "goldens" / "plans"
@@ -79,6 +79,14 @@ FEATURE_PLANS = {
         steps=(StepPlan("dbl", 0,
                         (ReadPlan("in_u", 0, 0, 0, i_stride=2),),
                         ((("out", 0),),), 0),))),
+    "vec_loads": lambda: _plan(_call(
+        vloads=(VecLoadPlan("u", "in_u", 0, 0, 0, 0, 0),),
+        steps=(StepPlan("dbl", 0, (ReadPlan("vec:u", 0, 0, 0),),
+                        ((("out", 0),),), 0),))),
+    "align_pad": lambda: _plan(_call(
+        inputs=(InputPlan("u", align_pad=128),))),
+    "lane_block": lambda: _plan(_call(
+        outputs=(OutputPlan("v", kind="acc_rows", lane_block=128),))),
 }
 
 
