@@ -8,7 +8,25 @@ import jax.numpy as jnp
 import numpy as np
 
 
+#: The statistic every timing helper in this module reports.  One
+#: ``BENCH_<pr>.json`` record mixes legs produced by :func:`time_fn`
+#: and :func:`time_pair`; they must report the *same* statistic or the
+#: legs are not comparable within a record (min-of-samples, as in
+#: ``timeit`` — the least-contaminated sample).
+STATISTIC = "min"
+
+
 def time_fn(fn, *args, warmup: int = 2, iters: int = 5, **kw):
+    """Time ``fn(*args, **kw)`` and return ``(seconds_per_call, out)``.
+
+    Reports the **minimum** over ``iters`` timed calls — the same
+    statistic (:data:`STATISTIC`) as :func:`time_pair`'s min-of-batches,
+    so legs timed by either helper are comparable within one
+    ``BENCH_<pr>.json`` record."""
+    if warmup < 0 or iters < 1:
+        raise ValueError(
+            f"time_fn needs warmup >= 0 and iters >= 1, got "
+            f"warmup={warmup}, iters={iters}")
     for _ in range(warmup):
         out = fn(*args, **kw)
         jax.block_until_ready(out)
@@ -18,7 +36,7 @@ def time_fn(fn, *args, warmup: int = 2, iters: int = 5, **kw):
         out = fn(*args, **kw)
         jax.block_until_ready(out)
         ts.append(time.perf_counter() - t0)
-    return float(np.median(ts)), out
+    return float(min(ts)), out
 
 
 def time_pair(fn_a, fn_b, *args, warmup: int = 2, rounds: int = 20,
@@ -30,9 +48,14 @@ def time_pair(fn_a, fn_b, *args, warmup: int = 2, rounds: int = 20,
     Sequential timing (one ``time_fn`` per leg) lets clock-speed drift
     between the two measurements masquerade as a performance delta;
     interleaving samples both legs under the same machine conditions,
-    and the batch minimum — the least-contaminated sample, as in
-    ``timeit`` — makes the *ratio* trustworthy even when absolute
-    wall-clock is noisy."""
+    and the batch minimum (:data:`STATISTIC`, shared with
+    :func:`time_fn`) — the least-contaminated sample, as in ``timeit``
+    — makes the *ratio* trustworthy even when absolute wall-clock is
+    noisy."""
+    if warmup < 0 or rounds < 1 or iters < 1:
+        raise ValueError(
+            f"time_pair needs warmup >= 0, rounds >= 1 and iters >= 1, "
+            f"got warmup={warmup}, rounds={rounds}, iters={iters}")
     for _ in range(warmup):
         out_a = fn_a(*args, **kw)
         jax.block_until_ready(out_a)

@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # Benchmark trajectory recorder: run the lifted-restriction suite and
-# write BENCH_<pr>.json (per-leg wall time + backend) at the repo root,
-# so every PR leaves a perf baseline the next one can regress against.
+# the PlanServe load test, and write the merged BENCH_<pr>.json (per-leg
+# wall time + backend + serving throughput) at the repo root, so every
+# PR leaves a perf baseline the next one can regress against.
 #
 #   scripts/bench.sh [pr-number]
 #
@@ -17,6 +18,20 @@ FLAGS=(--json)
 if [[ "${BENCH_NO_INTERPRET:-0}" == "1" ]]; then
     FLAGS+=(--no-interpret)
 fi
+LIFTED="$(mktemp)"
+SERVE="$(mktemp)"
+trap 'rm -f "$LIFTED" "$SERVE"' EXIT
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
-    python -m benchmarks.lifted "${FLAGS[@]}" > "BENCH_${PR}.json"
+    python -m benchmarks.lifted "${FLAGS[@]}" > "$LIFTED"
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m benchmarks.serve --json > "$SERVE"
+python - "$LIFTED" "$SERVE" > "BENCH_${PR}.json" <<'PY'
+import json
+import sys
+
+rec = json.load(open(sys.argv[1]))
+rec["serving"] = json.load(open(sys.argv[2]))["serving"]
+json.dump(rec, sys.stdout, indent=1)
+print()
+PY
 echo "wrote BENCH_${PR}.json"

@@ -88,18 +88,19 @@ def _cell(rec, section, name, metric, nd):
 def trend(records, section, metric, nd=1, extra=None):
     """Rows: one per leg, one metric column per record.
 
-    ``extra`` is an optional ``(header, field, nd)`` trailing column
-    filled from the newest record that carries the field."""
+    ``extra`` adds trailing columns filled from the newest record that
+    carries the field: one ``(header, field, nd)`` tuple, or a list of
+    them (the serving table carries p50/p99 beside requests/s)."""
     names = _leg_names(records, section)
     if not names:
         return
+    extras = ([extra] if isinstance(extra, tuple) else list(extra or ()))
     headers = ["leg"] + [label for label, _ in records]
     rows = []
     for name in names:
         row = [name] + [_cell(rec, section, name, metric, nd)
                         for _, rec in records]
-        if extra:
-            xh, field, xnd = extra
+        for _, field, xnd in extras:
             val = None
             for _, rec in reversed(records):
                 leg = {g["name"]: g for g in rec.get(section, ())}.get(name)
@@ -108,8 +109,7 @@ def trend(records, section, metric, nd=1, extra=None):
                     break
             row.append(_fmt(val, xnd))
         rows.append(row)
-    if extra:
-        headers.append(extra[0])
+    headers.extend(xh for xh, _, _ in extras)
     _table(f"{section}: {metric}", rows, headers)
 
 
@@ -141,6 +141,10 @@ def main(argv=None) -> int:
     trend(records, "interpreters", args.metric, nd=1,
           extra=("vec_ratio", "vec_redundant_load_ratio", 2))
     trend(records, "plan_cache", "speedup", nd=1)
+    # serving throughput (PR 10 on): requests/s per leg, with the
+    # newest record's latency percentiles beside the trend
+    trend(records, "serving", "requests_per_s", nd=1,
+          extra=[("p50_ms", "p50_ms", 2), ("p99_ms", "p99_ms", 2)])
     return 0
 
 

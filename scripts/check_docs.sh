@@ -36,6 +36,11 @@
 #      docs/ARCHITECTURE.md "Layout transformation" hint table, and
 #      every table row must name a handled kind — the pass and its
 #      docs cannot drift either way.
+#   9. every backend PlanServe accepts (repro.serve.plans.VMAP_SAFE)
+#      must exist, and every VMAP_SAFE member and registered
+#      interpreter must be classified in the docs/BACKENDS.md "Plan
+#      serving and vmap safety" section — a new interpreter cannot be
+#      registered without an explicit serving-safety call.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -231,6 +236,33 @@ for kind in sorted(hint_rows - set(HANDLED_HINTS)):
         f"names no handled hint kind "
         f"(repro.core.layoutapply.HANDLED_HINTS)")
 
+# ---- 9. PlanServe VMAP_SAFE <-> BACKENDS.md serving classification --------
+# Every backend PlanServe accepts must exist (the legacy jax emitter or
+# a registered interpreter) and be named in the docs' "Plan serving and
+# vmap safety" section; every *registered* interpreter must be
+# classified there too (named as vmap-safe or explicitly not), so a new
+# registration cannot land without a serving-safety call.
+from repro.serve.plans import VMAP_SAFE
+
+vs_start = backends.find("## Plan serving and vmap safety")
+vs_end = backends.find("\n## ", vs_start + 1)
+vs_section = backends[vs_start:vs_end if vs_end != -1 else None]
+if vs_start == -1:
+    failures.append("docs/BACKENDS.md: 'Plan serving and vmap safety' "
+                    "section missing")
+    vs_section = ""
+for name in sorted(VMAP_SAFE - ({"jax"} | registered)):
+    failures.append(
+        f"repro.serve.plans.VMAP_SAFE names {name!r}, which is neither "
+        f"the legacy jax emitter nor a registered interpreter")
+for name in sorted(VMAP_SAFE | registered):
+    if f"`{name}`" not in vs_section:
+        failures.append(
+            f"docs/BACKENDS.md: backend {name!r} is not classified in the "
+            f"'Plan serving and vmap safety' section (every VMAP_SAFE "
+            f"member and every registered interpreter needs a "
+            f"vmap-safety call there)")
+
 if failures:
     print("check_docs: FAIL")
     for f in failures:
@@ -239,5 +271,6 @@ if failures:
 print("check_docs: OK (engine docstrings + docs/*.md code blocks + "
       "PallasUnsupported restriction table + plan-IR docstrings + "
       "PlanCheck diagnostic table + VecScan diagnostic table + "
-      "interpreter-registry table + LayoutApply hint table)")
+      "interpreter-registry table + LayoutApply hint table + "
+      "PlanServe vmap-safety classification)")
 PY

@@ -38,6 +38,12 @@ print(f"interpreter matrix: {len(interps)} interpreters "
 print(f"layout-aware matrix: {len(aware)} interpreters "
       f"({', '.join(aware) or 'none'}) additionally sweep the corpus "
       f"LayoutApply-transformed (tests/test_layoutapply.py)")
+from repro.serve.plans import VMAP_SAFE
+print(f"serving surface: PlanServe buckets/batcher over "
+      f"{len(VMAP_SAFE)} vmap-safe backends "
+      f"({', '.join(sorted(VMAP_SAFE))}) — tests/test_serve.py; "
+      f"multi-process warm start is slow-marked "
+      f"(tests/test_serve_workers.py, tier-1 only)")
 PY
 
 COV_ARGS=()

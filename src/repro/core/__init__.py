@@ -7,7 +7,8 @@ __version__ = "0.9.0"
 
 from .codegen_jax import Generated
 from .codegen_pallas import PallasGenerated, generate_pallas, plan_pallas
-from .engine import (BACKENDS, clear_compile_cache, compile_cache_size,
+from .engine import (BACKENDS, BatchedGenerated, clear_compile_cache,
+                     compile_batched, compile_cache_size,
                      compile_program, explain, pallas_auto_viable,
                      plan_cache_cap, plan_cache_size, program_signature,
                      register_pallas_split_win, set_plan_cache_cap)
@@ -36,7 +37,8 @@ from .terms import Term, parse_term, unify_term
 
 __all__ = [
     "ACCESS_CLASSES", "APPLY_MODES", "AccessSite",
-    "BACKENDS", "CallPlan", "Diagnostic", "Generated", "HANDLED_HINTS",
+    "BACKENDS", "BatchedGenerated", "CallPlan", "Diagnostic", "Generated",
+    "HANDLED_HINTS", "compile_batched",
     "InterpreterSpec",
     "KernelPlan", "LanePass", "LayoutApplyResult", "LayoutHint",
     "PallasGenerated", "PallasUnsupported", "PlanCache", "PlanCheckError",

@@ -56,6 +56,7 @@ import warnings
 from collections import OrderedDict
 from typing import Optional, Union
 
+import jax
 import jax.numpy as jnp
 
 from .codegen_jax import Generated, generate
@@ -558,6 +559,67 @@ def compile_program(
             # the normalized key so neither flag value recompiles
             _CACHE[key[:4] + (False,) + key[5:]] = gen
     return _attach_vec_report(gen, vec_report, dim_sizes, dtype)
+
+
+class BatchedGenerated:
+    """A compiled program vmapped over a leading batch axis.
+
+    Wraps the single-example artifact (``.gen``, a :class:`Generated`
+    or :class:`PallasGenerated` from :func:`compile_program`) with a
+    batched callable: ``fn(arrays)`` takes a dict of input arrays each
+    carrying one extra *leading* batch axis (the same batch width on
+    every input) and returns the per-store output dict with the same
+    leading axis — bit-identical to running ``gen.fn(**example)`` per
+    batch element and stacking (vmap of a deterministic elementwise/
+    stencil computation commutes with per-example execution).  Built by
+    :func:`compile_batched`; the serving engine
+    (:mod:`repro.serve.plans`) executes every micro-batch through one
+    of these."""
+
+    def __init__(self, gen, fn, *, backend: str, jitted: bool):
+        self.gen = gen
+        self.fn = fn
+        self.backend = backend
+        self.jitted = jitted
+
+    def __repr__(self):
+        return (f"BatchedGenerated(backend={self.backend!r}, "
+                f"jitted={self.jitted}, gen={self.gen!r})")
+
+
+def compile_batched(
+    program: Program,
+    backend: str = "auto",
+    *,
+    jit: bool = True,
+    **kwargs,
+) -> BatchedGenerated:
+    """Compile ``program`` and vmap the result over a leading batch axis.
+
+    The single-example compilation goes through :func:`compile_program`
+    (all of its keyword flags — ``dtype``, ``interpret``,
+    ``plan_cache_dir``, ``dim_sizes``, … — pass through unchanged, so
+    the disk plan cache and the in-memory caches behave exactly as for
+    unbatched compiles).  The returned :class:`BatchedGenerated`'s
+    ``fn`` maps a dict of inputs with a shared leading batch axis to
+    the stacked per-store outputs; with ``jit=True`` (the default) the
+    vmapped computation is additionally ``jax.jit``-ed, so each
+    distinct batch shape traces once and replays compiled thereafter —
+    the property the serving engine's shape buckets exist to exploit.
+
+    Every registered plan interpreter and the legacy ``"jax"`` emitter
+    produce traceable executors, so all backends are vmap-safe (pinned
+    by the cross-backend conformance tests; see the vmap note in
+    docs/BACKENDS.md)."""
+    gen = compile_program(program, backend, **kwargs)
+
+    def _one(arrays):
+        return gen.fn(**arrays)
+
+    fn = jax.vmap(_one)
+    if jit:
+        fn = jax.jit(fn)
+    return BatchedGenerated(gen, fn, backend=backend, jitted=jit)
 
 
 def explain(program: Program, *, dtype=jnp.float32, interpret: bool = True,

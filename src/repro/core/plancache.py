@@ -194,7 +194,9 @@ class PlanCache:
         builders not yet registered in this process) keep the file: the
         entry may be perfectly valid for every properly-initialized
         process sharing the directory.  A hit refreshes the entry's
-        LRU recency."""
+        LRU recency; an entry that vanishes *mid-get* (another
+        process's eviction sweep won the race) degrades to a miss, so
+        callers never act on a plan the cache no longer holds."""
         from .plan import SCHEMA_VERSION, PlanSerializationError
         path = self._path(key)
         try:
@@ -218,8 +220,17 @@ class PlanCache:
             return None
         try:
             os.utime(path)  # LRU recency
+        except FileNotFoundError:
+            # lost a race with another process's eviction sweep (the
+            # refresh runs outside the write lock by design — a read
+            # must not serialize against writers): the entry is gone,
+            # so a hit here would report a plan the cache no longer
+            # holds.  Degrade to a miss: the caller re-plans and
+            # re-fills, which is what keeps many serving workers
+            # sharing one directory warm.
+            return None
         except OSError:
-            pass
+            pass  # utime denied but the entry still exists: still a hit
         return kplan
 
     def put(self, key: str, kplan: KernelPlan) -> bool:

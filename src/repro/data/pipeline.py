@@ -39,14 +39,20 @@ class SyntheticTokens:
         base = step * cfg.global_batch + self.host_id * self.local_batch
         for r in range(self.local_batch):
             rng = np.random.default_rng(cfg.seed + base + r)
-            # Zipf-ish marginal over the vocab, cheap and heavy-tailed
-            u = rng.random(cfg.seq_len)
+            # Zipf-ish marginal over the vocab, cheap and heavy-tailed.
+            # Draw one extra position so targets are the next-token
+            # shift of tokens (the LM training contract): the first
+            # seq_len draws are unchanged, so tokens stay bit-identical
+            # across restarts and host shardings.
+            u = rng.random(cfg.seq_len + 1)
             toks = np.minimum(
                 (cfg.vocab * u ** 3).astype(np.int64), cfg.vocab - 1
             )
             rows.append(toks)
-        tokens = np.stack(rows).astype(np.int32)
-        return {"tokens": tokens, "targets": tokens}
+        seq = np.stack(rows).astype(np.int32)
+        # two distinct buffers (the [:-1]/[1:] views overlap in memory):
+        # mutating one batch entry must never corrupt the other
+        return {"tokens": seq[:, :-1].copy(), "targets": seq[:, 1:].copy()}
 
     def __iter__(self):
         step = 0

@@ -39,11 +39,23 @@ def greedy_decode(params, cfg: ArchConfig, prompt, steps: int, max_seq: int,
     """Runnable small-scale driver: sequential decode from a prompt.
     Used by examples/serve_lm.py and the serving integration test."""
     B, S0 = prompt.shape
+    if S0 < 1:
+        raise ValueError(
+            f"greedy_decode needs at least one prompt token per sequence "
+            f"(the first generated token is conditioned on the prompt's "
+            f"last-position logits), got prompt width {S0}")
+    if steps < 0:
+        raise ValueError(f"steps must be >= 0, got {steps}")
+    if S0 + steps - 1 > max_seq:
+        raise ValueError(
+            f"prompt width {S0} + {steps} decode steps needs sequence "
+            f"length {S0 + steps - 1} > max_seq {max_seq}")
+    if steps == 0:
+        return jnp.zeros((B, 0), jnp.int32)
     caches = init_caches(cfg, B, max_seq, cache_dtype=cache_dtype)
     step = make_decode_step(cfg, interpret=interpret)
     lengths = jnp.zeros((B,), jnp.int32)
     tokens = []
-    tok = prompt[:, 0]
     # feed the prompt one token at a time (exercises the decode path)
     for t in range(S0):
         lengths = lengths + 1

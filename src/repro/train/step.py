@@ -29,7 +29,10 @@ def cross_entropy(logits, targets):
 def loss_fn(params, batch, cfg: ArchConfig, *, interpret: bool = True):
     out = forward(params, batch, cfg, mode="train", interpret=interpret)
     logits = out["logits"]
-    loss = cross_entropy(logits[:, :-1], batch["targets"][:, 1:])
+    # targets are already next-token aligned (targets[t] is the gold
+    # label for position t — repro.data.pipeline emits the shift), so
+    # every logit position scores against its own label
+    loss = cross_entropy(logits, batch["targets"])
     loss = loss + AUX_COEF * out["aux"]
     return loss, {"loss": loss, "aux": out["aux"]}
 

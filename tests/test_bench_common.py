@@ -1,0 +1,48 @@
+"""Regression tests for the shared benchmark timing helpers
+(benchmarks/common.py): one statistic across both helpers, and
+diagnosable errors on degenerate iteration counts."""
+import pytest
+
+from benchmarks import common
+
+
+def _one():
+    return 1
+
+
+def test_time_fn_reports_the_minimum(monkeypatch):
+    """Regression (PR 10): time_fn reported the *median* while time_pair
+    reported the batch *minimum*, so legs produced by the two helpers
+    were not comparable within one BENCH_<pr>.json record."""
+    # three timed calls with durations 5ms, 1ms, 10ms
+    ticks = iter([0.0, 0.005, 1.0, 1.001, 2.0, 2.010])
+    monkeypatch.setattr(common.time, "perf_counter", lambda: next(ticks))
+    t, out = common.time_fn(_one, warmup=0, iters=3)
+    assert out == 1
+    assert t == pytest.approx(0.001)  # the min — not the 0.005 median
+    assert common.STATISTIC == "min"
+
+
+def test_time_fn_guards_degenerate_counts():
+    with pytest.raises(ValueError, match="iters"):
+        common.time_fn(_one, iters=0)
+    with pytest.raises(ValueError, match="warmup"):
+        common.time_fn(_one, warmup=-1)
+
+
+def test_time_pair_guards_degenerate_counts():
+    """Regression (PR 10): rounds=0 crashed with ``min() arg is an
+    empty sequence`` and iters=0 with ZeroDivisionError — neither names
+    the bad argument."""
+    with pytest.raises(ValueError, match="rounds"):
+        common.time_pair(_one, _one, rounds=0)
+    with pytest.raises(ValueError, match="iters"):
+        common.time_pair(_one, _one, iters=0)
+    with pytest.raises(ValueError, match="warmup"):
+        common.time_pair(_one, _one, warmup=-1)
+
+
+def test_time_pair_still_times_both_legs():
+    ta, tb, oa, ob = common.time_pair(_one, _one, warmup=0, rounds=2, iters=2)
+    assert ta >= 0.0 and tb >= 0.0
+    assert oa == 1 and ob == 1

@@ -58,6 +58,22 @@ def test_data_determinism_and_host_sharding():
     assert full.max() < 1000 and full.min() >= 0
 
 
+def test_data_targets_are_shifted_and_distinct():
+    """Regression (PR 10): batch() returned the *same* ndarray for
+    "tokens" and "targets" — no next-token shift (the model was trained
+    to predict the input), and mutating one buffer corrupted the other."""
+    cfg = DataCfg(vocab=1000, seq_len=16, global_batch=4)
+    b = SyntheticTokens(cfg).batch(0)
+    assert b["tokens"].shape == b["targets"].shape == (4, 16)
+    assert not np.shares_memory(b["tokens"], b["targets"])
+    # next-token contract: targets[t] is the token at position t+1
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["targets"][:, :-1])
+    assert not np.array_equal(b["tokens"], b["targets"])
+    t00 = int(b["targets"][0, 0])
+    b["tokens"][0, 0] = -1  # writing one buffer must not leak into the other
+    assert int(b["targets"][0, 0]) == t00
+
+
 def test_pack_documents():
     docs = [np.arange(5), np.arange(3), np.arange(9)]
     rows = pack_documents(docs, seq_len=6, eos=99)

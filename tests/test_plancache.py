@@ -121,6 +121,48 @@ def test_lru_eviction_bounds_entries(tmp_path):
     assert cache.get(keys[2]) is not None
 
 
+def test_mid_get_eviction_degrades_to_a_miss(tmp_path, monkeypatch):
+    """Regression (PR 10): the hit-path LRU mtime refresh runs outside
+    the write lock, so another process's eviction sweep can unlink the
+    entry between get's load and its ``os.utime``.  That race must
+    surface as a *miss* (the caller re-plans and re-fills), never as a
+    hit on a plan the cache no longer holds."""
+    prog = laplace5_program()
+    cache = PlanCache(tmp_path)
+    key = program_plan_key(prog)
+    assert cache.put(key, _plan_of(prog))
+    path = tmp_path / f"{key}.json"
+
+    real_utime = os.utime
+
+    def evict_then_touch(p, *a, **kw):
+        pathlib.Path(p).unlink()  # the "other process" wins the race
+        return real_utime(p, *a, **kw)
+
+    monkeypatch.setattr(os, "utime", evict_then_touch)
+    assert cache.get(key) is None
+    monkeypatch.undo()
+    assert not path.exists()
+    # the miss is recoverable: a re-fill makes the entry hit again
+    assert cache.put(key, _plan_of(prog))
+    assert cache.get(key) is not None
+
+
+def test_utime_denied_is_still_a_hit(tmp_path, monkeypatch):
+    """A refresh failure with the entry still present (e.g. EPERM on a
+    read-only share) must stay a hit — only a *vanished* entry misses."""
+    prog = laplace5_program()
+    cache = PlanCache(tmp_path)
+    key = program_plan_key(prog)
+    assert cache.put(key, _plan_of(prog))
+
+    def deny_touch(p, *a, **kw):
+        raise PermissionError("utime denied")
+
+    monkeypatch.setattr(os, "utime", deny_touch)
+    assert cache.get(key) is not None
+
+
 def test_atomic_write_leaves_no_temp_files(tmp_path):
     cache = PlanCache(tmp_path)
     cache.put(program_plan_key(laplace5_program()),

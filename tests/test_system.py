@@ -2,6 +2,7 @@
 pipeline on every worked example, and the serving/training drivers."""
 import jax
 import jax.numpy as jnp
+import pytest
 
 from repro.core import compile_program
 from repro.core.programs import (cosmo_program, hydro1d_program,
@@ -40,3 +41,28 @@ def test_greedy_decode_runs():
     out = greedy_decode(params, cfg, prompts, steps=4, max_seq=16)
     assert out.shape == (2, 4)
     assert bool((out >= 0).all() and (out < cfg.vocab).all())
+
+
+def test_greedy_decode_validates_inputs():
+    """Regression (PR 10): a width-0 prompt used to reach an unbound
+    ``logits`` (NameError) instead of a diagnosable error, and steps=0
+    decoded one token anyway instead of none."""
+    from repro.configs import ARCHS, smoke
+    from repro.models import init_params
+    from repro.serve.engine import greedy_decode
+
+    cfg = smoke(ARCHS["minitron-4b"])
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="prompt"):
+        greedy_decode(params, cfg, jnp.ones((2, 0), jnp.int32),
+                      steps=2, max_seq=16)
+    with pytest.raises(ValueError, match="steps"):
+        greedy_decode(params, cfg, jnp.ones((2, 3), jnp.int32),
+                      steps=-1, max_seq=16)
+    with pytest.raises(ValueError, match="max_seq"):
+        greedy_decode(params, cfg, jnp.ones((2, 8), jnp.int32),
+                      steps=12, max_seq=16)
+    out = greedy_decode(params, cfg, jnp.ones((2, 3), jnp.int32),
+                        steps=0, max_seq=16)
+    assert out.shape == (2, 0)
+    assert out.dtype == jnp.int32
